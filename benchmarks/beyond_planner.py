@@ -1,0 +1,80 @@
+"""Beyond-paper: annealed planner vs the paper's greedy + estimator speed.
+
+(a) AnnealedPlanner refines the greedy fixed point with random JOINT
+    moves (re-batch one stage while re-replicating another) that no
+    single greedy action expresses — targeting the local optima the
+    paper itself admits to in §7.2.
+(b) The paper claims the Estimator simulates "hours worth of real-world
+    traces in hundreds of milliseconds"; we measure simulated-queries/s
+    and the wall time for one hour of 150 qps traffic.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.pipelines import get_motif
+from repro.core.estimator import Estimator
+from repro.core.planner import AnnealedPlanner, Planner
+from repro.workload.generator import gamma_trace
+
+from benchmarks.common import save, table
+
+GRID = (
+    ("social-media", 150, 4.0, 0.2),
+    ("social-media", 200, 4.0, 0.1),
+    ("image-processing", 300, 4.0, 0.12),
+    ("image-processing", 200, 1.0, 0.15),
+    ("video-monitoring", 150, 4.0, 0.2),
+    ("tf-cascade", 300, 2.0, 0.08),
+)
+
+
+def run() -> dict:
+    rows, payload = [], {}
+    for motif, lam, cv, slo in GRID:
+        bound = get_motif(motif)
+        pipe, store = bound.pipeline, bound.profiles
+        sample = gamma_trace(lam, cv, 60, seed=44)
+        g = Planner(pipe, store).plan(sample, slo)
+        if not g.feasible:
+            rows.append([motif, lam, cv, slo, "inf", "-", "-"])
+            continue
+        a = AnnealedPlanner(pipe, store).plan(sample, slo, steps=400,
+                                              t0=0.5)
+        gain = (1 - a.cost_per_hr / g.cost_per_hr) * 100
+        est = Estimator(pipe, store)
+        assert est.simulate(a.config, sample).p99 <= slo
+        payload[f"{motif}|{lam}|{cv}|{slo}"] = {
+            "greedy": g.cost_per_hr, "annealed": a.cost_per_hr,
+            "gain_pct": gain,
+        }
+        rows.append([motif, lam, cv, slo, f"${g.cost_per_hr:.2f}",
+                     f"${a.cost_per_hr:.2f}", f"{gain:+.1f}%"])
+    print(table(rows, ["pipeline", "lam", "cv", "slo", "greedy",
+                       "annealed", "gain"]))
+    gains = [v["gain_pct"] for v in payload.values()]
+    print(f"\nmax gain {max(gains):.1f}% (greedy is already optimal on "
+          f"{sum(1 for x in gains if x < 0.5)}/{len(gains)} points — the "
+          f"paper's termination guarantee holds there)")
+
+    # ---- estimator throughput --------------------------------------------
+    bound = get_motif("social-media")
+    pipe, store = bound.pipeline, bound.profiles
+    plan = Planner(pipe, store).plan(gamma_trace(150, 1.0, 60, seed=1),
+                                     0.2)
+    est = Estimator(pipe, store)
+    hour = gamma_trace(150, 1.0, 3600, seed=2)
+    t0 = time.perf_counter()
+    res = est.simulate(plan.config, hour)
+    dt = time.perf_counter() - t0
+    qps = res.num_queries / dt
+    print(f"\nestimator: 1 h of 150 qps ({res.num_queries} queries, "
+          f"4-stage DAG) simulated in {dt*1e3:.0f} ms = {qps/1e6:.2f}M "
+          f"queries/s (paper: 'hours ... in hundreds of milliseconds')")
+    payload["estimator"] = {"queries": res.num_queries, "seconds": dt,
+                            "queries_per_s": qps}
+    save("beyond_planner", payload)
+    return payload

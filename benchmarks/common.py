@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: artifact output, timing, table printing."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def save(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def table(rows, headers) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)] if rows else \
+        [len(str(h)) for h in headers]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    out = [fmt.format(*headers), fmt.format(*("-" * w for w in widths))]
+    out += [fmt.format(*(str(c) for c in r)) for r in rows]
+    return "\n".join(out)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,78 @@
+"""Figs. 10 & 11 — tuner sensitivity to rate and burstiness changes.
+
+Social Media pipeline. Fig. 10: lambda 150->250 at varying ramp speeds,
+comparing the Tuner against (a) an oracle Planner given the full trace
+and (b) a static Planner-only configuration. Fig. 11: CV 1->4 at fixed
+lambda (the failure mode rate-based detectors cannot see).
+"""
+
+from __future__ import annotations
+
+from repro.configs.pipelines import get_motif
+from repro.core.estimator import Estimator
+from repro.core.planner import Planner
+from repro.core.tuner import Tuner, TunerPlanInfo, run_tuner_offline
+from repro.serving.cluster import LiveClusterSim
+from repro.workload.generator import cv_ramp_trace, gamma_trace, \
+    rate_ramp_trace
+
+from benchmarks.common import save, table
+
+SLO = 0.15
+
+
+def run() -> dict:
+    bound = get_motif("social-media")
+    pipe, store = bound.pipeline, bound.profiles
+    est = Estimator(pipe, store)
+    sample = gamma_trace(150, 1.0, 60, seed=60)
+    plan = Planner(pipe, store).plan(sample, SLO)
+    info = TunerPlanInfo.from_plan(pipe, plan.config, store, sample,
+                                   est.service_time(plan.config))
+    rows, payload = [], {}
+
+    # ---- Fig. 10: rate changes at varying ramp speed --------------------
+    for tau in (10, 30, 60):
+        ramp = rate_ramp_trace(150, 250, 1.0, pre_s=30, ramp_s=tau,
+                               post_s=60, seed=61)
+        sim = LiveClusterSim(pipe, store, plan.config, SLO)
+        tuned = sim.run(ramp, schedule_fn=lambda arr: run_tuner_offline(
+            Tuner(info), arr))
+        static = sim.run(ramp)
+        oracle = Planner(pipe, store).plan(ramp, SLO)  # full-trace oracle
+        o_run = LiveClusterSim(pipe, store, oracle.config, SLO).run(ramp)
+        payload[f"fig10|tau{tau}"] = {
+            "tuner": {"miss": tuned.miss_rate,
+                      "cost": tuned.mean_cost_per_hr()},
+            "static": {"miss": static.miss_rate,
+                       "cost": static.mean_cost_per_hr()},
+            "oracle": {"miss": o_run.miss_rate,
+                       "cost": o_run.mean_cost_per_hr()},
+        }
+        rows.append([f"rate tau={tau}s",
+                     f"{tuned.miss_rate:.4f}/${tuned.mean_cost_per_hr():.2f}",
+                     f"{static.miss_rate:.4f}/${static.mean_cost_per_hr():.2f}",
+                     f"{o_run.miss_rate:.4f}/${o_run.mean_cost_per_hr():.2f}"])
+
+    # ---- Fig. 11: burstiness changes ------------------------------------
+    for cv1 in (2.0, 4.0):
+        ramp = cv_ramp_trace(150, 1.0, cv1, pre_s=30, ramp_s=30, post_s=60,
+                             seed=62)
+        sim = LiveClusterSim(pipe, store, plan.config, SLO)
+        tuned = sim.run(ramp, schedule_fn=lambda arr: run_tuner_offline(
+            Tuner(info), arr))
+        static = sim.run(ramp)
+        payload[f"fig11|cv{cv1}"] = {
+            "tuner": {"miss": tuned.miss_rate,
+                      "cost": tuned.mean_cost_per_hr()},
+            "static": {"miss": static.miss_rate,
+                       "cost": static.mean_cost_per_hr()},
+        }
+        rows.append([f"cv 1->{cv1}",
+                     f"{tuned.miss_rate:.4f}/${tuned.mean_cost_per_hr():.2f}",
+                     f"{static.miss_rate:.4f}/${static.mean_cost_per_hr():.2f}",
+                     "-"])
+    print(table(rows, ["scenario", "Tuner miss/$", "static miss/$",
+                       "oracle miss/$"]))
+    save("fig10_11_tuner_sensitivity", payload)
+    return payload

@@ -1,0 +1,46 @@
+"""Fig. 13 — InferLine across serving frameworks (Clipper vs TFS).
+
+TF Cascade pipeline, SLO 0.15, CV 1.0. The planner runs against each
+frontend's hop-overhead model; both must meet the SLO, with TFS slightly
+costlier due to serialization overhead.
+"""
+
+from __future__ import annotations
+
+from repro.configs.pipelines import get_motif
+from repro.core.estimator import Estimator
+from repro.core.planner import Planner
+from repro.serving.cluster import LiveClusterSim
+from repro.serving.frontends import FRONTENDS
+from repro.workload.generator import gamma_trace
+
+from benchmarks.common import save, table
+
+SLO = 0.15
+
+
+def run() -> dict:
+    bound = get_motif("tf-cascade")
+    pipe, store = bound.pipeline, bound.profiles
+    sample = gamma_trace(150, 1.0, 60, seed=80)
+    held = gamma_trace(150, 1.0, 60, seed=81)
+    rows, payload = [], {}
+    for name, fe in FRONTENDS.items():
+        est = Estimator(pipe, store, rpc_delay_s=fe.hop_delay_s)
+        res = Planner(pipe, store, estimator=est).plan(sample, SLO)
+        run_ = LiveClusterSim(pipe, store, res.config, SLO,
+                              frontend=fe).run(held)
+        payload[name] = {
+            "cost_per_hr": res.cost_per_hr,
+            "attainment": run_.attainment,
+            "est_p99_ms": res.estimated_p99 * 1e3,
+        }
+        rows.append([name, f"${res.cost_per_hr:.2f}",
+                     f"{run_.attainment*100:.2f}%",
+                     f"{res.estimated_p99*1e3:.1f}ms"])
+    print(table(rows, ["framework", "cost", "attainment", "est P99"]))
+    print(f"\nTFS/Clipper cost ratio: "
+          f"{payload['tfs']['cost_per_hr']/payload['clipper']['cost_per_hr']:.2f} "
+          f"(paper: slightly higher for TFS)")
+    save("fig13_frameworks", payload)
+    return payload

@@ -1,0 +1,52 @@
+"""Fig. 3 — example model profiles: throughput & latency vs batch size.
+
+Reproduces the paper's observation triple on the TPU-native menu:
+  * a non-parallelizable preprocess stage sees no batching benefit;
+  * large models benefit strongly from batching on accelerators, at the
+    cost of per-batch latency;
+  * the accelerator/CPU throughput gap spans orders of magnitude.
+"""
+
+from __future__ import annotations
+
+from repro.configs.pipelines import arch_model_spec, transform_spec
+from repro.core.profiler import profile_model_analytic
+
+from benchmarks.common import save, table
+
+MODELS = {
+    "preprocess": transform_spec("preprocess"),
+    "pixtral-12b (classify)": arch_model_spec("pixtral-12b", 1040),
+    "qwen2-72b (translate)": arch_model_spec("qwen2-72b", 256),
+    "llama3.2-1b (categorize)": arch_model_spec("llama3.2-1b", 256),
+}
+
+BATCHES = (1, 4, 16, 64)
+
+
+def run() -> dict:
+    rows = []
+    payload = {}
+    for name, spec in MODELS.items():
+        prof = profile_model_analytic(spec)
+        for hw in ("cpu-1", "tpu-v5e-1", "tpu-v5e-8"):
+            if not prof.supports(hw):
+                continue
+            lat = {b: prof.batch_latency(hw, b) for b in BATCHES}
+            thr = {b: prof.throughput(hw, b) for b in BATCHES}
+            payload[f"{name}|{hw}"] = {"latency_s": lat, "throughput": thr}
+            rows.append([
+                name, hw,
+                *(f"{thr[b]:.1f}" for b in BATCHES),
+                f"{lat[max(BATCHES)]*1e3:.1f}ms",
+            ])
+    print(table(rows, ["model", "hw",
+                       *(f"thr@b{b}" for b in BATCHES), "lat@b64"]))
+    # headline: accelerator speedup for the heavy model
+    heavy = profile_model_analytic(MODELS["qwen2-72b (translate)"])
+    speedup = heavy.max_throughput("tpu-v5e-8") / heavy.max_throughput("cpu-1")
+    print(f"\nqwen2-72b tpu-v5e-8 vs cpu max-throughput speedup: "
+          f"{speedup:.0f}x  (paper reports 84x for ResNet152 K80 vs CPU)")
+    payload["speedup_tpu8_vs_cpu"] = speedup
+    save("fig3_profiles", payload)
+    return payload

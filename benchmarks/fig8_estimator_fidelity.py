@@ -1,0 +1,56 @@
+"""Fig. 8 — estimator fidelity: estimated vs 'measured' tail latencies.
+
+The planning-time estimate (on the sample trace) is compared with a
+replay on independent same-law traces for all four motifs at
+lambda=150, CV=4. Both must sit below the SLO for feasible plans.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.pipelines import MOTIFS, get_motif
+from repro.core.estimator import Estimator
+from repro.core.planner import Planner
+from repro.workload.generator import gamma_trace
+
+from benchmarks.common import save, table
+
+SLO = 0.2
+LAM, CV = 150.0, 4.0
+
+
+def run() -> dict:
+    rows, payload = [], {}
+    for pname in MOTIFS:
+        bound = get_motif(pname)
+        pipe, store = bound.pipeline, bound.profiles
+        sample = gamma_trace(LAM, CV, 60, seed=40)
+        res = Planner(pipe, store).plan(sample, SLO)
+        if not res.feasible:
+            rows.append([pname, "infeasible", "-", "-", "-"])
+            continue
+        est = Estimator(pipe, store)
+        replays = [est.simulate(res.config,
+                                gamma_trace(LAM, CV, 60, seed=41 + i))
+                   for i in range(3)]
+        p99s = [r.p99 for r in replays]
+        p50s = [r.percentile(50) for r in replays]
+        payload[pname] = {
+            "estimated_p99": res.estimated_p99,
+            "measured_p99_mean": float(np.mean(p99s)),
+            "measured_p99_max": float(np.max(p99s)),
+            "measured_p50_mean": float(np.mean(p50s)),
+            "slo": SLO,
+        }
+        rows.append([
+            pname,
+            f"{res.estimated_p99*1e3:.1f}ms",
+            f"{np.mean(p99s)*1e3:.1f}ms",
+            f"{np.max(p99s)*1e3:.1f}ms",
+            "yes" if max(p99s) <= SLO else "NO",
+        ])
+    print(table(rows, ["pipeline", "est P99", "meas P99 (mean)",
+                       "meas P99 (max)", "under SLO?"]))
+    save("fig8_estimator_fidelity", payload)
+    return payload

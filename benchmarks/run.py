@@ -1,0 +1,67 @@
+"""Benchmark driver: one module per paper figure/table.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig5 fig6  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    beyond_planner,
+    fig3_profiles,
+    fig5_planner_vs_cg,
+    fig6_real_traces,
+    fig7_rate_ramp,
+    fig8_estimator_fidelity,
+    fig9_planner_sensitivity,
+    fig10_11_tuner_sensitivity,
+    fig12_attribution,
+    fig13_frameworks,
+    fig14_ds2,
+    roofline_report,
+)
+
+BENCHES = {
+    "fig3": fig3_profiles,
+    "fig5": fig5_planner_vs_cg,
+    "fig6": fig6_real_traces,
+    "fig7": fig7_rate_ramp,
+    "fig8": fig8_estimator_fidelity,
+    "fig9": fig9_planner_sensitivity,
+    "fig10_11": fig10_11_tuner_sensitivity,
+    "fig12": fig12_attribution,
+    "fig13": fig13_frameworks,
+    "fig14": fig14_ds2,
+    "beyond_planner": beyond_planner,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    t_all = time.perf_counter()
+    failed = []
+    for name in names:
+        mod = BENCHES[name]
+        print(f"\n{'='*72}\n== {name}: {mod.__doc__.strip().splitlines()[0]}"
+              f"\n{'='*72}")
+        t0 = time.perf_counter()
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failed.append((name, repr(e)))
+            print(f"!! {name} FAILED: {e!r}")
+        print(f"-- {name} done in {time.perf_counter()-t0:.1f}s")
+    print(f"\nall benchmarks finished in {time.perf_counter()-t_all:.1f}s")
+    if failed:
+        for name, err in failed:
+            print(f"FAILED: {name}: {err}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Train any assigned architecture (reduced variant) on synthetic data.
+
+Demonstrates the training substrate end-to-end on CPU: config -> model
+-> data pipeline -> AdamW -> checkpoint save/restore. ~20M-parameter
+reduced variants train a few hundred steps in minutes; loss decreases on
+the learnable bigram corpus.
+
+Run:  PYTHONPATH=src python examples/train_arch.py --arch llama3.2-1b \
+          --steps 200
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import build_model
+from repro.train import checkpoint
+from repro.train.data import batches
+from repro.train.optimizer import AdamW
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="artifacts/example_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    print(f"arch={args.arch} (reduced)  params={n/1e6:.1f}M  "
+          f"layers={cfg.num_layers}  d_model={cfg.d_model}")
+
+    trainer = Trainer(model, AdamW(lr=args.lr), log_every=20)
+    data = batches(cfg, args.batch, args.seq, seed=0, steps=args.steps)
+    params, opt_state, losses = trainer.fit(params, data, args.steps)
+
+    print(f"\nloss: first10={np.mean(losses[:10]):.4f}  "
+          f"last10={np.mean(losses[-10:]):.4f}")
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn"
+
+    os.makedirs(os.path.dirname(args.ckpt), exist_ok=True)
+    checkpoint.save(args.ckpt, params)
+    restored = checkpoint.restore(args.ckpt, params)
+    leaves_a = jax.tree_util.tree_leaves(params)
+    leaves_b = jax.tree_util.tree_leaves(restored)
+    assert all(np.allclose(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+               for a, b in zip(leaves_a, leaves_b))
+    print(f"checkpoint round-trip OK -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.baselines.coarse_grained import (  # noqa: F401
+    CGPlanner,
+    CGTuner,
+    cg_plan,
+)
+from repro.baselines.ds2 import DS2Tuner  # noqa: F401

@@ -1,0 +1,56 @@
+"""Assigned-architecture registry: ``get_arch(name)`` / ``--arch <id>``.
+
+Each module exports ``ARCH`` (the exact assigned config) and ``SMOKE``
+(a reduced same-family variant for CPU smoke tests). ``llama3.2-1b-sw``
+is the sliding-window variant that unlocks the long_500k decode shape for
+one dense architecture (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ArchConfig
+
+_MODULES = {
+    "whisper-small": "whisper_small",
+    "granite-34b": "granite_34b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "pixtral-12b": "pixtral_12b",
+    "qwen2-72b": "qwen2_72b",
+    "xlstm-125m": "xlstm_125m",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "llama3.2-1b": "llama3_2_1b",
+    "llama3.2-1b-sw": "llama3_2_1b",
+}
+
+ARCH_IDS: List[str] = [k for k in _MODULES if k != "llama3.2-1b-sw"]
+
+
+def _load(name: str):
+    try:
+        mod = _MODULES[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod = _load(name)
+    if name == "llama3.2-1b-sw":
+        return mod.ARCH_SW
+    return mod.ARCH
+
+
+def get_smoke(name: str) -> ArchConfig:
+    mod = _load(name)
+    if name == "llama3.2-1b-sw":
+        return mod.SMOKE_SW
+    return mod.SMOKE
+
+
+def all_archs() -> Dict[str, ArchConfig]:
+    return {name: get_arch(name) for name in ARCH_IDS}

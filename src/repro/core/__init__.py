@@ -1,0 +1,32 @@
+"""InferLine core: pipeline spec, profiler, estimator, planner, tuner."""
+
+from repro.core.envelope import TrafficEnvelope, envelope_windows  # noqa: F401
+from repro.core.estimator import Estimator, SimResult  # noqa: F401
+from repro.core.hardware import (  # noqa: F401
+    HARDWARE_MENU,
+    HardwareType,
+    cheaper_hardware,
+    get_hardware,
+)
+from repro.core.pipeline import (  # noqa: F401
+    SOURCE,
+    Edge,
+    Pipeline,
+    PipelineConfig,
+    Stage,
+    StageConfig,
+    linear_pipeline,
+)
+from repro.core.planner import Planner, PlannerResult  # noqa: F401
+from repro.core.profiler import (  # noqa: F401
+    ModelProfile,
+    ModelSpec,
+    ProfileStore,
+    profile_model_analytic,
+    profile_model_measured,
+)
+from repro.core.tuner import (  # noqa: F401
+    Tuner,
+    TunerPlanInfo,
+    run_tuner_offline,
+)

@@ -1,0 +1,306 @@
+"""Low-frequency Planner (§4.3): greedy constrained cost minimization.
+
+Phase 1 (Alg. 1 `Initialize`): latency-minimizing feasible configuration —
+batch=1, lowest-latency hardware per stage; if the bare service time
+already exceeds the SLO the constraint is infeasible. Otherwise replicate
+the throughput bottleneck until the Estimator deems the pipeline feasible.
+
+Phase 2 (Alg. 2 `MinimizeCost`): repeatedly apply, over all stages, the
+single action from {IncreaseBatch (x2), RemoveReplica, DowngradeHW} that
+maximally decreases cost while remaining feasible per the Estimator.
+IncreaseBatch never changes cost; per the paper it is taken (at equal
+cost) because it unlocks subsequent replica removals. DowngradeHW runs a
+localized re-initialization of the downgraded stage (batch and replicas
+re-searched on the cheaper hardware).
+
+Guarantees at termination (§4.3): (1) if a feasible configuration exists
+under the menu, one is returned; (2) no single action reduces cost without
+violating the SLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.estimator import Estimator
+from repro.core.hardware import cheaper_hardware, get_hardware
+from repro.core.pipeline import Pipeline, PipelineConfig, StageConfig
+from repro.core.profiler import ProfileStore
+
+MAX_REPLICAS_PER_STAGE = 512
+MAX_BATCH = 128
+
+
+@dataclasses.dataclass
+class PlannerResult:
+    feasible: bool
+    config: Optional[PipelineConfig]
+    cost_per_hr: float
+    estimated_p99: float
+    iterations: int
+    simulations: int
+
+    def describe(self) -> str:
+        if not self.feasible:
+            return "INFEASIBLE under the current hardware menu/SLO"
+        assert self.config is not None
+        return (f"{self.config.describe()}\n  est. P99 = "
+                f"{self.estimated_p99 * 1e3:.1f} ms "
+                f"({self.iterations} iters, {self.simulations} sims)")
+
+
+class Planner:
+    def __init__(self, pipeline: Pipeline, profiles: ProfileStore,
+                 estimator: Optional[Estimator] = None,
+                 percentile: float = 99.0):
+        self.pipeline = pipeline
+        self.profiles = profiles
+        self.estimator = estimator or Estimator(pipeline, profiles)
+        self.percentile = percentile
+        self._sims = 0
+        self._cache: Dict[Tuple, float] = {}
+
+    # ---------------------------------------------------------------- utils
+    def _stage_hw_options(self, stage: str) -> List[str]:
+        st = self.pipeline.stages[stage]
+        prof = self.profiles.get(st.model_id)
+        return [h for h in st.hardware_options if prof.supports(h)]
+
+    def _best_hardware(self, stage: str) -> str:
+        """Lowest batch-1 latency (Alg. 1 line 5)."""
+        prof = self.profiles.get(self.pipeline.stages[stage].model_id)
+        return min(self._stage_hw_options(stage),
+                   key=lambda h: prof.batch_latency(h, 1))
+
+    def _config_key(self, config: PipelineConfig) -> Tuple:
+        return tuple(sorted(
+            (s, c.hardware, c.batch_size, c.replicas)
+            for s, c in config.stage_configs.items()))
+
+    def _p99(self, config: PipelineConfig, arrivals: np.ndarray) -> float:
+        key = self._config_key(config)
+        if key not in self._cache:
+            self._sims += 1
+            self._cache[key] = self.estimator.simulate(
+                config, arrivals).percentile(self.percentile)
+        return self._cache[key]
+
+    def _feasible(self, config: PipelineConfig, arrivals: np.ndarray,
+                  slo: float) -> bool:
+        return self._p99(config, arrivals) <= slo
+
+    def _throughput(self, config: PipelineConfig, stage: str) -> float:
+        cfg = config[stage]
+        prof = self.profiles.get(self.pipeline.stages[stage].model_id)
+        return cfg.replicas * prof.throughput(cfg.hardware, cfg.batch_size)
+
+    # ------------------------------------------------------------ Algorithm 1
+    def initialize(self, arrivals: np.ndarray, slo: float
+                   ) -> Optional[PipelineConfig]:
+        config = PipelineConfig({
+            s: StageConfig(self._best_hardware(s), 1, 1)
+            for s in self.pipeline.stages
+        })
+        if self.estimator.service_time(config) > slo:
+            return None  # infeasible: bare service time exceeds the SLO
+        scale = self.pipeline.scale_factors()
+        while not self._feasible(config, arrivals, slo):
+            # throughput bottleneck, demand-normalized by scale factor
+            bottleneck = min(
+                config.stage_configs,
+                key=lambda s: self._throughput(config, s) / max(scale[s], 1e-9),
+            )
+            config[bottleneck].replicas += 1
+            if config[bottleneck].replicas > MAX_REPLICAS_PER_STAGE:
+                return None
+        return config
+
+    # ---------------------------------------------------- Algorithm 2 actions
+    def _action_increase_batch(self, config: PipelineConfig, stage: str
+                               ) -> Optional[PipelineConfig]:
+        cfg = config[stage]
+        if cfg.batch_size * 2 > MAX_BATCH:
+            return None
+        new = config.copy()
+        new[stage].batch_size *= 2
+        return new
+
+    def _action_remove_replica(self, config: PipelineConfig, stage: str
+                               ) -> Optional[PipelineConfig]:
+        if config[stage].replicas <= 1:
+            return None
+        new = config.copy()
+        new[stage].replicas -= 1
+        return new
+
+    def _action_downgrade_hw(self, config: PipelineConfig, stage: str,
+                             arrivals: np.ndarray, slo: float
+                             ) -> Optional[PipelineConfig]:
+        """Localized re-init + cost minimization on cheaper hardware (§4.3)."""
+        cfg = config[stage]
+        options = [h for h in cheaper_hardware(cfg.hardware)
+                   if h in self._stage_hw_options(stage)]
+        if not options:
+            return None
+        prof = self.profiles.get(self.pipeline.stages[stage].model_id)
+        scale = self.pipeline.scale_factors()[stage]
+        duration = float(arrivals.max() - arrivals.min()) if arrivals.size > 1 else 1.0
+        lam_m = arrivals.size * scale / max(duration, 1e-9)
+        current_cost = config.cost_per_hr()
+
+        best: Optional[PipelineConfig] = None
+        old_stage_cost = get_hardware(cfg.hardware).cost_per_hr * cfg.replicas
+        for hw in options:
+            hw_cost = get_hardware(hw).cost_per_hr
+            # replicas beyond which the downgrade cannot reduce total cost
+            k_cap = int(math.floor((old_stage_cost - 1e-9) / hw_cost))
+            for batch in prof.batch_sizes:
+                if batch > MAX_BATCH:
+                    continue
+                # prefilter: bare service time must fit before simulating
+                probe = config.copy()
+                probe.stage_configs[stage] = StageConfig(hw, batch, 1)
+                if self.estimator.service_time(probe) > slo:
+                    continue
+                mu = prof.throughput(hw, batch)
+                k0 = max(1, math.ceil(lam_m / mu))
+                if k0 > k_cap:
+                    continue
+
+                def with_k(k: int) -> PipelineConfig:
+                    cand = config.copy()
+                    cand.stage_configs[stage] = StageConfig(hw, batch, k)
+                    return cand
+
+                # feasibility is monotone in replicas: binary-search the
+                # smallest feasible k in [k0, k_cap]
+                if not self._feasible(with_k(k_cap), arrivals, slo):
+                    continue
+                lo, hi = k0, k_cap
+                while lo < hi:
+                    mid = (lo + hi) // 2
+                    if self._feasible(with_k(mid), arrivals, slo):
+                        hi = mid
+                    else:
+                        lo = mid + 1
+                cand = with_k(lo)
+                if cand.cost_per_hr() < current_cost - 1e-12 and (
+                        best is None
+                        or cand.cost_per_hr() < best.cost_per_hr()):
+                    best = cand
+        return best
+
+    # ------------------------------------------------------------ Algorithm 2
+    def plan(self, arrivals: np.ndarray, slo: float) -> PlannerResult:
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        self._sims = 0
+        self._cache.clear()
+        config = self.initialize(arrivals, slo)
+        if config is None:
+            return PlannerResult(False, None, math.inf, math.inf, 0, self._sims)
+
+        iterations = 0
+        while True:
+            iterations += 1
+            current_cost = config.cost_per_hr()
+            best: Optional[PipelineConfig] = None
+            best_cost = current_cost
+            best_is_batch = False
+            for stage in self.pipeline.stages:
+                candidates: List[Tuple[Optional[PipelineConfig], bool]] = [
+                    (self._action_increase_batch(config, stage), True),
+                    (self._action_remove_replica(config, stage), False),
+                    (self._action_downgrade_hw(config, stage, arrivals, slo),
+                     False),
+                ]
+                for cand, is_batch in candidates:
+                    if cand is None:
+                        continue
+                    c = cand.cost_per_hr()
+                    if c > best_cost + 1e-12:
+                        continue
+                    if not self._feasible(cand, arrivals, slo):
+                        continue
+                    if c < best_cost - 1e-12:
+                        best, best_cost, best_is_batch = cand, c, is_batch
+                    elif is_batch and best is None and c <= current_cost + 1e-12:
+                        # cost-neutral batch increase: taken only when no
+                        # strictly cost-reducing action exists (§4.3)
+                        best, best_cost, best_is_batch = cand, c, True
+            if best is None:
+                break
+            config = best
+
+        p99 = self._p99(config, arrivals)
+        return PlannerResult(True, config, config.cost_per_hr(), p99,
+                             iterations, self._sims)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: simulated-annealing refinement (EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+class AnnealedPlanner(Planner):
+    """Greedy (Alg. 1+2) followed by simulated-annealing refinement.
+
+    The paper notes (§7.2) that the greedy optimizer "occasionally finds
+    sub-optimal configurations, as it makes locally optimal decisions".
+    This variant escapes those local optima with random joint moves —
+    re-batching one stage WHILE re-replicating another — which no single
+    greedy action can express. Feasibility stays Estimator-checked, so
+    guarantee (1) is preserved; guarantee (2) holds for the returned
+    config because annealing only ever returns configs at least as cheap
+    as the greedy fixed point.
+    """
+
+    def plan(self, arrivals: np.ndarray, slo: float,
+             steps: int = 150, t0: float = 0.3,
+             seed: int = 0) -> PlannerResult:
+        greedy = super().plan(arrivals, slo)
+        if not greedy.feasible:
+            return greedy
+        rng = np.random.default_rng(seed)
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        cur = greedy.config.copy()
+        cur_cost = cur.cost_per_hr()
+        best, best_cost = cur.copy(), cur_cost
+        stages = list(self.pipeline.stages)
+
+        def neighbor(cfg: PipelineConfig) -> Optional[PipelineConfig]:
+            new = cfg.copy()
+            for _ in range(int(rng.integers(1, 3))):  # 1-2 joint moves
+                stage = stages[int(rng.integers(len(stages)))]
+                sc = new[stage]
+                move = int(rng.integers(4))
+                if move == 0 and sc.batch_size * 2 <= MAX_BATCH:
+                    sc.batch_size *= 2
+                elif move == 1 and sc.batch_size > 1:
+                    sc.batch_size //= 2
+                elif move == 2:
+                    sc.replicas = max(1, sc.replicas
+                                      + int(rng.choice([-1, 1])))
+                else:
+                    opts = self._stage_hw_options(stage)
+                    sc_hw = opts[int(rng.integers(len(opts)))]
+                    new.stage_configs[stage] = StageConfig(
+                        sc_hw, sc.batch_size, sc.replicas)
+            return new
+
+        for i in range(steps):
+            temp = t0 * (1.0 - i / steps) + 1e-6
+            cand = neighbor(cur)
+            cost = cand.cost_per_hr()
+            # Metropolis on relative cost; only feasible moves accepted
+            if cost <= cur_cost or rng.random() < math.exp(
+                    -(cost - cur_cost) / (temp * max(cur_cost, 1e-9))):
+                if self._feasible(cand, arrivals, slo):
+                    cur, cur_cost = cand, cost
+                    if cost < best_cost - 1e-12:
+                        best, best_cost = cand.copy(), cost
+        p99 = self._p99(best, arrivals)
+        return PlannerResult(True, best, best_cost, p99,
+                             greedy.iterations + steps, self._sims)

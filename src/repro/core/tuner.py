@@ -1,0 +1,189 @@
+"""High-frequency Tuner (§5).
+
+Detects arrival-process deviations from the planned workload via traffic
+envelopes and re-scales per-model replica counts within seconds.
+
+Scale-up: if any current-envelope rate exceeds the planned envelope, take
+the max violating rate r_max and set, per model m,
+
+    k_m = ceil( r_max * s_m / (mu_m * rho_m) )
+
+where s_m is the scale factor, mu_m the single-replica throughput in the
+model's current (hw, batch) configuration, and rho_m the max-provisioning
+ratio computed at plan time — the "slack" the Planner decided model m
+needs to absorb bursts:
+
+    rho_m = (lambda_plan * s_m) / (k_m_plan * mu_m)
+
+(at r_max = lambda_plan this recovers exactly the planned replica count).
+
+Scale-down: conservative — 15 s hysteresis after any configuration change
+(3x the 5 s replica activation time), lambda_new = max rate over the last
+30 s in 5 s windows, and the pipeline-min rho_p = min_m rho_m.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.envelope import TrafficEnvelope
+from repro.core.pipeline import Pipeline, PipelineConfig
+from repro.core.profiler import ProfileStore
+
+REPLICA_ACTIVATION_S = 5.0
+DOWNSCALE_HYSTERESIS_S = 15.0   # 3x activation time (§5)
+DOWNSCALE_OBS_WINDOW_S = 30.0
+DOWNSCALE_SUBWINDOW_S = 5.0
+
+
+@dataclasses.dataclass
+class TunerPlanInfo:
+    """Everything the Planner hands the Tuner at deployment time (§5)."""
+
+    planned_envelope: TrafficEnvelope
+    mu: Dict[str, float]            # single-replica throughput per stage
+    rho: Dict[str, float]           # max-provisioning ratio per stage
+    scale_factors: Dict[str, float]
+    planned_replicas: Dict[str, int]
+    service_time_s: float
+
+    @staticmethod
+    def from_plan(pipeline: Pipeline, config: PipelineConfig,
+                  profiles: ProfileStore, sample_arrivals: np.ndarray,
+                  service_time_s: float) -> "TunerPlanInfo":
+        arr = np.asarray(sample_arrivals, dtype=np.float64)
+        duration = float(arr.max() - arr.min()) if arr.size > 1 else 1.0
+        lam = arr.size / max(duration, 1e-9)
+        s = pipeline.scale_factors()
+        mu, rho, k = {}, {}, {}
+        for stage, cfg in config.stage_configs.items():
+            prof = profiles.get(pipeline.stages[stage].model_id)
+            mu_m = prof.throughput(cfg.hardware, cfg.batch_size)
+            mu[stage] = mu_m
+            k[stage] = cfg.replicas
+            lam_m = lam * s[stage]
+            rho[stage] = max(lam_m / (cfg.replicas * mu_m), 1e-6)
+        env = TrafficEnvelope.from_trace(arr, service_time_s)
+        return TunerPlanInfo(env, mu, rho, s, k, service_time_s)
+
+
+class Tuner:
+    """Stateful controller; call ``step`` on a fixed cadence (e.g. 1 s)."""
+
+    def __init__(self, plan: TunerPlanInfo,
+                 envelope_horizon_s: float = 60.0,
+                 min_replicas: int = 1):
+        self.plan = plan
+        self.horizon = envelope_horizon_s
+        self.min_replicas = min_replicas
+        self.current: Dict[str, int] = dict(plan.planned_replicas)
+        # deployment counts as a configuration change: hysteresis applies
+        # from t=0, so the tuner cannot scale DOWN off a sliver of
+        # history (a 1 s trace read as a 30 s window halves the fleet)
+        self.last_change_t: float = 0.0
+        self.rho_p: float = min(plan.rho.values())
+        self.events: List[Tuple[float, str, str, int]] = []  # (t, kind, stage, delta)
+
+    # -- required replicas for a given per-pipeline ingress rate ----------
+    def _replicas_for_rate(self, rate: float, stage: str, rho: float) -> int:
+        s_m = self.plan.scale_factors[stage]
+        mu_m = self.plan.mu[stage]
+        return max(self.min_replicas,
+                   math.ceil(rate * s_m / (mu_m * rho)))
+
+    def step(self, now: float, arrivals_so_far: np.ndarray
+             ) -> Dict[str, int]:
+        """Observe ingress arrivals up to `now`; return target replica counts.
+
+        The caller (live cluster / real frontend) applies the deltas, adding
+        REPLICA_ACTIVATION_S before a new replica serves traffic.
+        """
+        arr = arrivals_so_far
+        recent = arr[arr > now - self.horizon]
+        target = dict(self.current)
+
+        # ---- scale up (immediate) ----------------------------------------
+        cur_env = TrafficEnvelope.from_trace(recent, self.plan.service_time_s)
+        exceeded, r_max = self.plan.planned_envelope.exceeded_by(cur_env)
+        if exceeded:
+            for stage in target:
+                k_needed = self._replicas_for_rate(
+                    r_max, stage, self.plan.rho[stage])
+                if k_needed > target[stage]:
+                    target[stage] = k_needed
+
+        up = {s: k for s, k in target.items() if k > self.current[s]}
+        if up:
+            for stage, k in up.items():
+                self.events.append((now, "up", stage, k - self.current[stage]))
+                self.current[stage] = k
+            self.last_change_t = now
+            return dict(self.current)
+
+        # ---- scale down (hysteresis-guarded) ------------------------------
+        if now - self.last_change_t < DOWNSCALE_HYSTERESIS_S:
+            return dict(self.current)
+        if now < DOWNSCALE_OBS_WINDOW_S:
+            # no full observation window yet — the windowed-max rate
+            # would undercount and trigger a spurious scale-down
+            return dict(self.current)
+        obs = arr[arr > now - DOWNSCALE_OBS_WINDOW_S]
+        if obs.size == 0:
+            lam_new = 0.0
+        else:
+            edges = np.arange(now - DOWNSCALE_OBS_WINDOW_S, now
+                              + DOWNSCALE_SUBWINDOW_S, DOWNSCALE_SUBWINDOW_S)
+            counts, _ = np.histogram(obs, bins=edges)
+            lam_new = float(counts.max()) / DOWNSCALE_SUBWINDOW_S
+        changed = False
+        for stage in target:
+            k_needed = self._replicas_for_rate(lam_new, stage, self.rho_p)
+            if k_needed < self.current[stage]:
+                self.events.append(
+                    (now, "down", stage, k_needed - self.current[stage]))
+                self.current[stage] = k_needed
+                changed = True
+        if changed:
+            self.last_change_t = now
+        return dict(self.current)
+
+
+def run_tuner_offline(
+    tuner: Tuner,
+    arrivals: np.ndarray,
+    t_end: Optional[float] = None,
+    interval_s: float = 1.0,
+    activation_delay_s: float = REPLICA_ACTIVATION_S,
+) -> Dict[str, List[Tuple[float, int]]]:
+    """Drive the tuner over a full trace; emit per-stage replica events.
+
+    The Tuner's decisions depend only on the ingress arrival process (§5),
+    so the full scaling schedule can be computed ahead of the pipeline
+    simulation and handed to the Estimator engine as replica_schedules.
+    Scale-ups take effect after `activation_delay_s`; scale-downs are
+    immediate (replicas drain and retire).
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    t_end = t_end if t_end is not None else (
+        float(arrivals.max()) if arrivals.size else 0.0)
+    schedules: Dict[str, List[Tuple[float, int]]] = {
+        s: [] for s in tuner.current
+    }
+    before = dict(tuner.current)
+    t = interval_s
+    while t <= t_end + 1e-9:
+        seen = arrivals[arrivals <= t]
+        after = tuner.step(t, seen)
+        for stage, k in after.items():
+            delta = k - before[stage]
+            if delta > 0:
+                schedules[stage].append((t + activation_delay_s, delta))
+            elif delta < 0:
+                schedules[stage].append((t, delta))
+        before = after
+        t += interval_s
+    return schedules

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the served models' compute hot-spots.
+
+flash_attention (prefill/train), decode_attention (single-token serve),
+rmsnorm (fused norm). Each has a pure-jnp oracle in ref.py; ops.py is the
+jit'd dispatch layer (Pallas on TPU, ref elsewhere, interpret on demand).
+"""

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: mamba chunked selective-scan.
+
+The roofline table (EXPERIMENTS.md §Roofline) classifies every
+ssm/hybrid pair as memory-bound: the XLA path discretizes and scans the
+(L, D, N) state update through HBM each chunk. This kernel fuses
+discretization (a_bar = exp(dt*A), b_bar*x = dt*B*x), the linear
+recurrence h_t = a_bar_t * h_{t-1} + bx_t, and the output contraction
+y_t = <h_t, C_t> into one VMEM-resident pass, so HBM traffic per token
+is just the inputs (dt, x, B, C) and output y — never the (L, D, N)
+state trajectory.
+
+Grid: (batch, d_blocks, n_chunks); the chunk axis iterates innermost
+(sequentially on TPU), carrying the running state h in a VMEM scratch
+tile (D_blk, N) — the same persistence pattern the flash kernel uses for
+its softmax state. Block shapes keep D_blk on the sublane dim and N on
+the lane dim; with D_blk=256, N<=64, the working set is < 4 MiB of VMEM.
+
+The time recurrence runs as an in-kernel fori_loop over the chunk: each
+step is a (D_blk, N) vector op — wide enough to keep the VPU busy — and
+a (D_blk,) store into the output tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_D_BLOCK = 256
+
+
+def _mamba_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref,
+                  y_ref, hout_ref, h_scratch, *,
+                  chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)            # (D_blk, N)
+    dt = dt_ref[0].astype(jnp.float32)            # (chunk, D_blk)
+    x = x_ref[0].astype(jnp.float32)              # (chunk, D_blk)
+    bm = b_ref[0].astype(jnp.float32)             # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)             # (chunk, N)
+
+    def step(t, h):
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]   # (D_blk,)
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, 0)[0]
+        b_t = jax.lax.dynamic_slice_in_dim(bm, t, 1, 0)[0]    # (N,)
+        c_t = jax.lax.dynamic_slice_in_dim(cm, t, 1, 0)[0]
+        a_bar = jnp.exp(dt_t[:, None] * a)                    # (D_blk, N)
+        h = a_bar * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=1)               # (D_blk,)
+        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)),
+                 y_t[None, :].astype(y_ref.dtype))
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scratch[...])
+    h_scratch[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def mamba_scan(
+    dt: jnp.ndarray,     # (B, S, D)   discretization step (post-softplus)
+    x: jnp.ndarray,      # (B, S, D)   conv+silu'd input
+    b: jnp.ndarray,      # (B, S, N)   input-dependent B
+    c: jnp.ndarray,      # (B, S, N)   input-dependent C
+    a: jnp.ndarray,      # (D, N)      state matrix (negative)
+    h0: jnp.ndarray,     # (B, D, N)   carried state
+    chunk: int = 256,
+    d_block: int = DEFAULT_D_BLOCK,
+    interpret: bool = False,
+):
+    """Returns (y (B,S,D), h_last (B,D,N)); fp32 state, x.dtype output."""
+    bsz, s, d = dt.shape
+    n = a.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    n_chunks = s // chunk
+    db = min(d_block, d)
+    if d % db:
+        db = d
+    nd = d // db
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk,
+                               n_chunks=n_chunks)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(bsz, nd, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, db), lambda bb, di, ci: (bb, ci, di)),
+            pl.BlockSpec((1, chunk, db), lambda bb, di, ci: (bb, ci, di)),
+            pl.BlockSpec((1, chunk, n), lambda bb, di, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, di, ci: (bb, ci, 0)),
+            pl.BlockSpec((db, n), lambda bb, di, ci: (di, 0)),
+            pl.BlockSpec((1, db, n), lambda bb, di, ci: (bb, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, db), lambda bb, di, ci: (bb, ci, di)),
+            pl.BlockSpec((1, db, n), lambda bb, di, ci: (bb, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, d), x.dtype),
+            jax.ShapeDtypeStruct((bsz, d, n), h0.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((db, n), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, b, c, a, h0)
+    return y, h_last

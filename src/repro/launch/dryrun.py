@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # While-loop invariant code motion hoists per-iteration bf16->f32
+    # converts of scanned weight/cache stacks OUT of the loop,
+    # materializing full fp32 copies of every stacked buffer (measured:
+    # +9 GiB/device on qwen2-72b decode_32k, +8 GiB on llama3.2-1b
+    # train_4k). Disabling it trades a per-iteration convert for the
+    # memory (§Perf iteration 5).
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion,"
+    "while-loop-expensive-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input shape) combination against
+the production meshes — 16x16 single pod and 2x16x16 multi-pod — with
+ShapeDtypeStruct inputs (no allocation), records memory_analysis() /
+cost_analysis(), and derives the §Roofline terms from the compiled HLO.
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init), which is why this module sets it at the top.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh both --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_arch  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shapes import (  # noqa: E402
+    SHAPES,
+    ShapeSpec,
+    applicable,
+    batch_specs,
+    decode_specs,
+    dryrun_config,
+)
+from repro.models import build_model  # noqa: E402
+from repro.models.sharding import (  # noqa: E402
+    batch_pspec,
+    cache_pspec,
+    param_pspec,
+)
+from repro.roofline.analysis import (  # noqa: E402
+    model_flops_estimate,
+    roofline_terms,
+)
+from repro.train.optimizer import AdamW  # noqa: E402
+
+# long_500k runs for these archs only (DESIGN.md §4); the -sw variant
+# substitutes for llama3.2-1b on that shape.
+LONG_CONTEXT_SUBSTITUTE = {"llama3.2-1b": "llama3.2-1b-sw"}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _with_sharding(shape_tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        shape_tree, sharding_tree)
+
+
+def _analytic_bytes_per_device(cfg, shape, chips: int, data_size: int,
+                               big: bool) -> float:
+    """Per-device HBM-traffic floor for one step (roofline memory term).
+
+    XLA's cost_analysis counts scanned layer bodies once, so its "bytes
+    accessed" undercounts by ~num_layers; this analytic floor restores a
+    sound lower bound: every resident parameter (and optimizer moment for
+    training) is touched at least once per step, and decode reads the
+    whole KV cache.
+    """
+    from repro.models.kvcache import cache_bytes
+
+    n = cfg.param_count()
+    p_bytes = 2.0 * n                      # bf16 params
+    if shape.kind == "train":
+        m_item = 2 if big else 4
+        # fwd read + bwd read + update write, grads, 2 moments r/w
+        traffic = (3 * p_bytes + p_bytes + 2 * 2 * m_item * n) / chips
+        # activations: residual stream per layer, fwd+bwd
+        toks_pd = shape.batch * shape.seq / data_size
+        traffic += 2 * 2 * toks_pd * cfg.d_model * cfg.num_layers
+        return traffic
+    # serving: params once + cache (decode reads+writes it; prefill
+    # writes it)
+    cb = cache_bytes(cfg, shape.batch, shape.seq) / data_size
+    factor = 2.0 if shape.kind == "decode" else 1.0
+    return p_bytes / chips + factor * cb
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one combination; returns the artifact dict."""
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch in LONG_CONTEXT_SUBSTITUTE:
+        arch_eff = LONG_CONTEXT_SUBSTITUTE[arch]
+    else:
+        arch_eff = arch
+    base_cfg = get_arch(arch_eff)
+    ok, why = applicable(base_cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    data_size = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    cfg, big = dryrun_config(base_cfg, shape, data_size)
+    model = build_model(cfg)
+
+    t0 = time.time()
+    params_sds = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    p_spec = param_pspec(params_sds, mesh)
+    p_shard = _named(mesh, p_spec)
+    params_in = _with_sharding(params_sds, p_shard)
+
+    tokens_total = shape.batch * shape.seq
+
+    if shape.kind == "train":
+        opt = AdamW(moment_dtype="bfloat16" if big else None)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        # moments mirror the param tree; reuse param specs for mu/nu
+        opt_spec = type(opt_sds)(step=P(), mu=p_spec, nu=p_spec)
+        opt_in = _with_sharding(opt_sds, _named(mesh, opt_spec))
+        batch_sds = batch_specs(cfg, shape)
+        b_spec = batch_pspec(batch_sds, mesh)
+        batch_in = _with_sharding(batch_sds, _named(mesh, b_spec))
+
+        from repro.train.trainer import make_train_step
+        # Gradient accumulation for the very large configs: activations
+        # of a full 256 x 4k batch cannot fit HBM next to >300B of
+        # sharded training state (§Perf iteration 9). The microbatch
+        # count targets ONE sequence per device per pass and must keep
+        # each microbatch divisible by the data-axis size (256/16 = 16
+        # single pod, 256/32 = 8 multi-pod) or the batch constraint is
+        # skipped and activations replicate across pods.
+        micro = max(1, shape.batch // data_size) if big else 1
+        step = make_train_step(model, opt, microbatches=micro,
+                               accum_dtype="bfloat16" if big else None)
+        jitted = jax.jit(step, donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(params_in, opt_in, batch_in)
+    elif shape.kind == "prefill":
+        batch_sds = batch_specs(cfg, shape)
+        b_spec = batch_pspec(batch_sds, mesh)
+        batch_in = _with_sharding(batch_sds, _named(mesh, b_spec))
+        smax = shape.seq + (cfg.num_image_tokens or 0)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, smax=smax)
+
+        jitted = jax.jit(prefill_step)
+        with mesh:
+            lowered = jitted.lower(params_in, batch_in)
+    else:  # decode
+        specs = decode_specs(cfg, shape)
+        shard_seq = shape.batch == 1
+        c_spec = cache_pspec(specs["cache"], mesh, shard_seq=shard_seq)
+        cache_in = _with_sharding(specs["cache"], _named(mesh, c_spec))
+        tok_spec = batch_pspec({"tokens": specs["token"]}, mesh)["tokens"]
+        tok_in = jax.ShapeDtypeStruct(
+            specs["token"].shape, specs["token"].dtype,
+            sharding=NamedSharding(mesh, tok_spec))
+        pos_in = jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P()))
+        tokens_total = shape.batch  # one token per sequence
+
+        def decode_step(params, token, pos, cache):
+            return model.decode_step(params, token, pos, cache)
+
+        jitted = jax.jit(decode_step, donate_argnums=(3,))
+        with mesh:
+            lowered = jitted.lower(params_in, tok_in, pos_in, cache_in)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    n_active = cfg.active_param_count()
+    mf = model_flops_estimate(n_active, tokens_total, shape.kind)
+    ab = _analytic_bytes_per_device(cfg, shape, chips, data_size, big)
+    report = roofline_terms(
+        arch=arch, shape=shape_name,
+        mesh="multi" if multi_pod else "single", chips=chips,
+        cost_analysis=cost, hlo_text=hlo, model_flops=mf,
+        peak_mem=getattr(mem, "temp_size_in_bytes", None),
+        analytic_bytes=ab)
+
+    art = {
+        "arch": arch, "arch_effective": arch_eff, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "roofline": report.to_json(),
+    }
+    if verbose:
+        r = art["roofline"]
+        print(f"[{arch} x {shape_name} x {art['mesh']}] compile "
+              f"{t_compile:.1f}s  flops={r['hlo_flops']:.3e} "
+              f"coll={r['collective_bytes']:.3e}B "
+              f"bottleneck={r['bottleneck']}", flush=True)
+    return art
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS,
+                    help="single architecture (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[{tag}] cached", flush=True)
+                            n_ok += 1
+                            continue
+                try:
+                    art = lower_one(arch, shape, multi)
+                    if art["status"] == "ok":
+                        n_ok += 1
+                    else:
+                        n_skip += 1
+                        print(f"[{tag}] SKIP: {art['reason']}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    art = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "fail", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[{tag}] FAIL: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(art, f, indent=1)
+    print(f"dry-run complete: ok={n_ok} skipped={n_skip} failed={n_fail}",
+          flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Assigned input shapes and per-(arch x shape) ShapeDtypeStruct specs.
+
+``input_specs`` returns shape-only stand-ins for every model input (no
+device allocation) plus the step kind, following the assignment:
+
+  train_4k     seq=4096    global_batch=256   (train_step)
+  prefill_32k  seq=32768   global_batch=32    (prefill_step)
+  decode_32k   seq=32768   global_batch=128   (decode_step: ONE new token
+                                               against a seq-long cache)
+  long_500k    seq=524288  global_batch=1     (decode_step; sub-quadratic
+                                               archs only — DESIGN.md §4)
+
+Family adjustments (DESIGN.md §4): whisper splits train_4k between
+encoder frames and decoder tokens and decodes against its fixed 1500
+frame encoder context; pixtral prepends its 1024 stub patch embeddings
+inside the sequence budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.kvcache import init_cache
+
+AUDIO_FEAT_DIM = 128
+IMAGE_FEAT_DIM = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether this (arch, shape) combination runs (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, ("full-attention architecture without a sliding-"
+                       "window variant: long_500k decode skipped")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model-input ShapeDtypeStructs for train/prefill batches."""
+    b, s = shape.batch, shape.seq
+    if cfg.is_encoder_decoder:
+        if shape.kind == "train":
+            frames, toks = s // 2, s // 2
+        else:
+            frames, toks = cfg.encoder_max_frames, s
+        return {
+            "tokens": _sds((b, toks), jnp.int32),
+            "frames": _sds((b, frames, AUDIO_FEAT_DIM), cfg.cdtype),
+        }
+    if cfg.num_image_tokens:
+        toks = max(s - cfg.num_image_tokens, 8)
+        return {
+            "tokens": _sds((b, toks), jnp.int32),
+            "image_feats": _sds((b, cfg.num_image_tokens, IMAGE_FEAT_DIM),
+                                cfg.cdtype),
+        }
+    return {"tokens": _sds((b, s), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Any:
+    """ShapeDtypeStructs for the decode cache (eval_shape, no alloc)."""
+    smax = shape.seq
+    if cfg.is_encoder_decoder:
+        # decoder KV of seq length; encoder context fixed at max frames
+        pass
+    if cfg.num_image_tokens:
+        smax = shape.seq  # image prefix counted inside the budget
+    return jax.eval_shape(lambda: init_cache(cfg, shape.batch, smax))
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    return {
+        "token": _sds((shape.batch, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cache": cache_specs(cfg, shape),
+    }
+
+
+def dryrun_config(cfg: ArchConfig, shape: ShapeSpec,
+                  mesh_data_size: int) -> ArchConfig:
+    """Numerics/memory policy for production lowering: bf16 params and
+    compute, remat for large training graphs, bf16 optimizer moments for
+    the >100B configs, EP group-limited routing aligned with the data
+    axes."""
+    big = cfg.param_count() > 20e9
+    groups = mesh_data_size if cfg.num_experts else 1
+    t = shape.batch * shape.seq
+    if groups > 1 and t % groups != 0:
+        groups = 1
+    # pad odd vocabularies (whisper 51865, granite-moe 49155) to the next
+    # multiple of the model axis so the embedding/unembedding and the CE
+    # logits shard instead of replicating + all-reducing (§Perf iter. 7)
+    model_size = 16
+    vocab = -(-cfg.vocab_size // model_size) * model_size
+    return dataclasses.replace(
+        cfg,
+        vocab_size=vocab,
+        param_dtype="bfloat16",
+        compute_dtype="bfloat16",
+        # remat every training config: saved per-layer activations at
+        # global batch 256 x 4k dominate HBM even for small d_model
+        # (whisper-small: 110 GiB/device without remat).
+        remat=(shape.kind == "train"),
+        moe_groups=groups,
+        # big-model serving keeps the bf16 cache; ssm states stay fp32
+    ), big

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineReport,
+    collective_bytes_from_hlo,
+    roofline_terms,
+)

@@ -1,0 +1,232 @@
+"""Roofline analysis over compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are NOT in cost_analysis, so we parse the optimized HLO text and sum
+the output-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op. Hardware constants (v5e): 197 bf16
+TFLOP/s per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.hardware import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[256,4096,7168]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)"
+                       r"\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\)\s*->.*)?\{\s*$")
+_WHILE_RE = re.compile(
+    r"=\s*(?:\([^=]*\)|\S+)\s+while\(.*?condition=%?([\w.\-]+),\s*"
+    r"body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"\bs32\[\]\s+constant\((\d+)\)")
+
+
+def _computations(hlo_text: str) -> Dict[str, str]:
+    """Split an HLO module's text into {computation_name: body_text}.
+
+    Lines outside any recognized computation land in the "" bucket so
+    nothing is silently dropped (counted at multiplier 1).
+    """
+    comps: Dict[str, list] = {"": []}
+    cur = ""
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m:
+            cur = m.group(1)
+            comps.setdefault(cur, [])
+            continue
+        if line.strip() == "}" and cur:
+            cur = ""
+            continue
+        comps.setdefault(cur, []).append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _loop_multipliers(hlo_text: str) -> Dict[str, int]:
+    """{body_computation_name: trip_count} for every while loop.
+
+    jax.lax.scan lowers to while loops whose condition compares the
+    induction variable against a constant trip count; we take the largest
+    s32[] constant in the condition computation as the trip count. XLA's
+    ``cost_analysis()`` counts each loop body ONCE (verified empirically:
+    a scan of 10 matmuls reports 1 matmul of FLOPs), so collective bytes
+    inside scanned layers must be multiplied back up.
+    """
+    comps = _computations(hlo_text)
+    mult: Dict[str, int] = {}
+    for m in _WHILE_RE.finditer(hlo_text):
+        cond, body = m.group(1), m.group(2)
+        trips = [int(c) for c in _CONST_RE.findall(comps.get(cond, ""))]
+        if trips:
+            mult[body] = max(mult.get(body, 1), max(trips))
+    return mult
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind over an HLO module,
+    multiplying collectives inside while-loop bodies (scanned layer
+    stacks) by their trip counts.
+
+    ``-start``/``-done`` pairs are counted once (the -done line repeats the
+    shape); we count only lines without the ``-done`` suffix.
+    """
+    comps = _computations(hlo_text)
+    mult = _loop_multipliers(hlo_text)
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+
+    def scan_comp(name: str, text: str, factor: int) -> None:
+        for line in text.splitlines():
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            if f"{m.group(2)}-done(" in line:
+                continue
+            out[m.group(2)] += _shape_bytes(m.group(1)) * factor
+
+    # attribute each computation once, at its loop multiplier (nested
+    # loops are rare in this codebase's programs; direct attribution)
+    for name, text in comps.items():
+        scan_comp(name, text, mult.get(name, 1))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # PER-DEVICE values: compiled.cost_analysis() and compiled.as_text()
+    # describe the SPMD-partitioned per-device program (verified: an 8-way
+    # sharded matmul reports 1/8 of the total FLOPs). Each term therefore
+    # divides by a SINGLE chip's peak, not by the chip count.
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    collectives_by_kind: Dict[str, int]
+    model_flops: float                    # TOTAL 6*N*D (train) / 2*N*D (serve)
+    peak_mem_per_device: Optional[float] = None
+    # Analytic per-device floors. XLA's cost_analysis counts while-loop
+    # (scan) bodies ONCE, undercounting flops/bytes of scanned layer
+    # stacks by ~num_layers; the floors (6*N*D napkin math and
+    # params+optimizer+cache traffic) restore a sound lower bound. Terms
+    # take max(measured, floor).
+    analytic_bytes: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        floor = self.model_flops / self.chips
+        return max(self.hlo_flops, floor) / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        floor = self.analytic_bytes or 0.0
+        return max(self.hlo_bytes, floor) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def total_hlo_flops(self) -> float:
+        return self.hlo_flops * self.chips
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs — fraction of compiled compute
+        that is 'useful'; catches remat/redundancy waste (can exceed 1 if
+        XLA fuses/elides, <1 with remat recompute or attention FLOPs the
+        6*N*D napkin model ignores)."""
+        total = self.total_hlo_flops
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Roofline-optimistic step latency (max of the three terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_json(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "total_hlo_flops": self.total_hlo_flops,
+            "collective_bytes": self.collective_bytes,
+            "collectives_by_kind": self.collectives_by_kind,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "peak_mem_per_device": self.peak_mem_per_device,
+            "analytic_bytes": self.analytic_bytes,
+        }
+
+
+def model_flops_estimate(n_active: float, tokens: float,
+                         kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference (per the assignment)."""
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens
+
+
+def roofline_terms(arch: str, shape: str, mesh: str, chips: int,
+                   cost_analysis: Dict, hlo_text: str,
+                   model_flops: float,
+                   peak_mem: Optional[float] = None,
+                   analytic_bytes: Optional[float] = None) -> RooflineReport:
+    coll = collective_bytes_from_hlo(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=float(cost_analysis.get("flops", 0.0)),
+        hlo_bytes=float(cost_analysis.get("bytes accessed", 0.0)),
+        collective_bytes=float(sum(coll.values())),
+        collectives_by_kind=coll,
+        model_flops=model_flops,
+        peak_mem_per_device=peak_mem,
+        analytic_bytes=analytic_bytes,
+    )

@@ -1,0 +1,2 @@
+from repro.serving.cluster import LiveClusterSim, LiveRunResult  # noqa: F401
+from repro.serving.frontends import FRONTENDS, Frontend  # noqa: F401

@@ -1,0 +1,116 @@
+"""Live-cluster simulation: serve a trace with a high-frequency tuner in
+the loop (§5, §7.1-7.3).
+
+The Tuner's decisions are a pure function of the ingress arrival process
+(traffic envelopes + plan-time constants), so the full scaling schedule is
+computed by streaming the trace through the tuner first; the resulting
+per-stage replica schedules are then handed to the Estimator engine, which
+simulates every queue/batch/replica interaction. Replica activation delay
+(5 s) and scale-down draining are modeled inside the engine.
+
+Outputs include the per-query latencies AND the cost timeline (replica
+counts integrate to $-cost over the run), which is what Figs. 6/7/10-12
+plot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.estimator import Estimator, SimResult
+from repro.core.hardware import get_hardware
+from repro.core.pipeline import Pipeline, PipelineConfig
+from repro.core.profiler import ProfileStore
+from repro.serving.frontends import FRONTENDS, Frontend
+
+
+@dataclasses.dataclass
+class LiveRunResult:
+    sim: SimResult
+    slo: float
+    # cost timeline: (times, $/hr at that time); integrate for total $.
+    cost_times: np.ndarray
+    cost_per_hr: np.ndarray
+    replica_timeline: Dict[str, List[Tuple[float, int]]]
+
+    @property
+    def miss_rate(self) -> float:
+        return self.sim.slo_miss_rate(self.slo)
+
+    @property
+    def attainment(self) -> float:
+        return 1.0 - self.miss_rate
+
+    def total_cost(self, t_end: Optional[float] = None) -> float:
+        """$ integrated over the run (trapezoid on the step function)."""
+        t_end = t_end if t_end is not None else float(self.sim.arrival.max())
+        ts = np.append(self.cost_times, t_end)
+        cs = np.append(self.cost_per_hr, self.cost_per_hr[-1])
+        dt = np.diff(ts)
+        return float((cs[:-1] * dt).sum() / 3600.0)
+
+    def mean_cost_per_hr(self, t_end: Optional[float] = None) -> float:
+        t_end = t_end if t_end is not None else float(self.sim.arrival.max())
+        return self.total_cost(t_end) * 3600.0 / max(t_end, 1e-9)
+
+
+class LiveClusterSim:
+    """Simulate live serving of `arrivals` under a scaling controller."""
+
+    def __init__(self, pipeline: Pipeline, profiles: ProfileStore,
+                 config: PipelineConfig, slo: float,
+                 frontend: Frontend = FRONTENDS["clipper"]):
+        self.pipeline = pipeline
+        self.profiles = profiles
+        self.config = config
+        self.slo = slo
+        self.frontend = frontend
+        self.estimator = Estimator(pipeline, profiles,
+                                   rpc_delay_s=frontend.hop_delay_s)
+
+    def _cost_timeline(
+        self,
+        schedules: Dict[str, Sequence[Tuple[float, int]]],
+        t_end: float,
+    ) -> Tuple[np.ndarray, np.ndarray, Dict[str, List[Tuple[float, int]]]]:
+        counts = {s: self.config[s].replicas for s in self.pipeline.stages}
+        hw_cost = {
+            s: get_hardware(self.config[s].hardware).cost_per_hr
+            for s in self.pipeline.stages
+        }
+        events: List[Tuple[float, str, int]] = []
+        for s, evs in (schedules or {}).items():
+            for t, d in evs:
+                events.append((t, s, d))
+        events.sort()
+        times = [0.0]
+        costs = [sum(counts[s] * hw_cost[s] for s in counts)]
+        timeline: Dict[str, List[Tuple[float, int]]] = {
+            s: [(0.0, counts[s])] for s in counts
+        }
+        for t, s, d in events:
+            if t > t_end:
+                break
+            counts[s] += d
+            times.append(t)
+            costs.append(sum(counts[k] * hw_cost[k] for k in counts))
+            timeline[s].append((t, counts[s]))
+        return np.asarray(times), np.asarray(costs), timeline
+
+    def run(
+        self,
+        arrivals: np.ndarray,
+        schedule_fn: Optional[Callable[[np.ndarray], Dict[str, List[Tuple[float, int]]]]] = None,
+    ) -> LiveRunResult:
+        """Serve the trace; `schedule_fn(arrivals)` produces the scaling
+        schedule (e.g. `run_tuner_offline` partial). None = static config."""
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        schedules = schedule_fn(arrivals) if schedule_fn is not None else {}
+        sim = self.estimator.simulate(self.config, arrivals,
+                                      replica_schedules=schedules or None)
+        t_end = float(arrivals.max()) if arrivals.size else 0.0
+        times, costs, timeline = self._cost_timeline(schedules, t_end)
+        return LiveRunResult(sim, self.slo, times, costs, timeline)

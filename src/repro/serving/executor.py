@@ -1,0 +1,208 @@
+"""Real (wall-clock) pipeline executor: centralized batched queues +
+thread-pool model replicas serving actual JAX models on CPU.
+
+This is the runtime-path proof for the serving framework: the same
+Pipeline/PipelineConfig the Planner emits is deployed over real queues
+and real jitted models, demonstrating the three properties InferLine
+requires of a serving system (§3): replica scaling at runtime, a
+configurable max batch size, and a centralized batched queue per stage.
+
+Scale is CPU-sized (tiny models, tens of QPS); the large-scale behavior
+is covered by the discrete-event cluster (`repro.serving.cluster`) whose
+queueing discipline this executor mirrors exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.pipeline import SOURCE, Pipeline, PipelineConfig
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    t_arrival: float
+    payload: Any
+    t_done: Optional[float] = None
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+
+class _Stage:
+    """Centralized batched queue + replica worker threads for one stage."""
+
+    def __init__(self, name: str, fn: Callable[[List[Any]], List[Any]],
+                 max_batch: int, replicas: int,
+                 on_done: Callable[["_Request", Any], None]):
+        self.name = name
+        self.fn = fn
+        self.max_batch = max_batch
+        self.on_done = on_done
+        self.q: "queue.Queue" = queue.Queue()
+        self.workers: List[threading.Thread] = []
+        self.batch_sizes: List[int] = []
+        self._stop = False
+        self._lock = threading.Lock()
+        for _ in range(replicas):
+            self.add_replica()
+
+    def add_replica(self) -> None:
+        t = threading.Thread(target=self._worker, daemon=True)
+        t.start()
+        self.workers.append(t)
+
+    def _worker(self) -> None:
+        while not self._stop:
+            try:
+                first = self.q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if first is None:
+                return
+            # batch everything already queued, up to max_batch (the
+            # paper's centralized batch-at-a-time discipline)
+            batch = [first]
+            while len(batch) < self.max_batch:
+                try:
+                    item = self.q.get_nowait()
+                except queue.Empty:
+                    break
+                if item is None:
+                    self.q.put(None)
+                    break
+                batch.append(item)
+            with self._lock:
+                self.batch_sizes.append(len(batch))
+            try:
+                outs = self.fn([r.payload for r in batch])
+            except Exception as e:  # noqa: BLE001 — a dead worker
+                # deadlocks the pipeline; surface the failure per-request
+                import traceback
+                print(f"[executor] stage {self.name} batch failed: {e!r}")
+                traceback.print_exc()
+                outs = [None] * len(batch)
+            for req, out in zip(batch, outs):
+                self.on_done(req, out)
+
+    def submit(self, req: _Request) -> None:
+        self.q.put(req)
+
+    def stop(self) -> None:
+        self._stop = True
+        for _ in self.workers:
+            self.q.put(None)
+
+
+class PipelineExecutor:
+    """Deploys a configured pipeline over real threads and jitted models.
+
+    Args:
+      pipeline: the DAG; conditional edges are sampled per request.
+      config: per-stage (hardware*, batch, replicas) — hardware is
+        informational on this CPU host; batch/replicas are enforced.
+      stage_fns: model_id -> callable(List[payload]) -> List[payload].
+
+    Join semantics: a request visits a stage at most once (same cap the
+    scale-factor computation uses); the first triggering parent routes it.
+    """
+
+    def __init__(self, pipeline: Pipeline, config: PipelineConfig,
+                 stage_fns: Dict[str, Callable[[List[Any]], List[Any]]],
+                 seed: int = 0):
+        self.pipeline = pipeline
+        self.config = config
+        self.rng = np.random.default_rng(seed)
+        self._rng_lock = threading.Lock()
+        self._lock = threading.Lock()
+        self._visited: Dict[int, set] = {}
+        self._inflight: Dict[int, int] = {}
+        self._sinks = set(pipeline.sinks())
+        self._children = {s: pipeline.children(s) for s in pipeline.stages}
+        self._stages: Dict[str, _Stage] = {}
+        for name, stage in pipeline.stages.items():
+            cfg = config[name]
+            self._stages[name] = _Stage(
+                name, stage_fns[stage.model_id], cfg.batch_size,
+                cfg.replicas,
+                on_done=lambda req, out, s=name: self._on_done(s, req, out))
+
+    def _coin(self, p: float) -> bool:
+        if p >= 1.0:
+            return True
+        with self._rng_lock:
+            return bool(self.rng.random() < p)
+
+    def _enqueue(self, stage: str, req: _Request) -> bool:
+        with self._lock:
+            seen = self._visited.setdefault(req.rid, set())
+            if stage in seen:
+                return False
+            seen.add(stage)
+            self._inflight[req.rid] = self._inflight.get(req.rid, 0) + 1
+        self._stages[stage].submit(req)
+        return True
+
+    def _on_done(self, stage: str, req: _Request, out: Any) -> None:
+        req.payload = out
+        for e in self._children[stage]:
+            if self._coin(e.probability):
+                self._enqueue(e.dst, req)
+        with self._lock:
+            self._inflight[req.rid] -= 1
+            finished = self._inflight[req.rid] == 0
+        if finished:
+            req.t_done = time.perf_counter()
+            req.done.set()
+
+    def inject(self, req: _Request) -> None:
+        routed = False
+        for e in self.pipeline.entry_edges():
+            if self._coin(e.probability):
+                routed |= self._enqueue(e.dst, req)
+        if not routed:
+            req.t_done = req.t_arrival
+            req.done.set()
+
+    def serve_trace(self, arrivals: np.ndarray, payload_fn,
+                    time_scale: float = 1.0,
+                    timeout_s: float = 300.0) -> np.ndarray:
+        """Replay `arrivals` (seconds, scaled by `time_scale`) against the
+        running pipeline; returns per-query latency (unscaled seconds)."""
+        arrivals = np.asarray(arrivals, dtype=np.float64) * time_scale
+        reqs: List[_Request] = []
+        t0 = time.perf_counter()
+        for i, t_arr in enumerate(arrivals):
+            now = time.perf_counter() - t0
+            if t_arr > now:
+                time.sleep(t_arr - now)
+            req = _Request(i, time.perf_counter(), payload_fn(i))
+            reqs.append(req)
+            self.inject(req)
+        deadline = time.perf_counter() + timeout_s
+        for req in reqs:
+            req.done.wait(max(0.0, deadline - time.perf_counter()))
+        return np.array([
+            (r.t_done - r.t_arrival) / time_scale if r.t_done else np.inf
+            for r in reqs])
+
+    def batch_stats(self) -> Dict[str, float]:
+        return {
+            s: (float(np.mean(st.batch_sizes)) if st.batch_sizes else 0.0)
+            for s, st in self._stages.items()
+        }
+
+    def scale(self, stage: str, replicas: int) -> None:
+        """Runtime replica scaling (scale-up only on the CPU executor)."""
+        cur = len(self._stages[stage].workers)
+        for _ in range(replicas - cur):
+            self._stages[stage].add_replica()
+
+    def shutdown(self) -> None:
+        for st in self._stages.values():
+            st.stop()

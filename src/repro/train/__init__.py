@@ -1,0 +1,2 @@
+from repro.train.optimizer import AdamW, adamw  # noqa: F401
+from repro.train.trainer import Trainer, make_train_step  # noqa: F401

@@ -1,0 +1,66 @@
+"""Pytree checkpointing to .npz (flat path-keyed arrays).
+
+bfloat16 leaves are stored as uint16 bit patterns (numpy's npz format has
+no native bf16 cast path) with a ``__bf16__`` key prefix and viewed back
+on restore — lossless.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_PREFIX = "__bf16__"
+
+
+def _flatten(tree: Any):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            key = _BF16_PREFIX + key
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+
+
+def _decode(key: str, arr: np.ndarray):
+    if key.startswith(_BF16_PREFIX):
+        return key[len(_BF16_PREFIX):], arr.view(jnp.bfloat16)
+    return key, arr
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    data = np.load(path)
+    stored = dict(_decode(k, data[k]) for k in data.files)
+    flat = {}
+    for path_, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+        flat["/".join(str(p) for p in path_)] = leaf
+    if set(stored) != set(flat):
+        missing = set(flat) - set(stored)
+        extra = set(stored) - set(flat)
+        raise ValueError(f"checkpoint mismatch: missing={missing} "
+                         f"extra={extra}")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path_, leaf in leaves_with_paths:
+        key = "/".join(str(p) for p in path_)
+        arr = stored[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(np.asarray(arr).astype(leaf.dtype)
+                          if arr.dtype != leaf.dtype else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

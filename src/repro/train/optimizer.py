@@ -1,0 +1,89 @@
+"""AdamW in pure JAX (pytree-structured state, shardable like params).
+
+``moment_dtype`` lets the very large assigned configs (deepseek-v3-671b,
+jamba-1.5-large) keep first/second moments in bf16 so optimizer state fits
+the per-chip HBM budget at 256-512-way sharding (noted in EXPERIMENTS.md
+§Dry-run); defaults to fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Optional[str] = None     # None => fp32
+    grad_clip: float = 1.0
+
+    def _mdtype(self):
+        return jnp.dtype(self.moment_dtype) if self.moment_dtype else \
+            jnp.float32
+
+    def init(self, params) -> AdamWState:
+        md = self._mdtype()
+        zeros = lambda p: jnp.zeros(p.shape, md)  # noqa: E731
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(self, params, state: AdamWState, grads
+               ) -> Tuple[Any, AdamWState]:
+        md = self._mdtype()
+        step = state.step + 1
+
+        if self.grad_clip > 0:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: g * scale.astype(g.dtype), grads)
+
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - self.lr * delta
+            return p_new.astype(p.dtype), m_new.astype(md), v_new.astype(md)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v)
+
+
+def adamw(lr: float = 3e-4, **kw) -> AdamW:
+    return AdamW(lr=lr, **kw)

@@ -1,0 +1,7 @@
+from repro.workload.generator import (  # noqa: F401
+    gamma_trace,
+    time_varying_trace,
+    cv_ramp_trace,
+    rate_ramp_trace,
+)
+from repro.workload.traces import autoscale_derived_trace  # noqa: F401

@@ -1,0 +1,67 @@
+"""Shared fixtures: a small synthetic pipeline + analytic profiles.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device;
+only launch/dryrun.py forces 512 placeholder devices.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import Edge, Pipeline, SOURCE, Stage, linear_pipeline
+from repro.core.profiler import ModelSpec, ProfileStore, profile_model_analytic
+from repro.workload.generator import gamma_trace
+
+
+def _store(specs):
+    store = ProfileStore()
+    for s in specs:
+        store.add(profile_model_analytic(s))
+    return store
+
+
+@pytest.fixture(scope="session")
+def image_pipeline():
+    """Image Processing motif: preprocess -> classifier (paper Fig. 2a)."""
+    prep = ModelSpec("prep", flops_per_query=2e9, weight_bytes=1e6,
+                     act_bytes_per_query=1e6, parallelizable=False)
+    cls = ModelSpec("res152", flops_per_query=2.3e10, weight_bytes=1.2e8,
+                    act_bytes_per_query=5e7)
+    pipe = linear_pipeline("image-processing", ["prep", "res152"])
+    return pipe, _store([prep, cls])
+
+
+@pytest.fixture(scope="session")
+def social_pipeline():
+    """Social Media motif: conditional DAG with a translation branch."""
+    specs = [
+        ModelSpec("lang_id", 5e9, 4e7, 1e6),
+        ModelSpec("translate", 4e10, 2e8, 2e7),
+        ModelSpec("img_cls", 2.3e10, 1.2e8, 5e7),
+        ModelSpec("categorize", 8e9, 6e7, 2e6),
+    ]
+    stages = {
+        "lang_id": Stage("lang_id", "lang_id"),
+        "translate": Stage("translate", "translate"),
+        "img_cls": Stage("img_cls", "img_cls"),
+        "categorize": Stage("categorize", "categorize"),
+    }
+    edges = [
+        Edge(SOURCE, "lang_id"),
+        Edge(SOURCE, "img_cls"),
+        Edge("lang_id", "translate", probability=0.4),
+        Edge("translate", "categorize"),
+        Edge("lang_id", "categorize", probability=0.6),
+        Edge("img_cls", "categorize"),
+    ]
+    pipe = Pipeline("social-media", stages, edges)
+    return pipe, _store(specs)
+
+
+@pytest.fixture(scope="session")
+def sample_trace():
+    return gamma_trace(lam=100.0, cv=1.0, duration_s=60.0, seed=0)
+
+
+@pytest.fixture(scope="session")
+def bursty_trace():
+    return gamma_trace(lam=100.0, cv=4.0, duration_s=60.0, seed=1)

@@ -1,0 +1,94 @@
+"""Coarse-grained and DS2 baselines (paper §6, Fig. 14)."""
+
+import numpy as np
+import pytest
+
+from repro.baselines.coarse_grained import (
+    CGPlanner,
+    CGTuner,
+    run_cg_tuner_offline,
+)
+from repro.baselines.ds2 import DS2Tuner, run_ds2
+from repro.core.estimator import Estimator
+from repro.core.planner import Planner
+from repro.serving.cluster import LiveClusterSim
+from repro.workload.generator import gamma_trace, rate_ramp_trace
+
+SLO = 0.15
+
+
+def test_cg_peak_provisions_more_than_mean(image_pipeline, bursty_trace):
+    pipe, store = image_pipeline
+    cg = CGPlanner(pipe, store)
+    mean = cg.plan(bursty_trace, SLO, strategy="mean")
+    peak = cg.plan(bursty_trace, SLO, strategy="peak")
+    assert peak.unit_replicas >= mean.unit_replicas
+    assert peak.cost_per_hr >= mean.cost_per_hr
+
+
+def test_cg_uniform_batch_and_replicas(image_pipeline, sample_trace):
+    """CG treats the pipeline as one unit: same batch & replicas per stage."""
+    pipe, store = image_pipeline
+    plan = CGPlanner(pipe, store).plan(sample_trace, SLO, strategy="peak")
+    batches = {c.batch_size for c in plan.config.stage_configs.values()}
+    replicas = {c.replicas for c in plan.config.stage_configs.values()}
+    assert len(batches) == 1 and len(replicas) == 1
+
+
+def test_cg_peak_meets_slo(image_pipeline, sample_trace):
+    pipe, store = image_pipeline
+    plan = CGPlanner(pipe, store).plan(sample_trace, SLO, strategy="peak")
+    est = Estimator(pipe, store)
+    assert est.simulate(plan.config, sample_trace).slo_miss_rate(SLO) < 0.02
+
+
+def test_cg_infeasible_slo():
+    from repro.core.profiler import ModelSpec, ProfileStore, \
+        profile_model_analytic
+    from repro.core.pipeline import linear_pipeline
+    pipe = linear_pipeline("p", ["m"])
+    store = ProfileStore()
+    store.add(profile_model_analytic(ModelSpec("m", 1e12, 1e9, 1e8)))
+    plan = CGPlanner(pipe, store).plan(np.arange(10.0), slo=1e-5)
+    assert not plan.feasible
+
+
+def test_cg_tuner_reacts_slower_than_inferline(image_pipeline):
+    """Fig. 7: CG tuning reacts on rate only, with longer activation."""
+    pipe, store = image_pipeline
+    sample = gamma_trace(150, 1.0, 60, seed=0)
+    plan = CGPlanner(pipe, store).plan(sample, SLO, strategy="mean")
+    tuner = CGTuner(plan)
+    ramp = rate_ramp_trace(150, 300, 1.0, pre_s=30, ramp_s=20, post_s=60,
+                           seed=1)
+    sched = run_cg_tuner_offline(tuner, pipe, ramp)
+    ups = [t for evs in sched.values() for t, d in evs if d > 0]
+    assert ups, "CG tuner must eventually scale up"
+    # whole-unit replication: every stage scales identically
+    lens = {len(v) for v in sched.values()}
+    assert len(lens) == 1
+
+
+def test_ds2_provisions_for_average(image_pipeline):
+    """DS2 jumps to rate-proportional parallelism with no burst slack."""
+    pipe, store = image_pipeline
+    hw = {s: "tpu-v5e-1" for s in pipe.stages}
+    hw = {s: ("cpu-1" if "prep" in s else "tpu-v5e-1") for s in pipe.stages}
+    tuner = DS2Tuner(pipe, store, hw)
+    smooth = gamma_trace(100, 1.0, 120, seed=2)
+    result = run_ds2(tuner, store, smooth, slo=SLO)
+    assert result.miss_rate < 0.1  # fine under uniform load
+
+
+def test_ds2_misses_slo_under_bursty(image_pipeline):
+    """Fig. 14a: as CV grows DS2's miss rate climbs; InferLine stays low."""
+    pipe, store = image_pipeline
+    hw = {s: ("cpu-1" if "prep" in s else "tpu-v5e-1") for s in pipe.stages}
+    bursty = gamma_trace(100, 4.0, 120, seed=3)
+    ds2 = run_ds2(DS2Tuner(pipe, store, hw), store, bursty, slo=SLO)
+
+    sample = gamma_trace(100, 4.0, 60, seed=4)
+    il = Planner(pipe, store).plan(sample, SLO)
+    est = Estimator(pipe, store)
+    il_miss = est.simulate(il.config, bursty).slo_miss_rate(SLO)
+    assert ds2.miss_rate > il_miss

@@ -1,0 +1,107 @@
+"""Traffic envelopes: exact values + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.envelope import (
+    TrafficEnvelope,
+    envelope_windows,
+    max_queries_in_window,
+)
+
+
+def test_windows_double_up_to_cap():
+    w = envelope_windows(0.1, 60.0)
+    assert w[0] == pytest.approx(0.1)
+    assert w[-1] == pytest.approx(60.0)
+    ratios = w[1:-1] / w[:-2]
+    assert np.allclose(ratios, 2.0)
+
+
+def test_max_queries_exact():
+    arr = np.array([0.0, 0.1, 0.2, 5.0, 5.01, 5.02, 5.03])
+    assert max_queries_in_window(arr, 0.5) == 4    # the 5.0x cluster
+    assert max_queries_in_window(arr, 10.0) == 7
+    assert max_queries_in_window(arr, 0.05) == 4   # all of [5.0, 5.05)
+    assert max_queries_in_window(arr, 0.012) == 2
+    assert max_queries_in_window(arr, 0.005) == 1
+
+
+def test_unsorted_rejected():
+    with pytest.raises(ValueError):
+        max_queries_in_window(np.array([1.0, 0.5]), 1.0)
+
+
+def test_envelope_detects_burst_not_rate():
+    """Same mean rate, one has a tight burst: only small-window counts
+    differ — exactly the §5 motivation."""
+    smooth = np.arange(0, 60, 0.1)                      # 10 qps uniform
+    bursty = np.concatenate([np.arange(0, 30, 0.1),
+                             30.0 + np.arange(100) * 1e-3,
+                             np.arange(31, 50.9, 0.1)])  # same total-ish
+    ts = 0.05
+    e_s = TrafficEnvelope.from_trace(smooth, ts)
+    e_b = TrafficEnvelope.from_trace(bursty, ts)
+    exceeded, r_max = e_s.exceeded_by(e_b)
+    assert exceeded
+    assert r_max > 100  # the burst rate, far above the 10 qps mean
+
+
+def test_exceeded_by_self_is_false():
+    arr = np.sort(np.random.default_rng(0).uniform(0, 60, 500))
+    env = TrafficEnvelope.from_trace(arr, 0.05)
+    exceeded, r = env.exceeded_by(env)
+    assert not exceeded and r == 0.0
+
+
+def test_window_mismatch_raises():
+    arr = np.arange(0, 10, 0.1)
+    e1 = TrafficEnvelope.from_trace(arr, 0.05)
+    e2 = TrafficEnvelope.from_trace(arr, 0.07)
+    with pytest.raises(ValueError):
+        e1.exceeded_by(e2)
+
+
+# ---------------------------------------------------------------- properties
+
+arrivals_strategy = st.lists(
+    st.floats(min_value=0.0, max_value=100.0, allow_nan=False),
+    min_size=1, max_size=300,
+).map(lambda xs: np.sort(np.asarray(xs)))
+
+
+@given(arrivals_strategy, st.floats(min_value=1e-3, max_value=50.0))
+@settings(max_examples=60, deadline=None)
+def test_count_monotone_in_window(arr, w):
+    """Envelope counts are nondecreasing in window width."""
+    c1 = max_queries_in_window(arr, w)
+    c2 = max_queries_in_window(arr, 2 * w)
+    assert c2 >= c1
+
+
+@given(arrivals_strategy, st.floats(min_value=1e-3, max_value=25.0),
+       st.floats(min_value=1e-3, max_value=25.0))
+@settings(max_examples=60, deadline=None)
+def test_count_subadditive(arr, w1, w2):
+    """Network-calculus sub-additivity: q(w1+w2) <= q(w1) + q(w2)."""
+    assert max_queries_in_window(arr, w1 + w2) <= \
+        max_queries_in_window(arr, w1) + max_queries_in_window(arr, w2)
+
+
+@given(arrivals_strategy, st.floats(min_value=1e-3, max_value=50.0))
+@settings(max_examples=60, deadline=None)
+def test_count_bounds(arr, w):
+    c = max_queries_in_window(arr, w)
+    assert 1 <= c <= arr.size
+
+
+@given(arrivals_strategy)
+@settings(max_examples=40, deadline=None)
+def test_superset_trace_never_smaller(arr):
+    """Adding arrivals can only raise (or keep) every envelope count."""
+    env = TrafficEnvelope.from_trace(arr, 0.05)
+    extra = np.sort(np.concatenate([arr, arr + 0.01]))
+    env2 = TrafficEnvelope.from_trace(extra, 0.05)
+    assert np.all(env2.max_counts >= env.max_counts)

@@ -1,0 +1,276 @@
+"""Estimator: discrete-event simulation against analytically-known cases."""
+
+import numpy as np
+import pytest
+
+from repro.core.estimator import DEFAULT_RPC_DELAY_S, Estimator, _simulate_stage
+from repro.core.pipeline import (
+    SOURCE,
+    Edge,
+    Pipeline,
+    PipelineConfig,
+    Stage,
+    StageConfig,
+    linear_pipeline,
+)
+from repro.core.profiler import ModelProfile, ProfileStore
+
+
+def _const_profile(model_id: str, latency: float, hw: str = "cpu-1",
+                   batches=(1, 2, 4, 8, 16, 32)):
+    """Batch-size-independent latency (pure service-time stage)."""
+    return ModelProfile(model_id, {(hw, b): latency for b in batches},
+                        tuple(batches))
+
+
+def _linear_profile(model_id: str, per_query: float, hw: str = "cpu-1",
+                    batches=(1, 2, 4, 8, 16, 32)):
+    """Latency proportional to batch (serial stage)."""
+    return ModelProfile(model_id, {(hw, b): per_query * b for b in batches},
+                        tuple(batches))
+
+
+def _single_stage(latency: float = 0.01, linear: bool = False):
+    pipe = linear_pipeline("one", ["m"], {"m": ["cpu-1"]})
+    store = ProfileStore()
+    prof = _linear_profile("m", latency) if linear else _const_profile(
+        "m", latency)
+    store.add(prof)
+    return pipe, store
+
+
+def test_idle_system_latency_is_service_time():
+    """Widely-spaced arrivals: latency == batch-1 latency + rpc hops."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", 1, 1)})
+    arrivals = np.arange(10) * 10.0  # far apart
+    res = est.simulate(cfg, arrivals)
+    expect = 0.01 + 2 * DEFAULT_RPC_DELAY_S  # in-hop + reply-hop
+    np.testing.assert_allclose(res.latency, expect, rtol=1e-9)
+
+
+def test_queueing_delay_single_server():
+    """Burst of N at t=0, batch=1, 1 replica: query i waits i*service."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", 1, 1)})
+    arrivals = np.zeros(5)
+    res = est.simulate(cfg, arrivals)
+    lat = np.sort(res.latency)
+    base = 2 * DEFAULT_RPC_DELAY_S
+    np.testing.assert_allclose(
+        lat, base + 0.01 * np.arange(1, 6), rtol=1e-9)
+
+
+def test_batching_absorbs_burst():
+    """Same burst with batch=8: one batch, everyone done at once."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", 8, 1)})
+    arrivals = np.zeros(5)
+    res = est.simulate(cfg, arrivals)
+    assert res.latency.max() == pytest.approx(
+        0.01 + 2 * DEFAULT_RPC_DELAY_S, rel=1e-9)
+    assert list(res.per_stage_batches["s0_m"]) == [5]
+
+
+def test_replication_divides_queueing():
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    arrivals = np.zeros(6)
+    cfg1 = PipelineConfig({"s0_m": StageConfig("cpu-1", 1, 1)})
+    cfg3 = PipelineConfig({"s0_m": StageConfig("cpu-1", 1, 3)})
+    p99_1 = est.simulate(cfg1, arrivals).p99
+    p99_3 = est.simulate(cfg3, arrivals).p99
+    assert p99_3 < p99_1
+
+
+def test_two_stage_latency_adds():
+    pipe = linear_pipeline("two", ["a", "b"], {"a": ["cpu-1"], "b": ["cpu-1"]})
+    store = ProfileStore()
+    store.add(_const_profile("a", 0.01))
+    store.add(_const_profile("b", 0.02))
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_a": StageConfig("cpu-1", 1, 1),
+                          "s1_b": StageConfig("cpu-1", 1, 1)})
+    res = est.simulate(cfg, np.array([0.0, 50.0]))
+    expect = 0.01 + 0.02 + 3 * DEFAULT_RPC_DELAY_S
+    np.testing.assert_allclose(res.latency, expect, rtol=1e-9)
+
+
+def test_conditional_routing_skips_stage():
+    """p=0.5 branch: ~half the queries pay the expensive stage."""
+    stages = {"gate": Stage("gate", "gate", ("cpu-1",)),
+              "heavy": Stage("heavy", "heavy", ("cpu-1",))}
+    edges = [Edge(SOURCE, "gate"), Edge("gate", "heavy", probability=0.5)]
+    pipe = Pipeline("cond", stages, edges)
+    store = ProfileStore()
+    store.add(_const_profile("gate", 0.001))
+    store.add(_const_profile("heavy", 0.1))
+    est = Estimator(pipe, store, seed=7)
+    cfg = PipelineConfig({"gate": StageConfig("cpu-1", 1, 4),
+                          "heavy": StageConfig("cpu-1", 1, 4)})
+    arrivals = np.arange(200) * 1.0
+    res = est.simulate(cfg, arrivals)
+    frac_heavy = float((res.latency > 0.05).mean())
+    assert 0.35 < frac_heavy < 0.65
+    # routing is deterministic across repeat simulations (fixed seed)
+    res2 = est.simulate(cfg, arrivals)
+    np.testing.assert_array_equal(res.latency, res2.latency)
+
+
+def test_and_join_waits_for_both_parents():
+    stages = {"fast": Stage("fast", "fast", ("cpu-1",)),
+              "slow": Stage("slow", "slow", ("cpu-1",)),
+              "join": Stage("join", "join", ("cpu-1",))}
+    edges = [Edge(SOURCE, "fast"), Edge(SOURCE, "slow"),
+             Edge("fast", "join"), Edge("slow", "join")]
+    pipe = Pipeline("join", stages, edges)
+    store = ProfileStore()
+    store.add(_const_profile("fast", 0.001))
+    store.add(_const_profile("slow", 0.05))
+    store.add(_const_profile("join", 0.001))
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({s: StageConfig("cpu-1", 1, 1) for s in stages})
+    res = est.simulate(cfg, np.array([0.0]))
+    # join cannot start before the slow branch delivers
+    assert res.latency[0] >= 0.05 + 0.001
+
+
+def test_service_time_longest_path(social_pipeline):
+    pipe, store = social_pipeline
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({s: StageConfig("tpu-v5e-1", 1, 1)
+                          for s in pipe.stages})
+    st = est.service_time(cfg)
+    manual = sum(
+        store.get(m).batch_latency("tpu-v5e-1", 1)
+        for m in ("lang_id", "translate", "categorize"))
+    assert st == pytest.approx(manual + 4 * DEFAULT_RPC_DELAY_S)
+
+
+def test_dynamic_replica_add_event():
+    """A replica added mid-burst speeds the tail of the queue."""
+    ready = np.zeros(10)
+    order = np.arange(10)
+    lut = np.array([0.0, 1.0])  # batch-1 only, 1 s
+    done_static, _ = _simulate_stage(ready, order, lut, 1, 1)
+    done_scaled, _ = _simulate_stage(ready, order, lut, 1, 1,
+                                     replica_events=[(2.0, +1)])
+    assert done_scaled.max() < done_static.max()
+
+
+def test_dynamic_replica_remove_event():
+    ready = np.arange(10) * 0.1
+    order = np.arange(10)
+    lut = np.array([0.0, 0.5])
+    done_2, _ = _simulate_stage(ready, order, lut, 1, 2)
+    done_dropped, _ = _simulate_stage(ready, order, lut, 1, 2,
+                                      replica_events=[(0.2, -1)])
+    assert done_dropped.max() >= done_2.max()
+
+
+def test_windowed_miss_rate_shapes():
+    pipe, store = _single_stage(0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", 1, 1)})
+    res = est.simulate(cfg, np.arange(100) * 0.1)
+    edges, rates = res.windowed_miss_rate(slo=0.02, window_s=1.0)
+    assert edges.shape == rates.shape
+    assert np.nanmax(rates) <= 1.0 and np.nanmin(rates) >= 0.0
+
+
+def test_timeout_batching_tradeoff():
+    """Beyond-paper timeout batching: larger batches (throughput) at the
+    cost of head latency; zero timeout reproduces the paper's greedy
+    batching exactly."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    arrivals = np.arange(200) * 0.004      # 250 qps, spaced
+    greedy = PipelineConfig({"s0_m": StageConfig("cpu-1", 8, 1)})
+    held = PipelineConfig(
+        {"s0_m": StageConfig("cpu-1", 8, 1, timeout_s=0.05)})
+    rg = est.simulate(greedy, arrivals)
+    rh = est.simulate(held, arrivals)
+    assert rh.per_stage_batches["s0_m"].mean() > \
+        rg.per_stage_batches["s0_m"].mean()
+    # head latency grows by at most the timeout (plus service)
+    assert rh.latency.max() <= rg.latency.max() + 0.05 + 0.01 + 1e-9
+    # explicit zero-timeout config is bit-identical to the default
+    z = PipelineConfig({"s0_m": StageConfig("cpu-1", 8, 1, timeout_s=0.0)})
+    np.testing.assert_array_equal(est.simulate(z, arrivals).latency,
+                                  rg.latency)
+
+
+def test_timeout_batching_full_batch_cuts_wait_short():
+    """If max_batch queries arrive before the timeout, dispatch at fill."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    arrivals = np.arange(8) * 0.001       # all 8 within 7 ms
+    cfg = PipelineConfig(
+        {"s0_m": StageConfig("cpu-1", 8, 1, timeout_s=1.0)})
+    res = est.simulate(cfg, arrivals)
+    assert list(res.per_stage_batches["s0_m"]) == [8]
+    # dispatched at the 8th arrival (7 ms), not at the 1 s timeout
+    assert res.latency.max() < 0.05
+
+
+# ---------------------------------------------------------------- properties
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+arrivals_st = st.lists(
+    st.floats(min_value=0.0, max_value=30.0, allow_nan=False),
+    min_size=1, max_size=120,
+).map(lambda xs: np.sort(np.asarray(xs)))
+
+
+@given(arrivals_st, st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=8))
+@settings(max_examples=40, deadline=None)
+def test_latency_lower_bound(arr, replicas, batch):
+    """No query finishes faster than its batch-1 service + rpc hops."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", batch, replicas)})
+    res = est.simulate(cfg, arr)
+    assert res.latency.min() >= 0.01 + 2 * DEFAULT_RPC_DELAY_S - 1e-12
+
+
+@given(arrivals_st, st.floats(min_value=0.1, max_value=100.0))
+@settings(max_examples=40, deadline=None)
+def test_time_shift_invariance(arr, shift):
+    """Shifting every arrival by a constant shifts nothing in latency."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", 4, 2)})
+    a = est.simulate(cfg, arr).latency
+    b = est.simulate(cfg, arr + shift).latency
+    np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-12)
+
+
+@given(arrivals_st)
+@settings(max_examples=40, deadline=None)
+def test_all_queries_complete(arr):
+    """Every query gets a finite completion with >=1 replica."""
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", 2, 1)})
+    res = est.simulate(cfg, arr)
+    assert np.isfinite(res.latency).all()
+    assert res.num_queries == arr.size
+
+
+@given(arrivals_st, st.integers(min_value=1, max_value=16))
+@settings(max_examples=40, deadline=None)
+def test_batch_sizes_respect_max(arr, batch):
+    pipe, store = _single_stage(latency=0.01)
+    est = Estimator(pipe, store)
+    cfg = PipelineConfig({"s0_m": StageConfig("cpu-1", batch, 1)})
+    res = est.simulate(cfg, arr)
+    bs = res.per_stage_batches["s0_m"]
+    assert bs.max() <= batch
+    assert bs.sum() == arr.size

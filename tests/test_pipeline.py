@@ -1,0 +1,100 @@
+"""Pipeline DAG structure, scale factors, config cost accounting."""
+
+import pytest
+
+from repro.core.hardware import HARDWARE_MENU, cheaper_hardware, get_hardware
+from repro.core.pipeline import (
+    SOURCE,
+    Edge,
+    Pipeline,
+    PipelineConfig,
+    Stage,
+    StageConfig,
+    linear_pipeline,
+)
+
+
+def test_linear_pipeline_structure():
+    p = linear_pipeline("p", ["a", "b", "c"])
+    assert p.toposort() == ["s0_a", "s1_b", "s2_c"]
+    assert p.sinks() == ["s2_c"]
+    assert [e.src for e in p.entry_edges()] == [SOURCE]
+
+
+def test_scale_factors_linear():
+    p = linear_pipeline("p", ["a", "b"])
+    s = p.scale_factors()
+    assert s == {"s0_a": 1.0, "s1_b": 1.0}
+
+
+def test_scale_factors_conditional(social_pipeline):
+    pipe, _ = social_pipeline
+    s = pipe.scale_factors()
+    assert s["lang_id"] == 1.0
+    assert s["img_cls"] == 1.0
+    assert s["translate"] == pytest.approx(0.4)
+    # categorize: 0.4 (via translate) + 0.6 (direct) + 1.0 (img) capped at 1
+    assert s["categorize"] == 1.0
+
+
+def test_cycle_detection():
+    stages = {"a": Stage("a", "m"), "b": Stage("b", "m")}
+    edges = [Edge(SOURCE, "a"), Edge("a", "b"), Edge("b", "a")]
+    with pytest.raises(ValueError, match="cycle"):
+        Pipeline("bad", stages, edges)
+
+
+def test_unknown_edge_target():
+    with pytest.raises(ValueError):
+        Pipeline("bad", {"a": Stage("a", "m")},
+                 [Edge(SOURCE, "a"), Edge("a", "ghost")])
+
+
+def test_bad_edge_probability():
+    with pytest.raises(ValueError):
+        Edge(SOURCE, "a", probability=0.0)
+    with pytest.raises(ValueError):
+        Edge(SOURCE, "a", probability=1.5)
+
+
+def test_longest_path(social_pipeline):
+    pipe, _ = social_pipeline
+    path = pipe.longest_path_stages()
+    assert path == ["lang_id", "translate", "categorize"]
+
+
+def test_config_cost():
+    cfg = PipelineConfig({
+        "a": StageConfig("tpu-v5e-1", 8, 2),
+        "b": StageConfig("cpu-1", 1, 4),
+    })
+    expect = 2 * get_hardware("tpu-v5e-1").cost_per_hr + \
+        4 * get_hardware("cpu-1").cost_per_hr
+    assert cfg.cost_per_hr() == pytest.approx(expect)
+
+
+def test_config_copy_is_deep():
+    cfg = PipelineConfig({"a": StageConfig("cpu-1", 1, 1)})
+    cp = cfg.copy()
+    cp["a"].replicas = 9
+    assert cfg["a"].replicas == 1
+
+
+def test_stageconfig_validation():
+    with pytest.raises(KeyError):
+        StageConfig("gpu-v100", 1, 1)
+    with pytest.raises(ValueError):
+        StageConfig("cpu-1", 0, 1)
+
+
+def test_hardware_menu_latency_ordering():
+    """§9 assumption: total ordering of latency across batch sizes."""
+    costs = [h.cost_per_hr for h in HARDWARE_MENU]
+    assert costs == sorted(costs, reverse=True)
+
+
+def test_cheaper_hardware():
+    cheaper = cheaper_hardware("tpu-v5e-4")
+    assert "tpu-v5e-1" in cheaper and "cpu-1" in cheaper
+    assert "tpu-v5e-8" not in cheaper
+    assert cheaper_hardware("cpu-1") == ()

@@ -1,0 +1,128 @@
+"""Roofline analysis: HLO collective parsing + term arithmetic."""
+
+import pytest
+
+from repro.core.hardware import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.analysis import (
+    RooflineReport,
+    collective_bytes_from_hlo,
+    model_flops_estimate,
+    roofline_terms,
+)
+
+HLO = """
+HloModule jit_train_step
+
+ENTRY %main {
+  %p0 = bf16[256,4096,2048]{2,1,0} parameter(0)
+  %ag = bf16[256,4096,2048]{2,1,0} all-gather(%p0), dimensions={0}
+  %ar = f32[1024,512]{1,0} all-reduce(%x), to_apply=%add
+  %ar2.1 = f32[128]{0} all-reduce(%y), to_apply=%add
+  %rs = bf16[16,1024]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = bf16[8,64,128]{2,1,0} all-to-all(%w), dimensions={0}
+  %cp = u32[4]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ags = (bf16[2,2]{1,0}, bf16[2,2]{1,0}) all-gather-start(%q)
+  %normal = f32[512,512]{1,0} dot(%a, %b)
+  ROOT %t = tuple(%ar)
+}
+"""
+
+
+def test_collective_parsing_kinds():
+    got = collective_bytes_from_hlo(HLO)
+    assert got["all-gather"] == 256 * 4096 * 2048 * 2 + 2 * 2 * 2 * 2
+    assert got["all-reduce"] == 1024 * 512 * 4 + 128 * 4
+    assert got["reduce-scatter"] == 16 * 1024 * 2
+    assert got["all-to-all"] == 8 * 64 * 128 * 2
+    assert got["collective-permute"] == 4 * 4
+
+
+def test_done_lines_not_double_counted():
+    hlo = """
+  %s = bf16[128,128]{1,0} all-gather-start(%p)
+  %d = bf16[128,128]{1,0} all-gather-done(%s)
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-gather"] == 128 * 128 * 2
+
+
+def test_non_collective_ops_ignored():
+    hlo = "%x = f32[64]{0} add(%a, %b)\n%y = f32[64]{0} dot(%a, %b)"
+    assert sum(collective_bytes_from_hlo(hlo).values()) == 0
+
+
+def test_roofline_terms_arithmetic():
+    """hlo_* values are PER-DEVICE (cost_analysis describes the SPMD
+    partitioned program), so terms divide by a single chip's peak."""
+    rep = RooflineReport(
+        arch="a", shape="s", mesh="single", chips=256,
+        hlo_flops=1e15, hlo_bytes=1e12, collective_bytes=1e10,
+        collectives_by_kind={}, model_flops=0.2e18)
+    assert rep.t_compute == pytest.approx(1e15 / PEAK_FLOPS_BF16)
+    assert rep.t_memory == pytest.approx(1e12 / HBM_BW)
+    assert rep.t_collective == pytest.approx(1e10 / ICI_BW)
+    assert rep.bottleneck == "compute"
+    assert rep.total_hlo_flops == pytest.approx(256e15)
+    assert rep.useful_flops_ratio == pytest.approx(0.2e18 / 256e15)
+    assert rep.step_time == rep.t_compute
+
+
+def test_roofline_analytic_floors():
+    """Scan bodies are counted once by cost_analysis; the analytic floors
+    (model_flops/chips, analytic_bytes) take over when larger."""
+    rep = RooflineReport(
+        arch="a", shape="s", mesh="single", chips=256,
+        hlo_flops=1e12, hlo_bytes=1e9, collective_bytes=0.0,
+        collectives_by_kind={}, model_flops=2.56e18,
+        analytic_bytes=5e12)
+    assert rep.t_compute == pytest.approx(1e16 / PEAK_FLOPS_BF16)
+    assert rep.t_memory == pytest.approx(5e12 / HBM_BW)
+
+
+def test_loop_trip_count_correction():
+    """Collectives inside scan bodies are multiplied by the trip count."""
+    from repro.roofline.analysis import collective_bytes_from_hlo
+    hlo = """
+HloModule m
+
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%x), to_apply=%add
+}
+
+%cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %limit = s32[] constant(12)
+  %cmp = pred[] compare(%i, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %w = (s32[], f32[64]) while(%init), condition=%cond.1, body=%body.1
+  %ar2 = f32[128]{0} all-reduce(%y), to_apply=%add
+}
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-reduce"] == 12 * 64 * 4 + 128 * 4
+
+
+def test_bottleneck_switches():
+    rep = RooflineReport("a", "s", "m", 1, hlo_flops=1.0, hlo_bytes=1e12,
+                         collective_bytes=0.0, collectives_by_kind={},
+                         model_flops=1.0)
+    assert rep.bottleneck == "memory"
+    rep2 = RooflineReport("a", "s", "m", 1, hlo_flops=1.0, hlo_bytes=1.0,
+                          collective_bytes=1e12, collectives_by_kind={},
+                          model_flops=1.0)
+    assert rep2.bottleneck == "collective"
+
+
+def test_model_flops_estimate():
+    assert model_flops_estimate(1e9, 1e6, "train") == 6e15
+    assert model_flops_estimate(1e9, 1e6, "decode") == 2e15
+
+
+def test_roofline_terms_from_cost_analysis():
+    rep = roofline_terms("a", "s", "single", 4,
+                         cost_analysis={"flops": 100.0,
+                                        "bytes accessed": 50.0},
+                         hlo_text=HLO, model_flops=90.0)
+    assert rep.hlo_flops == 100.0
+    assert rep.collective_bytes > 0

@@ -1,0 +1,81 @@
+"""Live-cluster simulation + frontends + estimator fidelity (Fig. 8/13)."""
+
+import numpy as np
+import pytest
+
+from repro.core.estimator import Estimator
+from repro.core.planner import Planner
+from repro.core.tuner import Tuner, TunerPlanInfo, run_tuner_offline
+from repro.serving.cluster import LiveClusterSim
+from repro.serving.frontends import FRONTENDS
+from repro.workload.generator import gamma_trace
+
+SLO = 0.15
+
+
+def test_cost_timeline_integrates(image_pipeline):
+    pipe, store = image_pipeline
+    sample = gamma_trace(100, 1.0, 60, seed=0)
+    res = Planner(pipe, store).plan(sample, SLO)
+    sim = LiveClusterSim(pipe, store, res.config, SLO)
+    run = sim.run(sample)
+    # static config: cost == config cost for the whole run
+    assert run.mean_cost_per_hr() == pytest.approx(
+        res.config.cost_per_hr(), rel=1e-6)
+    expected_total = res.config.cost_per_hr() * sample.max() / 3600.0
+    assert run.total_cost() == pytest.approx(expected_total, rel=1e-6)
+
+
+def test_tuned_run_cost_reflects_scaling(image_pipeline):
+    pipe, store = image_pipeline
+    sample = gamma_trace(100, 1.0, 60, seed=0)
+    res = Planner(pipe, store).plan(sample, SLO)
+    est = Estimator(pipe, store)
+    info = TunerPlanInfo.from_plan(pipe, res.config, store, sample,
+                                   est.service_time(res.config))
+    # double the traffic: tuner scales up => mean cost above static
+    heavy = gamma_trace(220, 1.0, 120, seed=1)
+    sim = LiveClusterSim(pipe, store, res.config, SLO)
+    tuned = sim.run(heavy, schedule_fn=lambda arr: run_tuner_offline(
+        Tuner(info), arr))
+    static = sim.run(heavy)
+    assert tuned.mean_cost_per_hr() > static.mean_cost_per_hr()
+    assert tuned.miss_rate < static.miss_rate
+
+
+def test_estimator_fidelity_p99_close_to_replay(image_pipeline):
+    """Fig. 8 analogue: the planning-time estimate on the sample trace is
+    close to the 'measured' replay on an independent same-law trace."""
+    pipe, store = image_pipeline
+    sample = gamma_trace(150, 4.0, 60, seed=2)
+    res = Planner(pipe, store).plan(sample, SLO)
+    est = Estimator(pipe, store)
+    replay = gamma_trace(150, 4.0, 60, seed=77)
+    p99_est = res.estimated_p99
+    p99_meas = est.simulate(res.config, replay).p99
+    assert p99_meas <= SLO * 1.3
+    assert abs(p99_meas - p99_est) < 0.5 * SLO
+
+
+def test_frontend_overheads_ordered(image_pipeline):
+    """Fig. 13: TFS-style serialization raises cost/latency vs Clipper."""
+    pipe, store = image_pipeline
+    sample = gamma_trace(100, 1.0, 60, seed=3)
+    lat = {}
+    for name, fe in FRONTENDS.items():
+        est = Estimator(pipe, store, rpc_delay_s=fe.hop_delay_s)
+        res = Planner(pipe, store, estimator=est).plan(sample, SLO)
+        assert res.feasible
+        lat[name] = res.estimated_p99
+    assert lat["tfs"] > lat["clipper"]
+
+
+def test_planner_on_both_frontends_meets_slo(image_pipeline):
+    pipe, store = image_pipeline
+    sample = gamma_trace(100, 1.0, 60, seed=4)
+    for name, fe in FRONTENDS.items():
+        est = Estimator(pipe, store, rpc_delay_s=fe.hop_delay_s)
+        res = Planner(pipe, store, estimator=est).plan(sample, SLO)
+        sim = LiveClusterSim(pipe, store, res.config, SLO, frontend=fe)
+        run = sim.run(gamma_trace(100, 1.0, 60, seed=5))
+        assert run.miss_rate < 0.02, name

@@ -1,0 +1,93 @@
+"""Workload generators: statistical properties of synthetic traces."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.workload.generator import (
+    cv_ramp_trace,
+    empirical_rate,
+    gamma_trace,
+    rate_ramp_trace,
+    time_varying_trace,
+)
+from repro.workload.traces import autoscale_derived_trace, split_plan_serve
+
+
+def _cv(arr):
+    gaps = np.diff(arr)
+    return gaps.var() / gaps.mean() ** 2
+
+
+def test_gamma_trace_rate():
+    arr = gamma_trace(lam=200.0, cv=1.0, duration_s=120.0, seed=0)
+    rate = arr.size / 120.0
+    assert rate == pytest.approx(200.0, rel=0.05)
+
+
+@pytest.mark.parametrize("cv", [0.5, 1.0, 4.0])
+def test_gamma_trace_cv(cv):
+    arr = gamma_trace(lam=100.0, cv=cv, duration_s=600.0, seed=1)
+    assert _cv(arr) == pytest.approx(cv, rel=0.15)
+
+
+def test_gamma_trace_sorted_and_bounded():
+    arr = gamma_trace(lam=50.0, cv=2.0, duration_s=30.0, seed=2)
+    assert np.all(np.diff(arr) >= 0)
+    assert arr.min() >= 0 and arr.max() < 30.0
+
+
+def test_zero_rate():
+    assert gamma_trace(0.0, 1.0, 10.0).size == 0
+
+
+def test_rate_ramp_rates():
+    arr = rate_ramp_trace(50, 200, 1.0, pre_s=60, ramp_s=30, post_s=60,
+                          seed=3)
+    head = arr[arr < 50]
+    tail = arr[arr > 100]
+    r_head = head.size / 50.0
+    r_tail = tail.size / 50.0
+    assert r_head == pytest.approx(50, rel=0.2)
+    assert r_tail == pytest.approx(200, rel=0.2)
+
+
+def test_cv_ramp_preserves_rate():
+    arr = cv_ramp_trace(100, 1.0, 4.0, pre_s=60, ramp_s=30, post_s=60,
+                        seed=4)
+    head = arr[arr < 60]
+    tail = arr[arr > 90]
+    assert head.size / 60.0 == pytest.approx(100, rel=0.15)
+    assert tail.size / 60.0 == pytest.approx(100, rel=0.15)
+    assert _cv(tail) > _cv(head)
+
+
+def test_autoscale_trace_peak_rescaled():
+    arr = autoscale_derived_trace("big_spike", max_qps=300.0, seed=5)
+    rates = empirical_rate(arr, window_s=30.0)
+    assert rates.max() == pytest.approx(300.0, rel=0.2)
+    assert arr.size > 1000
+
+
+def test_autoscale_unknown_shape():
+    with pytest.raises(KeyError):
+        autoscale_derived_trace("ghost")
+
+
+def test_split_plan_serve():
+    arr = np.arange(0, 100, 0.5)
+    head, tail = split_plan_serve(arr, 0.25)
+    assert head.max() < 25.0
+    assert tail.min() >= 0.0  # rebased
+    assert head.size + tail.size == arr.size
+
+
+@given(st.floats(min_value=5, max_value=300),
+       st.floats(min_value=0.3, max_value=5.0),
+       st.integers(min_value=0, max_value=10))
+@settings(max_examples=25, deadline=None)
+def test_gamma_trace_properties(lam, cv, seed):
+    arr = gamma_trace(lam, cv, 20.0, seed=seed)
+    assert np.all(np.diff(arr) >= 0)
+    assert arr.size == pytest.approx(lam * 20.0, rel=0.5, abs=30)
