@@ -1,0 +1,199 @@
+"""Engine benchmark -> BENCH_engine.json: the perf trajectory tracker.
+
+Three sections, re-run every PR so regressions surface immediately:
+
+* **sim** — raw simulated-queries/s of the unified engine vs the frozen
+  seed implementation (repro.sim.golden) on one hour of 150 qps traffic
+  through the 4-stage social-media DAG.
+* **planner** — end-to-end `Planner.plan` / `AnnealedPlanner.plan`
+  wall-clock on the fig5 pipelines, engine (incremental sessions) vs the
+  seed path, asserting the returned configurations are identical
+  (feasibility + cost + full config). Acceptance bar: >= 5x.
+* **policies** — the new per-stage queueing policies (EDF, SLO-aware
+  shedding) under an overloaded stage: miss/drop rates and served-P99
+  per policy, the deadline-scheduling + admission-control scenario.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.pipelines import get_motif
+from repro.core.planner import AnnealedPlanner, Planner
+from repro.core.pipeline import PipelineConfig, StageConfig
+from repro.sim import SimEngine
+from repro.sim.golden import GoldenEstimator
+from repro.workload.generator import gamma_trace
+
+from benchmarks.common import save, table
+
+SLO = 0.15
+PLANNER_GRID = (
+    ("image-processing", 200, 4.0),
+    ("tf-cascade", 200, 4.0),
+    ("video-monitoring", 200, 4.0),
+)
+
+
+def _bench_sim() -> dict:
+    bound = get_motif("social-media")
+    pipe, store = bound.pipeline, bound.profiles
+    hour = gamma_trace(150.0, 1.0, 3600.0, seed=7)
+    cfg = PipelineConfig({
+        s: StageConfig(pipe.stages[s].hardware_options[0], 8, 4)
+        for s in pipe.stages
+    })
+    engine = SimEngine(pipe, store)
+    golden = GoldenEstimator(pipe, store)
+    out = {"queries": int(hour.size)}
+    for name, sim in (("engine", engine), ("golden", golden)):
+        res = sim.simulate(cfg, hour)          # warm caches / fair timing
+        t0 = time.perf_counter()
+        res = sim.simulate(cfg, hour)
+        dt = time.perf_counter() - t0
+        out[name] = {"seconds": dt, "qps_simulated": hour.size / dt}
+        del res
+    out["speedup"] = out["golden"]["seconds"] / out["engine"]["seconds"]
+    print(f"sim: {hour.size} queries/hr -> engine "
+          f"{out['engine']['qps_simulated']/1e6:.2f}M q/s vs golden "
+          f"{out['golden']['qps_simulated']/1e6:.2f}M q/s "
+          f"({out['speedup']:.1f}x)")
+    return out
+
+
+def _bench_planner() -> dict:
+    rows, out = [], {}
+    for motif, lam, cv in PLANNER_GRID:
+        bound = get_motif(motif)
+        pipe, store = bound.pipeline, bound.profiles
+        sample = gamma_trace(lam, cv, 60, seed=10)
+        for pcls in (Planner, AnnealedPlanner):
+            # best-of-2 on both paths: shared-machine jitter otherwise
+            # dominates the sub-second engine runs
+            reps = 2 if pcls is Planner else 1
+            t_after, t_before = float("inf"), float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                after = pcls(pipe, store).plan(sample, SLO)
+                t_after = min(t_after, time.perf_counter() - t0)
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                before = pcls(pipe, store,
+                              estimator=GoldenEstimator(pipe, store)
+                              ).plan(sample, SLO)
+                t_before = min(t_before, time.perf_counter() - t0)
+            assert after.feasible == before.feasible
+            assert after.cost_per_hr == before.cost_per_hr
+            if after.feasible:
+                assert after.config.cache_key() == before.config.cache_key()
+            key = f"{motif}|{pcls.__name__}"
+            out[key] = {
+                "plan_s_before": t_before,
+                "plan_s_after": t_after,
+                "speedup": t_before / t_after,
+                "cost_per_hr": after.cost_per_hr,
+                "feasible": after.feasible,
+                "identical_output": True,
+            }
+            rows.append([motif, pcls.__name__, f"{t_before:.2f}s",
+                         f"{t_after:.2f}s", f"{t_before/t_after:.1f}x"])
+    print(table(rows, ["pipeline", "planner", "seed path", "engine",
+                       "speedup"]))
+    speedups = [v["speedup"] for v in out.values()]
+    out["min_speedup"] = min(speedups)
+    out["geomean_speedup"] = float(np.exp(np.mean(np.log(speedups))))
+    print(f"planner wall-clock: min {out['min_speedup']:.1f}x, "
+          f"geomean {out['geomean_speedup']:.1f}x (bar: >= 5x)")
+    return out
+
+
+def _bench_policies() -> dict:
+    """Two scenarios for the new per-stage policies.
+
+    * shedding: a 300 qps burst into ~200 qps of capacity — slo-drop
+      bounds the served tail at the SLO where fifo's queue collapses.
+    * deadline scheduling: a conditional-branch DAG whose slow branch
+      delivers queries to the join stage late and deadline-tight — edf
+      lets them jump the join queue, cutting misses vs fifo.
+    """
+    from repro.core.pipeline import SOURCE, Edge, Pipeline, Stage
+    from repro.core.profiler import ModelProfile, ProfileStore
+    from repro.sim import DEFAULT_RPC_DELAY_S
+
+    hw = "cpu-1"
+    out: dict = {}
+
+    # -- scenario 1: SLO-aware load shedding under overload ---------------
+    pipe = Pipeline("overload", {"m": Stage("m", "m", (hw,))},
+                    [Edge(SOURCE, "m")])
+    store = ProfileStore()
+    store.add(ModelProfile(
+        "m", {(hw, b): 0.005 * b for b in (1, 2, 4, 8)}, (1, 2, 4, 8)))
+    engine = SimEngine(pipe, store)
+    slo = 0.1
+    arr = gamma_trace(300.0, 4.0, 30.0, seed=3)
+    rows = []
+    shed = {}
+    for policy in ("fifo", "slo-drop"):
+        cfg = PipelineConfig({"m": StageConfig(hw, 1, 1, policy=policy)})
+        res = engine.simulate(cfg, arr, slo_s=slo)
+        served = (res.latency[~res.dropped] if res.dropped is not None
+                  else res.latency)
+        served_p99 = float(np.percentile(served, 99)) if served.size else 0.0
+        shed[policy] = {
+            "miss_rate": res.slo_miss_rate(slo),
+            "drop_rate": res.drop_rate,
+            "served_p99_s": served_p99,
+        }
+        rows.append([policy, f"{res.slo_miss_rate(slo):.3f}",
+                     f"{res.drop_rate:.3f}", f"{served_p99*1e3:.1f}ms"])
+    print(table(rows, ["policy", "miss rate", "drop rate", "served p99"]))
+    # shedding must bound the served tail at the SLO (modulo the rpc
+    # hops, which sit outside the stage-level deadline check); fifo cannot
+    assert shed["slo-drop"]["served_p99_s"] <= slo + 2 * DEFAULT_RPC_DELAY_S
+    assert shed["fifo"]["served_p99_s"] > slo
+    out["shedding"] = shed
+
+    # -- scenario 2: EDF at a join fed by a slow conditional branch -------
+    stages = {"a": Stage("a", "a", (hw,)), "b": Stage("b", "b", (hw,)),
+              "c": Stage("c", "c", (hw,))}
+    edges = [Edge(SOURCE, "a"), Edge("a", "b", probability=0.5),
+             Edge("b", "c"), Edge("a", "c", probability=0.5)]
+    pipe2 = Pipeline("branchy", stages, edges)
+    store2 = ProfileStore()
+    store2.add(ModelProfile("a", {(hw, b): 0.002 for b in (1, 2, 4, 8)},
+                            (1, 2, 4, 8)))
+    store2.add(ModelProfile("b", {(hw, b): 0.04 + 0.001 * b
+                                  for b in (1, 2, 4, 8)}, (1, 2, 4, 8)))
+    store2.add(ModelProfile("c", {(hw, b): 0.004 * b for b in (1, 2, 4, 8)},
+                            (1, 2, 4, 8)))
+    engine2 = SimEngine(pipe2, store2)
+    slo2 = 0.08
+    arr2 = gamma_trace(200.0, 2.0, 60.0, seed=5)
+    rows2 = []
+    edf_cmp = {}
+    for policy in ("fifo", "edf"):
+        cfg = PipelineConfig({"a": StageConfig(hw, 4, 2),
+                              "b": StageConfig(hw, 4, 3),
+                              "c": StageConfig(hw, 4, 1, policy=policy)})
+        res = engine2.simulate(cfg, arr2, slo_s=slo2)
+        edf_cmp[policy] = {"miss_rate": res.slo_miss_rate(slo2),
+                           "p99_s": res.p99}
+        rows2.append([policy, f"{res.slo_miss_rate(slo2):.4f}",
+                      f"{res.p99*1e3:.1f}ms"])
+    print(table(rows2, ["join policy", "miss rate", "p99"]))
+    assert edf_cmp["edf"]["miss_rate"] <= edf_cmp["fifo"]["miss_rate"]
+    out["deadline_scheduling"] = edf_cmp
+    return out
+
+
+def run() -> dict:
+    payload = {
+        "sim": _bench_sim(),
+        "planner": _bench_planner(),
+        "policies": _bench_policies(),
+    }
+    save("BENCH_engine", payload)
+    return payload

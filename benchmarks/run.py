@@ -11,6 +11,7 @@ import sys
 import time
 
 from benchmarks import (
+    bench_engine,
     beyond_planner,
     fig3_profiles,
     fig5_planner_vs_cg,
@@ -37,6 +38,7 @@ BENCHES = {
     "fig13": fig13_frameworks,
     "fig14": fig14_ds2,
     "beyond_planner": beyond_planner,
+    "engine": bench_engine,
     "roofline": roofline_report,
 }
 

@@ -25,6 +25,7 @@ from repro.core.envelope import max_queries_in_window
 from repro.core.estimator import Estimator
 from repro.core.pipeline import Pipeline, PipelineConfig, StageConfig
 from repro.core.profiler import ProfileStore
+from repro.sim import SimEngine
 
 # Replicating a whole pipeline takes much longer than one model (§7.1).
 UNIT_ACTIVATION_S = 15.0
@@ -48,7 +49,10 @@ class CGPlanner:
                  estimator: Optional[Estimator] = None):
         self.pipeline = pipeline
         self.profiles = profiles
-        self.estimator = estimator or Estimator(pipeline, profiles)
+        # same unified simulation core as the InferLine planner: reuse the
+        # caller's engine when an estimator is handed in, else make one
+        self.engine = (estimator.engine if estimator is not None
+                       else SimEngine(pipeline, profiles))
 
     def _best_hardware(self, stage: str) -> str:
         st = self.pipeline.stages[stage]
@@ -64,7 +68,7 @@ class CGPlanner:
 
     def _service_time(self, batch: int) -> float:
         cfg = self._unit_config(batch, 1)
-        return self.estimator.service_time(cfg)
+        return self.engine.service_time(cfg)
 
     def _unit_throughput(self, batch: int) -> float:
         """Black-box unit throughput: the bottleneck stage's rate."""

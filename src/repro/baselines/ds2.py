@@ -110,7 +110,9 @@ def run_ds2(tuner: DS2Tuner, profiles: ProfileStore, arrivals: np.ndarray,
     """Provision for the trace average, then serve it with DS2 scaling.
 
     Returns a LiveRunResult (same contract as the InferLine live runs so
-    Fig. 14 can compare directly).
+    Fig. 14 can compare directly); the serve itself runs on the unified
+    simulation engine via LiveClusterSim, so queue/batch/stall dynamics
+    are modeled identically for DS2 and InferLine.
     """
     from repro.serving.cluster import LiveClusterSim
 

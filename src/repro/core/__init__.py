@@ -1,7 +1,6 @@
 """InferLine core: pipeline spec, profiler, estimator, planner, tuner."""
 
 from repro.core.envelope import TrafficEnvelope, envelope_windows  # noqa: F401
-from repro.core.estimator import Estimator, SimResult  # noqa: F401
 from repro.core.hardware import (  # noqa: F401
     HARDWARE_MENU,
     HardwareType,
@@ -17,7 +16,6 @@ from repro.core.pipeline import (  # noqa: F401
     StageConfig,
     linear_pipeline,
 )
-from repro.core.planner import Planner, PlannerResult  # noqa: F401
 from repro.core.profiler import (  # noqa: F401
     ModelProfile,
     ModelSpec,
@@ -25,8 +23,27 @@ from repro.core.profiler import (  # noqa: F401
     profile_model_analytic,
     profile_model_measured,
 )
-from repro.core.tuner import (  # noqa: F401
-    Tuner,
-    TunerPlanInfo,
-    run_tuner_offline,
-)
+
+# Estimator/Planner/Tuner re-exports are lazy (PEP 562): estimator and
+# planner pull in repro.sim, which itself imports repro.core.pipeline —
+# importing them eagerly here would make `import repro.sim` fail when it
+# runs before `import repro.core` (circular package init).
+_LAZY_EXPORTS = {
+    "Estimator": "repro.core.estimator",
+    "SimResult": "repro.core.estimator",
+    "Planner": "repro.core.planner",
+    "PlannerResult": "repro.core.planner",
+    "Tuner": "repro.core.tuner",
+    "TunerPlanInfo": "repro.core.tuner",
+    "run_tuner_offline": "repro.core.tuner",
+}
+
+
+def __getattr__(name):
+    module = _LAZY_EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(module), name)

@@ -1,17 +1,15 @@
-"""The Estimator (§4.2): continuous-time discrete-event pipeline simulator.
+"""The Estimator (§4.2): thin façade over the unified simulation engine.
 
 Given a pipeline configuration, per-model profiles, and an arrival trace,
 returns an accurate latency estimate for *each query* in the trace.
 
-Engine design (beyond-paper fast path, recorded in EXPERIMENTS.md §Perf):
-the paper implements a global event heap over the whole pipeline. Because
-(a) routing is feed-forward (DAG) and (b) the centralized batched queue at
-a stage depends only on that stage's input arrival times and its own
-replica schedule, we simulate *stage-by-stage in topological order*. Each
-stage is a single-queue / R-server / batch-service system simulated with a
-tiny heap over replica free-times — O(n log R) per stage instead of a
-global O(E log E) heap. Hours of traces simulate in hundreds of
-milliseconds, matching the paper's C++ estimator in Python.
+The actual discrete-event core lives in :mod:`repro.sim` (engine design
+notes in that module and EXPERIMENTS.md §Perf); this module keeps the
+paper-facing API — ``Estimator.simulate`` and the planner helpers — and
+re-exports :class:`repro.sim.SimResult` so existing imports keep working.
+Consumers that evaluate many configurations against one trace (the
+Planner, the Tuner sweeps) should open ``Estimator.session(arrivals)``
+to get incremental re-simulation.
 
 Dynamic replica schedules (for the live-cluster simulation driving the
 Tuner) are supported via per-stage ``(time, +1/-1)`` replica events; see
@@ -20,68 +18,16 @@ Tuner) are supported via per-stage ``(time, +1/-1)`` replica events; see
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.pipeline import SOURCE, Pipeline, PipelineConfig
+from repro.core.pipeline import Pipeline, PipelineConfig
 from repro.core.profiler import ProfileStore
+from repro.sim import DEFAULT_RPC_DELAY_S, SimEngine, SimResult, TraceSession
+from repro.sim.queueing import simulate_stage as _policy_simulate_stage
 
-# Per-hop RPC/serialization delay. The frontend adapters (Fig. 13) override
-# this: the "tfs"-style frontend carries extra serialization overhead.
-DEFAULT_RPC_DELAY_S = 0.0005
-
-_FAR_FUTURE = 1e18
-
-
-@dataclasses.dataclass
-class SimResult:
-    """Per-query outcome of one simulation run."""
-
-    arrival: np.ndarray            # (n,) arrival time of each query
-    latency: np.ndarray            # (n,) end-to-end latency (s)
-    per_stage_batches: Dict[str, np.ndarray]  # stage -> batch sizes formed
-
-    @property
-    def num_queries(self) -> int:
-        return int(self.arrival.shape[0])
-
-    def percentile(self, p: float) -> float:
-        return float(np.percentile(self.latency, p)) if self.latency.size else 0.0
-
-    @property
-    def p99(self) -> float:
-        return self.percentile(99.0)
-
-    @property
-    def mean(self) -> float:
-        return float(self.latency.mean()) if self.latency.size else 0.0
-
-    def slo_miss_rate(self, slo: float) -> float:
-        if not self.latency.size:
-            return 0.0
-        return float((self.latency > slo).mean())
-
-    def slo_attainment(self, slo: float) -> float:
-        return 1.0 - self.slo_miss_rate(slo)
-
-    def windowed_miss_rate(self, slo: float, window_s: float = 5.0
-                           ) -> Tuple[np.ndarray, np.ndarray]:
-        """(window_start_times, miss_rate per window) for time-series plots."""
-        if not self.latency.size:
-            return np.zeros(0), np.zeros(0)
-        t_end = float(self.arrival.max())
-        edges = np.arange(0.0, t_end + window_s, window_s)
-        idx = np.clip(np.digitize(self.arrival, edges) - 1, 0, len(edges) - 1)
-        miss = (self.latency > slo).astype(np.float64)
-        rates = np.full(len(edges), np.nan)
-        for w in range(len(edges)):
-            sel = idx == w
-            if sel.any():
-                rates[w] = miss[sel].mean()
-        return edges, rates
+__all__ = ["DEFAULT_RPC_DELAY_S", "Estimator", "SimResult"]
 
 
 def _simulate_stage(
@@ -93,98 +39,17 @@ def _simulate_stage(
     replica_events: Optional[Sequence[Tuple[float, int]]] = None,
     timeout_s: float = 0.0,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Simulate one stage's centralized batched queue.
+    """Back-compat shim for the seed's private stage simulator.
 
-    Args:
-      ready: (k,) ready times of the queries visiting this stage, SORTED.
-      order: (k,) original query indices aligned with `ready`.
-      latency_lut: lut[b] = batch latency of batch size b (len max_batch+1).
-      max_batch: configured maximum batch size.
-      replicas: initial replica count.
-      replica_events: optional [(t, +1/-1), ...] dynamic scaling events,
-        sorted by t. +1 adds a replica that becomes available at t (the
-        activation delay is applied by the caller); -1 retires the next
-        replica to become idle at/after t.
-
-    Returns:
-      (completion_times aligned with `order`, batch sizes formed).
+    `order` is the original-index alignment kept by the caller; the
+    returned completions align with the sorted `ready` input, exactly as
+    before. New code should call :func:`repro.sim.simulate_stage`.
     """
-    k = ready.shape[0]
-    done = np.empty(k, dtype=np.float64)
-    batches: List[int] = []
-    if k == 0:
-        return done, np.zeros(0, dtype=np.int64)
-
-    # Replica pool: heap of free-at times.
-    free: List[float] = [0.0] * max(replicas, 0)
-    heapq.heapify(free)
-    ev = list(replica_events or [])
-    ev_i = 0
-    pending_removals: List[float] = []   # times at which a removal takes effect
-
-    def apply_events(now: float) -> None:
-        nonlocal ev_i
-        while ev_i < len(ev) and ev[ev_i][0] <= now:
-            t, delta = ev[ev_i]
-            ev_i += 1
-            if delta > 0:
-                for _ in range(delta):
-                    heapq.heappush(free, t)
-            else:
-                for _ in range(-delta):
-                    pending_removals.append(t)
-
-    ptr = 0
-    lat_len = latency_lut.shape[0]
-    while ptr < k:
-        if not free:
-            # all replicas retired; fast-forward to next add event
-            if ev_i < len(ev):
-                apply_events(ev[ev_i][0])
-                continue
-            # no capacity ever again: remaining queries never complete
-            done[ptr:] = _FAR_FUTURE
-            break
-        f = heapq.heappop(free)
-        start = max(f, ready[ptr])
-        apply_events(start)
-        # retire this replica if a removal is pending at/earlier than now
-        if pending_removals and pending_removals[0] <= start:
-            pending_removals.pop(0)
-            continue
-        # batch = all queries ready by `start`, capped at max_batch
-        hi = ptr
-        limit = ptr + max_batch
-        while hi < k and hi < limit and ready[hi] <= start:
-            hi += 1
-        if hi == ptr:
-            # replica was idle before the next arrival: it serves that
-            # arrival (plus any simultaneous ones) immediately
-            start = ready[ptr]
-            while hi < k and hi < limit and ready[hi] <= start:
-                hi += 1
-        if timeout_s > 0.0 and hi < limit and hi < k:
-            # timeout batching (beyond-paper): hold the batch open until
-            # either max_batch queries are ready or `timeout_s` elapses
-            # from the head-of-line query's arrival — trading head
-            # latency for per-replica throughput
-            deadline = ready[ptr] + timeout_s
-            if deadline > start:
-                fill_t = ready[limit - 1] if limit - 1 < k else _FAR_FUTURE
-                start = min(max(start, fill_t), deadline)
-                while hi < k and hi < limit and ready[hi] <= start:
-                    hi += 1
-        b = hi - ptr
-        lat = latency_lut[b] if b < lat_len else latency_lut[-1] * b / (lat_len - 1)
-        end = start + lat
-        done[ptr:hi] = end
-        batches.append(b)
-        ptr = hi
-        heapq.heappush(free, end)
-
-    completion = np.empty(k, dtype=np.float64)
-    completion[:] = done
-    return completion, np.asarray(batches, dtype=np.int64)
+    del order  # alignment is the caller's concern, as in the seed
+    done, batches, _ = _policy_simulate_stage(
+        "fifo", ready, latency_lut, max_batch, replicas,
+        replica_events, timeout_s)
+    return done, batches
 
 
 class Estimator:
@@ -201,91 +66,34 @@ class Estimator:
         self.profiles = profiles
         self.rpc_delay_s = rpc_delay_s
         self.seed = seed
-        self._topo = pipeline.toposort()
-        self._edges_in: Dict[str, List] = {
-            s: [e for e in pipeline.edges if e.dst == s] for s in self._topo
-        }
+        self.engine = SimEngine(pipeline, profiles, rpc_delay_s=rpc_delay_s,
+                                seed=seed)
 
-    # -- conditional routing ------------------------------------------------
-    def _edge_draws(self, n: int) -> Dict[Tuple[str, str], np.ndarray]:
-        """Pre-sample Bernoulli outcomes per (edge, query).
-
-        Fixed seed => identical routing across candidate configurations, as
-        the paper reuses one sample trace across the whole search.
-        """
-        rng = np.random.default_rng(self.seed)
-        draws = {}
-        for e in self.pipeline.edges:
-            if e.probability >= 1.0:
-                draws[(e.src, e.dst)] = np.ones(n, dtype=bool)
-            else:
-                draws[(e.src, e.dst)] = rng.random(n) < e.probability
-        return draws
+    def session(self, arrivals: np.ndarray,
+                slo_s: Optional[float] = None) -> TraceSession:
+        """Bind to one trace for incremental re-simulation across configs."""
+        return self.engine.session(arrivals, slo_s=slo_s)
 
     def simulate(
         self,
         config: PipelineConfig,
         arrivals: np.ndarray,
         replica_schedules: Optional[Dict[str, Sequence[Tuple[float, int]]]] = None,
+        slo_s: Optional[float] = None,
     ) -> SimResult:
         """Run the trace through the configured pipeline.
 
         Args:
-          config: per-stage (hardware, batch, replicas).
+          config: per-stage (hardware, batch, replicas[, policy]).
           arrivals: (n,) sorted arrival times in seconds.
           replica_schedules: optional dynamic scaling events per stage
             (used by the live-cluster simulation; see module docstring).
+          slo_s: optional per-query deadline horizon (arrival + slo_s),
+            consumed by deadline-aware policies (``edf``, ``slo-drop``).
         """
-        arrivals = np.asarray(arrivals, dtype=np.float64)
-        n = arrivals.shape[0]
-        draws = self._edge_draws(n)
-
-        visited: Dict[str, np.ndarray] = {SOURCE: np.ones(n, dtype=bool)}
-        # ready_time[s][q] = time query q is ready at stage s (AND-join: max
-        # over active incoming deliveries); completion[s][q] = finish time.
-        ready_time: Dict[str, np.ndarray] = {SOURCE: arrivals}
-        completion: Dict[str, np.ndarray] = {SOURCE: arrivals}
-        last_done = np.array(arrivals, copy=True)  # ingress counts as t0
-        per_stage_batches: Dict[str, np.ndarray] = {}
-
-        for stage in self._topo:
-            vis = np.zeros(n, dtype=bool)
-            ready = np.zeros(n, dtype=np.float64)
-            for e in self._edges_in[stage]:
-                active = visited[e.src] & draws[(e.src, e.dst)]
-                deliver = completion[e.src] + self.rpc_delay_s
-                # AND-join over active parents
-                ready = np.where(active, np.maximum(ready, deliver), ready)
-                vis |= active
-            visited[stage] = vis
-            k = int(vis.sum())
-            if k == 0:
-                ready_time[stage] = ready
-                completion[stage] = np.full(n, -np.inf)
-                per_stage_batches[stage] = np.zeros(0, dtype=np.int64)
-                continue
-
-            cfg = config[stage]
-            prof = self.profiles.get(self.pipeline.stages[stage].model_id)
-            lut = prof.latency_lut(cfg.hardware, cfg.batch_size)
-
-            idx = np.nonzero(vis)[0]
-            order = idx[np.argsort(ready[idx], kind="stable")]
-            sorted_ready = ready[order]
-            sched = (replica_schedules or {}).get(stage)
-            comp_sorted, batches = _simulate_stage(
-                sorted_ready, order, lut, cfg.batch_size, cfg.replicas,
-                sched, timeout_s=getattr(cfg, "timeout_s", 0.0)
-            )
-            comp = np.full(n, -np.inf)
-            comp[order] = comp_sorted
-            ready_time[stage] = ready
-            completion[stage] = comp
-            per_stage_batches[stage] = batches
-            last_done = np.where(vis, np.maximum(last_done, comp), last_done)
-
-        latency = last_done - arrivals + self.rpc_delay_s  # final reply hop
-        return SimResult(arrivals, latency, per_stage_batches)
+        return self.engine.simulate(config, arrivals,
+                                    replica_schedules=replica_schedules,
+                                    slo_s=slo_s)
 
     # -- planner-facing helpers ----------------------------------------------
     def estimate_p99(self, config: PipelineConfig, arrivals: np.ndarray) -> float:
@@ -299,11 +107,4 @@ class Estimator:
     def service_time(self, config: PipelineConfig) -> float:
         """Sum of batch-size-configured latencies along the longest path
         (queueing excluded) — Alg. 1's `ServiceTime`."""
-        total = 0.0
-        path = self.pipeline.longest_path_stages()
-        for stage in path:
-            cfg = config[stage]
-            prof = self.profiles.get(self.pipeline.stages[stage].model_id)
-            total += prof.batch_latency(cfg.hardware, cfg.batch_size)
-            total += self.rpc_delay_s
-        return total + self.rpc_delay_s
+        return self.engine.service_time(config)

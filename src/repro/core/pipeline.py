@@ -136,24 +136,39 @@ class Pipeline:
 
 @dataclasses.dataclass
 class StageConfig:
-    """The three control dimensions per model (§1), plus an optional
-    beyond-paper batch-formation timeout: hold a batch open up to
-    ``timeout_s`` from the head-of-line arrival to trade head latency
-    for per-replica throughput (0 = the paper's greedy batching)."""
+    """The three control dimensions per model (§1), plus two beyond-paper
+    knobs consumed by the simulation engine (:mod:`repro.sim`):
+
+    * ``timeout_s`` — batch-formation timeout: hold a batch open up to
+      ``timeout_s`` from the head-of-line arrival to trade head latency
+      for per-replica throughput (0 = the paper's greedy batching).
+    * ``policy`` — per-stage queueing policy name from
+      ``repro.sim.queueing.QUEUE_POLICIES``: ``"fifo"`` (paper),
+      ``"edf"`` (earliest-deadline-first), or ``"slo-drop"``
+      (SLO-aware load shedding).
+    """
 
     hardware: str
     batch_size: int
     replicas: int
     timeout_s: float = 0.0
+    policy: str = "fifo"
 
     def __post_init__(self):
         get_hardware(self.hardware)
         if self.batch_size < 1 or self.replicas < 1 or self.timeout_s < 0:
             raise ValueError(f"bad StageConfig {self}")
+        if not isinstance(self.policy, str) or not self.policy:
+            raise ValueError(f"bad queueing policy in StageConfig {self}")
 
     def copy(self) -> "StageConfig":
         return StageConfig(self.hardware, self.batch_size, self.replicas,
-                           self.timeout_s)
+                           self.timeout_s, self.policy)
+
+    def key(self) -> Tuple:
+        """Hashable identity used by simulation/planner caches."""
+        return (self.hardware, self.batch_size, self.replicas,
+                self.timeout_s, self.policy)
 
 
 @dataclasses.dataclass
@@ -172,6 +187,11 @@ class PipelineConfig:
             get_hardware(c.hardware).cost_per_hr * c.replicas
             for c in self.stage_configs.values()
         )
+
+    def cache_key(self) -> Tuple:
+        """Hashable whole-config identity (stage order independent)."""
+        return tuple(sorted(
+            (s, c.key()) for s, c in self.stage_configs.items()))
 
     def __getitem__(self, stage: str) -> StageConfig:
         return self.stage_configs[stage]

@@ -16,6 +16,15 @@ re-searched on the cheaper hardware).
 Guarantees at termination (§4.3): (1) if a feasible configuration exists
 under the menu, one is returned; (2) no single action reduces cost without
 violating the SLO.
+
+Search-loop engineering (EXPERIMENTS.md §Perf): every candidate the
+greedy loop, the downgrade binary search, and the annealer evaluate
+differs from its incumbent in exactly ONE stage, so all feasibility
+checks run through one incremental :class:`repro.sim.TraceSession` —
+only the mutated stage's downstream cone is re-simulated, and repeated
+whole configurations are scalar cache hits (this subsumes the seed
+planner's private whole-config ``_cache``). Outputs are bit-identical to
+full re-simulation; ``BENCH_engine.json`` records the wall-clock win.
 """
 
 from __future__ import annotations
@@ -33,6 +42,36 @@ from repro.core.profiler import ProfileStore
 
 MAX_REPLICAS_PER_STAGE = 512
 MAX_BATCH = 128
+
+
+class _ScalarSession:
+    """Feasibility session for estimator-like objects without an engine
+    session (e.g. the frozen golden oracle): whole-config p-th percentile
+    memo over full re-simulations — exactly the seed planner's cache."""
+
+    def __init__(self, estimator, arrivals: np.ndarray):
+        self.estimator = estimator
+        self.arrivals = arrivals
+        self._pctl: Dict[Tuple, float] = {}
+        self.stats = {"full_sims": 0, "stage_sims": 0, "stage_hits": 0}
+
+    @staticmethod
+    def _key(config: PipelineConfig) -> Tuple:
+        if hasattr(config, "cache_key"):
+            return config.cache_key()
+        return tuple(sorted(
+            (s, c.hardware, c.batch_size, c.replicas)
+            for s, c in config.stage_configs.items()))
+
+    def percentile(self, config: PipelineConfig, p: float) -> float:
+        key = (self._key(config), p)
+        val = self._pctl.get(key)
+        if val is None:
+            self.stats["full_sims"] += 1
+            val = self.estimator.simulate(
+                config, self.arrivals).percentile(p)
+            self._pctl[key] = val
+        return val
 
 
 @dataclasses.dataclass
@@ -61,8 +100,7 @@ class Planner:
         self.profiles = profiles
         self.estimator = estimator or Estimator(pipeline, profiles)
         self.percentile = percentile
-        self._sims = 0
-        self._cache: Dict[Tuple, float] = {}
+        self._session = None
 
     # ---------------------------------------------------------------- utils
     def _stage_hw_options(self, stage: str) -> List[str]:
@@ -76,22 +114,32 @@ class Planner:
         return min(self._stage_hw_options(stage),
                    key=lambda h: prof.batch_latency(h, 1))
 
-    def _config_key(self, config: PipelineConfig) -> Tuple:
-        return tuple(sorted(
-            (s, c.hardware, c.batch_size, c.replicas)
-            for s, c in config.stage_configs.items()))
+    def _open_session(self, arrivals: np.ndarray) -> None:
+        """One incremental session per plan() call: all candidate
+        evaluations share the per-stage memoization."""
+        if hasattr(self.estimator, "session"):
+            self._session = self.estimator.session(arrivals)
+        else:  # estimator-like object without an engine (golden oracle)
+            self._session = _ScalarSession(self.estimator, arrivals)
 
-    def _p99(self, config: PipelineConfig, arrivals: np.ndarray) -> float:
-        key = self._config_key(config)
-        if key not in self._cache:
-            self._sims += 1
-            self._cache[key] = self.estimator.simulate(
-                config, arrivals).percentile(self.percentile)
-        return self._cache[key]
+    def _ensure_session(self, arrivals: np.ndarray) -> None:
+        """Bind a session to `arrivals` unless one already is (lets
+        initialize() be called directly, not only via plan())."""
+        if self._session is None or not np.array_equal(
+                self._session.arrivals, arrivals):
+            self._open_session(arrivals)
 
-    def _feasible(self, config: PipelineConfig, arrivals: np.ndarray,
-                  slo: float) -> bool:
-        return self._p99(config, arrivals) <= slo
+    @property
+    def _sims(self) -> int:
+        return self._session.stats["full_sims"] if self._session else 0
+
+    def _p99(self, config: PipelineConfig) -> float:
+        """Percentile latency on the session's bound trace (the arrivals
+        handed to plan(); this is the incremental simulate_delta path)."""
+        return self._session.percentile(config, self.percentile)
+
+    def _feasible(self, config: PipelineConfig, slo: float) -> bool:
+        return self._p99(config) <= slo
 
     def _throughput(self, config: PipelineConfig, stage: str) -> float:
         cfg = config[stage]
@@ -101,6 +149,8 @@ class Planner:
     # ------------------------------------------------------------ Algorithm 1
     def initialize(self, arrivals: np.ndarray, slo: float
                    ) -> Optional[PipelineConfig]:
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        self._ensure_session(arrivals)
         config = PipelineConfig({
             s: StageConfig(self._best_hardware(s), 1, 1)
             for s in self.pipeline.stages
@@ -108,7 +158,7 @@ class Planner:
         if self.estimator.service_time(config) > slo:
             return None  # infeasible: bare service time exceeds the SLO
         scale = self.pipeline.scale_factors()
-        while not self._feasible(config, arrivals, slo):
+        while not self._feasible(config, slo):
             # throughput bottleneck, demand-normalized by scale factor
             bottleneck = min(
                 config.stage_configs,
@@ -163,7 +213,8 @@ class Planner:
                     continue
                 # prefilter: bare service time must fit before simulating
                 probe = config.copy()
-                probe.stage_configs[stage] = StageConfig(hw, batch, 1)
+                probe.stage_configs[stage] = dataclasses.replace(
+                    cfg, hardware=hw, batch_size=batch, replicas=1)
                 if self.estimator.service_time(probe) > slo:
                     continue
                 mu = prof.throughput(hw, batch)
@@ -173,17 +224,18 @@ class Planner:
 
                 def with_k(k: int) -> PipelineConfig:
                     cand = config.copy()
-                    cand.stage_configs[stage] = StageConfig(hw, batch, k)
+                    cand.stage_configs[stage] = dataclasses.replace(
+                        cfg, hardware=hw, batch_size=batch, replicas=k)
                     return cand
 
                 # feasibility is monotone in replicas: binary-search the
                 # smallest feasible k in [k0, k_cap]
-                if not self._feasible(with_k(k_cap), arrivals, slo):
+                if not self._feasible(with_k(k_cap), slo):
                     continue
                 lo, hi = k0, k_cap
                 while lo < hi:
                     mid = (lo + hi) // 2
-                    if self._feasible(with_k(mid), arrivals, slo):
+                    if self._feasible(with_k(mid), slo):
                         hi = mid
                     else:
                         lo = mid + 1
@@ -197,8 +249,7 @@ class Planner:
     # ------------------------------------------------------------ Algorithm 2
     def plan(self, arrivals: np.ndarray, slo: float) -> PlannerResult:
         arrivals = np.asarray(arrivals, dtype=np.float64)
-        self._sims = 0
-        self._cache.clear()
+        self._open_session(arrivals)
         config = self.initialize(arrivals, slo)
         if config is None:
             return PlannerResult(False, None, math.inf, math.inf, 0, self._sims)
@@ -223,7 +274,7 @@ class Planner:
                     c = cand.cost_per_hr()
                     if c > best_cost + 1e-12:
                         continue
-                    if not self._feasible(cand, arrivals, slo):
+                    if not self._feasible(cand, slo):
                         continue
                     if c < best_cost - 1e-12:
                         best, best_cost, best_is_batch = cand, c, is_batch
@@ -235,7 +286,7 @@ class Planner:
                 break
             config = best
 
-        p99 = self._p99(config, arrivals)
+        p99 = self._p99(config)
         return PlannerResult(True, config, config.cost_per_hr(), p99,
                              iterations, self._sims)
 
@@ -286,8 +337,8 @@ class AnnealedPlanner(Planner):
                 else:
                     opts = self._stage_hw_options(stage)
                     sc_hw = opts[int(rng.integers(len(opts)))]
-                    new.stage_configs[stage] = StageConfig(
-                        sc_hw, sc.batch_size, sc.replicas)
+                    new.stage_configs[stage] = dataclasses.replace(
+                        sc, hardware=sc_hw)
             return new
 
         for i in range(steps):
@@ -297,10 +348,10 @@ class AnnealedPlanner(Planner):
             # Metropolis on relative cost; only feasible moves accepted
             if cost <= cur_cost or rng.random() < math.exp(
                     -(cost - cur_cost) / (temp * max(cur_cost, 1e-9))):
-                if self._feasible(cand, arrivals, slo):
+                if self._feasible(cand, slo):
                     cur, cur_cost = cand, cost
                     if cost < best_cost - 1e-12:
                         best, best_cost = cand.copy(), cost
-        p99 = self._p99(best, arrivals)
+        p99 = self._p99(best)
         return PlannerResult(True, best, best_cost, p99,
                              greedy.iterations + steps, self._sims)

@@ -4,9 +4,12 @@ the loop (§5, §7.1-7.3).
 The Tuner's decisions are a pure function of the ingress arrival process
 (traffic envelopes + plan-time constants), so the full scaling schedule is
 computed by streaming the trace through the tuner first; the resulting
-per-stage replica schedules are then handed to the Estimator engine, which
-simulates every queue/batch/replica interaction. Replica activation delay
-(5 s) and scale-down draining are modeled inside the engine.
+per-stage replica schedules are then handed to the unified simulation
+engine (:mod:`repro.sim` — the same core behind the Estimator and the
+Planner search), which simulates every queue/batch/replica interaction.
+Replica activation delay (5 s) and scale-down draining are modeled inside
+the engine, and per-stage queueing policies (EDF, SLO-aware shedding)
+apply to live runs exactly as they do to planning simulations.
 
 Outputs include the per-query latencies AND the cost timeline (replica
 counts integrate to $-cost over the run), which is what Figs. 6/7/10-12
@@ -20,11 +23,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.estimator import Estimator, SimResult
 from repro.core.hardware import get_hardware
 from repro.core.pipeline import Pipeline, PipelineConfig
 from repro.core.profiler import ProfileStore
 from repro.serving.frontends import FRONTENDS, Frontend
+from repro.sim import SimEngine, SimResult
 
 
 @dataclasses.dataclass
@@ -68,8 +71,8 @@ class LiveClusterSim:
         self.config = config
         self.slo = slo
         self.frontend = frontend
-        self.estimator = Estimator(pipeline, profiles,
-                                   rpc_delay_s=frontend.hop_delay_s)
+        self.engine = SimEngine(pipeline, profiles,
+                                rpc_delay_s=frontend.hop_delay_s)
 
     def _cost_timeline(
         self,
@@ -109,8 +112,11 @@ class LiveClusterSim:
         schedule (e.g. `run_tuner_offline` partial). None = static config."""
         arrivals = np.asarray(arrivals, dtype=np.float64)
         schedules = schedule_fn(arrivals) if schedule_fn is not None else {}
-        sim = self.estimator.simulate(self.config, arrivals,
-                                      replica_schedules=schedules or None)
+        # slo_s feeds per-query deadlines to deadline-aware stage policies
+        # (edf / slo-drop); the paper's fifo stages ignore it.
+        sim = self.engine.simulate(self.config, arrivals,
+                                   replica_schedules=schedules or None,
+                                   slo_s=self.slo)
         t_end = float(arrivals.max()) if arrivals.size else 0.0
         times, costs, timeline = self._cost_timeline(schedules, t_end)
         return LiveRunResult(sim, self.slo, times, costs, timeline)

@@ -1,0 +1,27 @@
+"""repro.sim — the unified incremental discrete-event simulation core.
+
+One engine for every consumer: the Estimator façade, the Planner and
+AnnealedPlanner search loops, the live-cluster simulation, the
+coarse-grained and DS2 baselines, and the benchmark drivers.
+
+* :mod:`repro.sim.engine`   — SimEngine + TraceSession (incremental
+  per-stage memoization, ``simulate_delta`` / ``simulate_many``)
+* :mod:`repro.sim.queueing` — pluggable per-stage policies: ``fifo``
+  (paper + timeout batching), ``edf`` (deadline scheduling),
+  ``slo-drop`` (SLO-aware load shedding)
+* :mod:`repro.sim.result`   — per-query SimResult (+ dropped mask)
+* :mod:`repro.sim.golden`   — frozen seed implementation (equivalence
+  oracle + benchmark baseline only)
+"""
+
+from repro.sim.engine import (  # noqa: F401
+    DEFAULT_RPC_DELAY_S,
+    SimEngine,
+    TraceSession,
+)
+from repro.sim.queueing import (  # noqa: F401
+    QUEUE_POLICIES,
+    get_policy,
+    simulate_stage,
+)
+from repro.sim.result import SimResult  # noqa: F401

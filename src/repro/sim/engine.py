@@ -1,0 +1,377 @@
+"""Unified incremental discrete-event engine (the one simulation core).
+
+Every consumer — the Estimator façade (:mod:`repro.core.estimator`), the
+Planner/AnnealedPlanner search, the live-cluster simulation
+(:mod:`repro.serving.cluster`), and both baselines — drives this engine.
+
+Engine design (recorded in EXPERIMENTS.md §Perf): the paper implements a
+global event heap over the whole pipeline. Because (a) routing is
+feed-forward (DAG) and (b) the centralized batched queue at a stage
+depends only on that stage's input arrival times and its own replica
+schedule, we simulate *stage-by-stage in topological order*; each stage
+is one single-queue / R-server / batch-service system handled by a
+pluggable queueing policy (:mod:`repro.sim.queueing`).
+
+Incremental re-simulation: a :class:`TraceSession` binds the engine to
+one arrival trace and memoizes per-stage outcomes keyed on the stage's
+*configuration cone* — the (hardware, batch, replicas, timeout, policy,
+schedule) of the stage and every ancestor. A planner action that mutates
+one stage therefore re-simulates only that stage's downstream cone; all
+sibling branches and upstream stages are cache hits. Combined with the
+LUT/routing-draw caches this is what makes thousands of candidate
+evaluations per plan cheap (the ≥5x plan wall-clock win in
+``BENCH_engine.json``), while remaining bit-identical to full
+re-simulation.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pipeline import SOURCE, Pipeline, PipelineConfig
+from repro.core.profiler import ProfileStore
+from repro.sim.queueing import get_policy
+from repro.sim.result import SimResult
+
+# Per-hop RPC/serialization delay. The frontend adapters (Fig. 13) override
+# this: the "tfs"-style frontend carries extra serialization overhead.
+DEFAULT_RPC_DELAY_S = 0.0005
+
+Schedule = Sequence[Tuple[float, int]]
+Schedules = Dict[str, Schedule]
+
+
+def _sched_key(sched: Optional[Schedule]) -> Tuple:
+    return tuple((float(t), int(d)) for t, d in sched) if sched else ()
+
+
+class SimEngine:
+    """Stateless pipeline simulator + shared caches (LUTs, routing draws).
+
+    Use :meth:`simulate` for one-shot runs, or open a :meth:`session` on a
+    trace to get incremental re-simulation across many configurations.
+    """
+
+    def __init__(
+        self,
+        pipeline: Pipeline,
+        profiles: ProfileStore,
+        rpc_delay_s: float = DEFAULT_RPC_DELAY_S,
+        seed: int = 0,
+    ):
+        self.pipeline = pipeline
+        self.profiles = profiles
+        self.rpc_delay_s = rpc_delay_s
+        self.seed = seed
+        self._topo = pipeline.toposort()
+        self._edges_in: Dict[str, List] = {
+            s: [e for e in pipeline.edges if e.dst == s] for s in self._topo
+        }
+        # ancestors incl. self (topo-ordered) — the memoization cone
+        anc_sets: Dict[str, set] = {}
+        for s in self._topo:
+            ups: set = {s}
+            for e in self._edges_in[s]:
+                if e.src != SOURCE:
+                    ups |= anc_sets[e.src]
+            anc_sets[s] = ups
+        topo_idx = {s: i for i, s in enumerate(self._topo)}
+        self._cone: Dict[str, Tuple[str, ...]] = {
+            s: tuple(sorted(anc_sets[s], key=topo_idx.__getitem__))
+            for s in self._topo
+        }
+        self._descendants: Dict[str, Tuple[str, ...]] = {
+            s: tuple(t for t in self._topo if s in anc_sets[t])
+            for s in self._topo
+        }
+        self._longest_path = pipeline.longest_path_stages()
+        self._lut_cache: Dict[Tuple[str, str, int], np.ndarray] = {}
+        self._draw_cache: Dict[int, Dict[Tuple[str, str], np.ndarray]] = {}
+        self._service_time_cache: Dict[Tuple, float] = {}
+
+    # -- shared caches ------------------------------------------------------
+    def latency_lut(self, stage: str, hardware: str, max_batch: int
+                    ) -> np.ndarray:
+        model_id = self.pipeline.stages[stage].model_id
+        key = (model_id, hardware, max_batch)
+        lut = self._lut_cache.get(key)
+        if lut is None:
+            prof = self.profiles.get(model_id)
+            lut = prof.latency_lut(hardware, max_batch)
+            self._lut_cache[key] = lut
+        return lut
+
+    def edge_draws(self, n: int) -> Dict[Tuple[str, str], np.ndarray]:
+        """Pre-sampled Bernoulli outcomes per (edge, query).
+
+        Fixed seed => identical routing across candidate configurations
+        (the paper reuses one sample trace across the whole search), and
+        across repeat calls, so draws are cached per trace length.
+        """
+        draws = self._draw_cache.get(n)
+        if draws is None:
+            rng = np.random.default_rng(self.seed)
+            draws = {}
+            for e in self.pipeline.edges:
+                if e.probability >= 1.0:
+                    draws[(e.src, e.dst)] = np.ones(n, dtype=bool)
+                else:
+                    draws[(e.src, e.dst)] = rng.random(n) < e.probability
+            self._draw_cache[n] = draws
+        return draws
+
+    # -- public API ---------------------------------------------------------
+    def session(self, arrivals: np.ndarray, slo_s: Optional[float] = None,
+                max_cache_entries: int = 512,
+                max_cache_bytes: Optional[int] = None) -> "TraceSession":
+        """Bind the engine to one trace for incremental re-simulation."""
+        return TraceSession(self, arrivals, slo_s=slo_s,
+                            max_cache_entries=max_cache_entries,
+                            max_cache_bytes=max_cache_bytes)
+
+    def simulate(
+        self,
+        config: PipelineConfig,
+        arrivals: np.ndarray,
+        replica_schedules: Optional[Schedules] = None,
+        slo_s: Optional[float] = None,
+    ) -> SimResult:
+        """One-shot simulation (fresh session; no cross-call memoization)."""
+        return self.session(arrivals, slo_s=slo_s).simulate(
+            config, replica_schedules=replica_schedules)
+
+    def service_time(self, config: PipelineConfig) -> float:
+        """Sum of batch-size-configured latencies along the longest path
+        (queueing excluded) — Alg. 1's `ServiceTime`. Memoized on the
+        path's (hw, batch) assignment."""
+        key = tuple((s, config[s].hardware, config[s].batch_size)
+                    for s in self._longest_path)
+        cached = self._service_time_cache.get(key)
+        if cached is None:
+            total = 0.0
+            for stage in self._longest_path:
+                cfg = config[stage]
+                prof = self.profiles.get(self.pipeline.stages[stage].model_id)
+                total += prof.batch_latency(cfg.hardware, cfg.batch_size)
+                total += self.rpc_delay_s
+            cached = total + self.rpc_delay_s
+            self._service_time_cache[key] = cached
+        return cached
+
+    def descendants(self, stage: str) -> Tuple[str, ...]:
+        """`stage` plus everything downstream of it (the re-sim cone)."""
+        return self._descendants[stage]
+
+
+class _StageEntry:
+    __slots__ = ("visited", "completion", "batches", "dropped", "nbytes")
+
+    def __init__(self, visited, completion, batches, dropped):
+        self.visited = visited
+        self.completion = completion
+        self.batches = batches
+        self.dropped = dropped        # None or full-length bool mask
+        self.nbytes = (visited.nbytes + completion.nbytes + batches.nbytes
+                       + (dropped.nbytes if dropped is not None else 0))
+
+
+class TraceSession:
+    """The engine bound to one arrival trace, with per-stage memoization.
+
+    ``simulate`` / ``simulate_delta`` / ``simulate_many`` share one
+    cache: evaluating a candidate that differs from any previously-seen
+    configuration in one stage re-simulates only that stage's downstream
+    cone. ``stats`` counts actual stage simulations vs cache hits so
+    callers (and tests) can verify incrementality.
+    """
+
+    # stage-cache byte budget: entries hold full-trace-length arrays, so
+    # a pure entry-count cap would scale memory with trace length
+    # (512 entries x an hour-long trace ~ GBs); evict to stay under this
+    DEFAULT_CACHE_BYTES = 256 * 1024 * 1024
+
+    def __init__(self, engine: SimEngine, arrivals: np.ndarray,
+                 slo_s: Optional[float] = None,
+                 max_cache_entries: int = 512,
+                 max_cache_bytes: Optional[int] = None):
+        self.engine = engine
+        self.arrivals = np.asarray(arrivals, dtype=np.float64)
+        self.n = int(self.arrivals.shape[0])
+        self.slo_s = slo_s
+        self.deadline = (self.arrivals + slo_s) if slo_s is not None else None
+        self.draws = engine.edge_draws(self.n)
+        self.max_cache_entries = max_cache_entries
+        self.max_cache_bytes = (max_cache_bytes if max_cache_bytes is not None
+                                else self.DEFAULT_CACHE_BYTES)
+        self._cache_bytes = 0
+        self._stage_cache: "collections.OrderedDict[Tuple, _StageEntry]" = \
+            collections.OrderedDict()
+        # scalar percentile memo; capped too (keys are full config tuples,
+        # and long annealing sessions evaluate thousands of configs)
+        self._pctl_cache: "collections.OrderedDict[Tuple, float]" = \
+            collections.OrderedDict()
+        self._max_pctl_entries = max(4096, 8 * max_cache_entries)
+        self.stats = {"full_sims": 0, "stage_sims": 0, "stage_hits": 0}
+
+    # -- cache keys ---------------------------------------------------------
+    def _stage_key(self, stage: str, config: PipelineConfig,
+                   schedules: Optional[Schedules]) -> Tuple:
+        # StageConfig.key() is the single source of truth for config
+        # identity — new StageConfig knobs invalidate these caches
+        # automatically instead of silently colliding
+        sched = schedules or {}
+        return (stage, tuple(
+            (s, config[s].key(), _sched_key(sched.get(s)))
+            for s in self.engine._cone[stage]
+        ))
+
+    @staticmethod
+    def config_key(config: PipelineConfig,
+                   schedules: Optional[Schedules] = None) -> Tuple:
+        if not schedules:
+            return config.cache_key()
+        return (config.cache_key(), tuple(sorted(
+            (s, _sched_key(sch)) for s, sch in schedules.items())))
+
+    # -- simulation ---------------------------------------------------------
+    def _simulate_stage_entry(
+        self,
+        stage: str,
+        config: PipelineConfig,
+        schedules: Optional[Schedules],
+        visited: Dict[str, np.ndarray],
+        completion: Dict[str, np.ndarray],
+    ) -> _StageEntry:
+        engine = self.engine
+        n = self.n
+        vis = np.zeros(n, dtype=bool)
+        ready = np.zeros(n, dtype=np.float64)
+        for e in engine._edges_in[stage]:
+            deliver = completion[e.src] + engine.rpc_delay_s
+            active = visited[e.src] & self.draws[(e.src, e.dst)]
+            # shed queries complete at +inf and never reach children
+            # (-inf = not visited, already excluded by the visited mask)
+            active &= np.isfinite(completion[e.src])
+            # AND-join over active parents
+            ready = np.where(active, np.maximum(ready, deliver), ready)
+            vis |= active
+        k = int(vis.sum())
+        if k == 0:
+            return _StageEntry(vis, np.full(n, -np.inf),
+                               np.zeros(0, dtype=np.int64), None)
+        cfg = config[stage]
+        lut = engine.latency_lut(stage, cfg.hardware, cfg.batch_size)
+        idx = np.nonzero(vis)[0]
+        order = idx[np.argsort(ready[idx], kind="stable")]
+        sorted_ready = ready[order]
+        sorted_deadline = (self.deadline[order]
+                           if self.deadline is not None else None)
+        policy = get_policy(getattr(cfg, "policy", "fifo"))
+        done_sorted, batches, dropped_sorted = policy(
+            sorted_ready, lut, cfg.batch_size, cfg.replicas,
+            (schedules or {}).get(stage),
+            getattr(cfg, "timeout_s", 0.0), sorted_deadline,
+        )
+        comp = np.full(n, -np.inf)
+        comp[order] = done_sorted
+        drop_mask = None
+        if dropped_sorted.any():
+            drop_mask = np.zeros(n, dtype=bool)
+            drop_mask[order] = dropped_sorted
+        return _StageEntry(vis, comp, batches, drop_mask)
+
+    def simulate(
+        self,
+        config: PipelineConfig,
+        replica_schedules: Optional[Schedules] = None,
+    ) -> SimResult:
+        """Run the trace through the configured pipeline.
+
+        Per-stage results are memoized on the stage's configuration cone,
+        so repeat calls with partially-overlapping configurations only
+        simulate the stages whose cone actually changed.
+        """
+        engine = self.engine
+        n = self.n
+        self.stats["full_sims"] += 1
+        visited: Dict[str, np.ndarray] = {SOURCE: np.ones(n, dtype=bool)}
+        completion: Dict[str, np.ndarray] = {SOURCE: self.arrivals}
+        last_done = np.array(self.arrivals, copy=True)  # ingress counts as t0
+        per_stage_batches: Dict[str, np.ndarray] = {}
+        dropped: Optional[np.ndarray] = None
+
+        for stage in engine._topo:
+            skey = self._stage_key(stage, config, replica_schedules)
+            ent = self._stage_cache.get(skey)
+            if ent is None:
+                ent = self._simulate_stage_entry(
+                    stage, config, replica_schedules, visited, completion)
+                self._stage_cache[skey] = ent
+                self._cache_bytes += ent.nbytes
+                self.stats["stage_sims"] += 1
+                while self._stage_cache and (
+                        len(self._stage_cache) > self.max_cache_entries
+                        or self._cache_bytes > self.max_cache_bytes):
+                    _, old = self._stage_cache.popitem(last=False)
+                    self._cache_bytes -= old.nbytes
+            else:
+                self._stage_cache.move_to_end(skey)
+                self.stats["stage_hits"] += 1
+            visited[stage] = ent.visited
+            completion[stage] = ent.completion
+            per_stage_batches[stage] = ent.batches
+            vis = ent.visited
+            if vis.any():
+                last_done = np.where(
+                    vis, np.maximum(last_done, ent.completion), last_done)
+            if ent.dropped is not None:
+                dropped = (ent.dropped if dropped is None
+                           else dropped | ent.dropped)
+
+        latency = last_done - self.arrivals + engine.rpc_delay_s  # reply hop
+        return SimResult(self.arrivals, latency, per_stage_batches, dropped)
+
+    def simulate_delta(
+        self,
+        config: PipelineConfig,
+        changed_stage: Optional[str] = None,
+    ) -> SimResult:
+        """Re-simulate after mutating ``changed_stage`` of a previously
+        simulated configuration: only the changed stage's downstream cone
+        is recomputed (everything else hits the per-stage cache).
+
+        ``changed_stage`` is a documentation/verification hint — the cone
+        cache keys make the incrementality automatic either way.
+        """
+        return self.simulate(config)
+
+    def simulate_many(
+        self,
+        configs: Iterable[PipelineConfig],
+    ) -> List[SimResult]:
+        """Evaluate a batch of candidates against the shared stage cache.
+
+        Candidates that share configuration prefixes (e.g. the replica
+        sweep of a planner binary search, which varies one stage only)
+        re-simulate just the varying cone.
+        """
+        return [self.simulate(c) for c in configs]
+
+    def percentile(self, config: PipelineConfig, p: float,
+                   replica_schedules: Optional[Schedules] = None) -> float:
+        """Memoized latency percentile per full configuration (the scalar
+        the planner's feasibility checks consume — subsumes the seed
+        planner's whole-config ``_cache``)."""
+        key = (self.config_key(config, replica_schedules), p)
+        val = self._pctl_cache.get(key)
+        if val is None:
+            val = self.simulate(config, replica_schedules).percentile(p)
+            self._pctl_cache[key] = val
+            if len(self._pctl_cache) > self._max_pctl_entries:
+                self._pctl_cache.popitem(last=False)
+        else:
+            self._pctl_cache.move_to_end(key)
+        return val

@@ -1,0 +1,202 @@
+"""Frozen seed simulator — the golden oracle for engine equivalence.
+
+This module is a verbatim port of the pre-refactor estimator (the
+per-stage heap loop with per-query Python fill scans, per-call routing
+draws, and per-call LUT construction). It exists for two purposes only:
+
+1. **Golden-equivalence tests** (``tests/test_sim_engine.py``): the
+   unified engine must reproduce these per-query latencies *exactly*
+   (bit-identical float64) on randomized DAG pipelines and traces.
+2. **Speedup benchmarking** (``benchmarks/bench_engine.py``): the
+   "before" column of ``BENCH_engine.json`` drives the planner through
+   this implementation, so the recorded plan wall-clock improvement is
+   measured against the real seed code path, not a strawman.
+
+Do NOT route production consumers through this module, and do not
+"improve" it — its value is that it never changes.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pipeline import SOURCE, Pipeline, PipelineConfig
+from repro.core.profiler import ProfileStore
+from repro.sim.result import SimResult
+
+GOLDEN_RPC_DELAY_S = 0.0005
+_FAR_FUTURE = 1e18
+
+
+def golden_simulate_stage(
+    ready: np.ndarray,
+    order: np.ndarray,
+    latency_lut: np.ndarray,
+    max_batch: int,
+    replicas: int,
+    replica_events: Optional[Sequence[Tuple[float, int]]] = None,
+    timeout_s: float = 0.0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """The seed `_simulate_stage`, kept byte-for-byte in behavior."""
+    k = ready.shape[0]
+    done = np.empty(k, dtype=np.float64)
+    batches: List[int] = []
+    if k == 0:
+        return done, np.zeros(0, dtype=np.int64)
+
+    free: List[float] = [0.0] * max(replicas, 0)
+    heapq.heapify(free)
+    ev = list(replica_events or [])
+    ev_i = 0
+    pending_removals: List[float] = []
+
+    def apply_events(now: float) -> None:
+        nonlocal ev_i
+        while ev_i < len(ev) and ev[ev_i][0] <= now:
+            t, delta = ev[ev_i]
+            ev_i += 1
+            if delta > 0:
+                for _ in range(delta):
+                    heapq.heappush(free, t)
+            else:
+                for _ in range(-delta):
+                    pending_removals.append(t)
+
+    ptr = 0
+    lat_len = latency_lut.shape[0]
+    while ptr < k:
+        if not free:
+            if ev_i < len(ev):
+                apply_events(ev[ev_i][0])
+                continue
+            done[ptr:] = _FAR_FUTURE
+            break
+        f = heapq.heappop(free)
+        start = max(f, ready[ptr])
+        apply_events(start)
+        if pending_removals and pending_removals[0] <= start:
+            pending_removals.pop(0)
+            continue
+        hi = ptr
+        limit = ptr + max_batch
+        while hi < k and hi < limit and ready[hi] <= start:
+            hi += 1
+        if hi == ptr:
+            start = ready[ptr]
+            while hi < k and hi < limit and ready[hi] <= start:
+                hi += 1
+        if timeout_s > 0.0 and hi < limit and hi < k:
+            deadline = ready[ptr] + timeout_s
+            if deadline > start:
+                fill_t = ready[limit - 1] if limit - 1 < k else _FAR_FUTURE
+                start = min(max(start, fill_t), deadline)
+                while hi < k and hi < limit and ready[hi] <= start:
+                    hi += 1
+        b = hi - ptr
+        lat = latency_lut[b] if b < lat_len else latency_lut[-1] * b / (lat_len - 1)
+        end = start + lat
+        done[ptr:hi] = end
+        batches.append(b)
+        ptr = hi
+        heapq.heappush(free, end)
+
+    completion = np.empty(k, dtype=np.float64)
+    completion[:] = done
+    return completion, np.asarray(batches, dtype=np.int64)
+
+
+class GoldenEstimator:
+    """The seed `Estimator` class, frozen (same constructor/API shape)."""
+
+    def __init__(
+        self,
+        pipeline: Pipeline,
+        profiles: ProfileStore,
+        rpc_delay_s: float = GOLDEN_RPC_DELAY_S,
+        seed: int = 0,
+    ):
+        self.pipeline = pipeline
+        self.profiles = profiles
+        self.rpc_delay_s = rpc_delay_s
+        self.seed = seed
+        self._topo = pipeline.toposort()
+        self._edges_in: Dict[str, List] = {
+            s: [e for e in pipeline.edges if e.dst == s] for s in self._topo
+        }
+
+    def _edge_draws(self, n: int) -> Dict[Tuple[str, str], np.ndarray]:
+        rng = np.random.default_rng(self.seed)
+        draws = {}
+        for e in self.pipeline.edges:
+            if e.probability >= 1.0:
+                draws[(e.src, e.dst)] = np.ones(n, dtype=bool)
+            else:
+                draws[(e.src, e.dst)] = rng.random(n) < e.probability
+        return draws
+
+    def simulate(
+        self,
+        config: PipelineConfig,
+        arrivals: np.ndarray,
+        replica_schedules: Optional[Dict[str, Sequence[Tuple[float, int]]]] = None,
+    ) -> SimResult:
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        n = arrivals.shape[0]
+        draws = self._edge_draws(n)
+
+        visited: Dict[str, np.ndarray] = {SOURCE: np.ones(n, dtype=bool)}
+        completion: Dict[str, np.ndarray] = {SOURCE: arrivals}
+        last_done = np.array(arrivals, copy=True)
+        per_stage_batches: Dict[str, np.ndarray] = {}
+
+        for stage in self._topo:
+            vis = np.zeros(n, dtype=bool)
+            ready = np.zeros(n, dtype=np.float64)
+            for e in self._edges_in[stage]:
+                active = visited[e.src] & draws[(e.src, e.dst)]
+                deliver = completion[e.src] + self.rpc_delay_s
+                ready = np.where(active, np.maximum(ready, deliver), ready)
+                vis |= active
+            visited[stage] = vis
+            k = int(vis.sum())
+            if k == 0:
+                completion[stage] = np.full(n, -np.inf)
+                per_stage_batches[stage] = np.zeros(0, dtype=np.int64)
+                continue
+
+            cfg = config[stage]
+            prof = self.profiles.get(self.pipeline.stages[stage].model_id)
+            lut = prof.latency_lut(cfg.hardware, cfg.batch_size)
+
+            idx = np.nonzero(vis)[0]
+            order = idx[np.argsort(ready[idx], kind="stable")]
+            sorted_ready = ready[order]
+            sched = (replica_schedules or {}).get(stage)
+            comp_sorted, batches = golden_simulate_stage(
+                sorted_ready, order, lut, cfg.batch_size, cfg.replicas,
+                sched, timeout_s=getattr(cfg, "timeout_s", 0.0)
+            )
+            comp = np.full(n, -np.inf)
+            comp[order] = comp_sorted
+            completion[stage] = comp
+            per_stage_batches[stage] = batches
+            last_done = np.where(vis, np.maximum(last_done, comp), last_done)
+
+        latency = last_done - arrivals + self.rpc_delay_s
+        return SimResult(arrivals, latency, per_stage_batches)
+
+    def estimate_p99(self, config: PipelineConfig, arrivals: np.ndarray) -> float:
+        return self.simulate(config, arrivals).p99
+
+    def service_time(self, config: PipelineConfig) -> float:
+        total = 0.0
+        path = self.pipeline.longest_path_stages()
+        for stage in path:
+            cfg = config[stage]
+            prof = self.profiles.get(self.pipeline.stages[stage].model_id)
+            total += prof.batch_latency(cfg.hardware, cfg.batch_size)
+            total += self.rpc_delay_s
+        return total + self.rpc_delay_s

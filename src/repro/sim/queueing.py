@@ -1,0 +1,462 @@
+"""Per-stage queueing policies: one centralized batched queue, R servers.
+
+Each policy simulates ONE stage — a single queue feeding ``replicas``
+batch-servers whose batch latency is given by a lookup table — and is
+selected per stage via ``StageConfig.policy``:
+
+* ``fifo``      — the paper's greedy arrival-order batching, plus the
+  beyond-paper batch-formation timeout (``StageConfig.timeout_s``). This
+  is the seed estimator's exact semantics, bit-identical, but the inner
+  per-query fill loop is replaced with a numpy batch-boundary scan
+  (``np.searchsorted`` per batch) so cost scales with the number of
+  batches formed, not queries scanned.
+* ``edf``       — earliest-deadline-first: among the queries ready at
+  dispatch time, serve the ``batch`` with the earliest deadlines.
+  Deadline scheduling lets late-but-urgent queries (e.g. a query delayed
+  on a slow sibling branch) jump the queue at join stages.
+* ``slo-drop``  — FIFO with SLO-aware load shedding (admission control at
+  dequeue): a query that can no longer meet its deadline even if served
+  alone right now is dropped instead of poisoning the batch behind it.
+  Dropped queries complete at ``+inf`` and are flagged in the returned
+  drop mask.
+
+All policies share the dynamic replica-pool semantics of the seed engine:
+``replica_events`` is a sorted list of ``(t, +1/-1)`` scale events; ``+1``
+adds a replica free at ``t``, ``-1`` retires the next replica to go idle
+at/after ``t``.
+
+Defensive LUT clamp: the effective max batch is clamped to the profiled
+range (``len(lut) - 1``), so a configured ``batch_size`` above the
+profile's largest batch can never silently extrapolate a bogus latency
+(the seed scaled ``lut[-1] * b / (len - 1)``, i.e. linear-through-origin,
+which can be wildly wrong for constant-latency stages).
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_FAR_FUTURE = 1e18
+
+# (completion times, batch sizes formed, dropped mask) — all aligned with
+# the sorted `ready` input except `batches`, which is per batch formed.
+StageOutcome = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+# Linear walks beat np.searchsorted's per-call overhead for short fills;
+# wide fills (large batches) cross over to the O(log k) boundary search.
+_SCAN_CROSSOVER = 64
+
+
+def _effective_max_batch(latency_lut: np.ndarray, max_batch: int) -> int:
+    lat_len = int(latency_lut.shape[0])
+    if lat_len < 2:
+        raise ValueError(
+            f"latency LUT must cover at least batch=1 (got {lat_len} entries)")
+    return min(int(max_batch), lat_len - 1)
+
+
+class _ReplicaPool:
+    """Heap of replica free-times plus the (t, +/-1) dynamic scale events."""
+
+    def __init__(self, replicas: int,
+                 events: Optional[Sequence[Tuple[float, int]]]):
+        self.free: List[float] = [0.0] * max(replicas, 0)
+        heapq.heapify(self.free)
+        self.events = list(events or [])
+        self.ev_i = 0
+        self.pending_removals: List[float] = []
+
+    def apply_events(self, now: float) -> None:
+        while self.ev_i < len(self.events) and self.events[self.ev_i][0] <= now:
+            t, delta = self.events[self.ev_i]
+            self.ev_i += 1
+            if delta > 0:
+                for _ in range(delta):
+                    heapq.heappush(self.free, t)
+            else:
+                for _ in range(-delta):
+                    self.pending_removals.append(t)
+
+    def has_future_adds(self) -> bool:
+        return self.ev_i < len(self.events)
+
+    def fast_forward(self) -> None:
+        self.apply_events(self.events[self.ev_i][0])
+
+    def retire_if_pending(self, now: float) -> bool:
+        """True if the just-popped replica is retired by a pending removal."""
+        if self.pending_removals and self.pending_removals[0] <= now:
+            self.pending_removals.pop(0)
+            return True
+        return False
+
+
+def fifo(
+    ready: np.ndarray,
+    latency_lut: np.ndarray,
+    max_batch: int,
+    replicas: int,
+    replica_events: Optional[Sequence[Tuple[float, int]]] = None,
+    timeout_s: float = 0.0,
+    deadline: Optional[np.ndarray] = None,
+) -> StageOutcome:
+    """Arrival-order batching (the paper's policy). `deadline` is ignored.
+
+    Bit-identical to the seed estimator's ``_simulate_stage``. Hot-loop
+    engineering (EXPERIMENTS.md §Perf): all per-query numpy scalar work
+    is hoisted out of the loop — ready times and the LUT become native
+    floats (exact same IEEE-754 values), batch boundaries come from an
+    inline walk or an ``np.searchsorted`` scan past the crossover, and
+    per-query completions are materialized with one ``np.repeat`` over
+    the (batch end, batch size) run-lengths instead of a slice write per
+    batch. Static schedules (no replica events) take a specialized path;
+    batch=1 stages reduce to a pure scalar recurrence.
+    """
+    k = ready.shape[0]
+    dropped = np.zeros(k, dtype=bool)
+    if k == 0:
+        return np.empty(0, dtype=np.float64), np.zeros(0, dtype=np.int64), \
+            dropped
+    eff_batch = _effective_max_batch(latency_lut, max_batch)
+    ready_l = ready.tolist()
+    lut_l = latency_lut.tolist()
+    if not replica_events:
+        done, batches = _fifo_static(ready, ready_l, lut_l, eff_batch,
+                                     replicas, timeout_s)
+    else:
+        done, batches = _fifo_dynamic(ready, ready_l, lut_l, eff_batch,
+                                      replicas, replica_events, timeout_s)
+    return done, batches, dropped
+
+
+def _fill_boundary(ready: np.ndarray, ready_l: List[float],
+                   ptr: int, limit: int, t: float) -> int:
+    """First index in [ptr, limit) whose ready time exceeds `t`.
+
+    `ready_l[ptr] <= t` always holds at call sites, so the right-bisection
+    over the full array equals the seed's linear walk from `ptr`.
+    """
+    if limit - ptr <= _SCAN_CROSSOVER:
+        hi = ptr + 1
+        while hi < limit and ready_l[hi] <= t:
+            hi += 1
+        return hi
+    hi = int(ready.searchsorted(t, side="right"))
+    return hi if hi < limit else limit
+
+
+def _fifo_static(
+    ready: np.ndarray,
+    ready_l: List[float],
+    lut_l: List[float],
+    eff_batch: int,
+    replicas: int,
+    timeout_s: float,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """FIFO with a fixed replica pool — the planner's hot path."""
+    k = len(ready_l)
+    if replicas <= 0:
+        return np.full(k, _FAR_FUTURE), np.zeros(0, dtype=np.int64)
+
+    if eff_batch == 1:
+        # batch=1: the fill scan is vacuous (hi == ptr+1 always, so the
+        # timeout hold never applies) and the loop is a scalar recurrence.
+        # With R identical servers the replica-pool minimum at step i is
+        # exactly the completion of query i-R (service times are equal,
+        # so completions leave the pool in insertion order): the heap
+        # reduces to `done[i-R]`, bit-identical and allocation-free.
+        lat1 = lut_l[1]
+        ends: List[float] = []
+        if replicas == 1:
+            f = 0.0
+            for r in ready_l:
+                f = (r if r > f else f) + lat1
+                ends.append(f)
+        else:
+            R = replicas
+            for i, r in enumerate(ready_l):
+                f = ends[i - R] if i >= R else 0.0
+                ends.append((r if r > f else f) + lat1)
+        return (np.asarray(ends, dtype=np.float64),
+                np.ones(k, dtype=np.int64))
+
+    free = [0.0] * replicas
+    heapq.heapify(free)
+    pop, push = heapq.heappop, heapq.heappush
+    ends, counts = [], []          # run-length encoded completions
+    ptr = 0
+    while ptr < k:
+        f = pop(free)
+        r0 = ready_l[ptr]
+        start = r0 if r0 > f else f
+        full_limit = ptr + eff_batch       # where a full batch would end
+        limit = full_limit if full_limit < k else k
+        hi = _fill_boundary(ready, ready_l, ptr, limit, start)
+        if timeout_s > 0.0 and hi < limit:
+            # timeout batching (beyond-paper): hold the batch open until
+            # either max_batch queries are ready or `timeout_s` elapses
+            # from the head-of-line query's arrival
+            hold_until = r0 + timeout_s
+            if hold_until > start:
+                # a batch that can never fill waits out the full timeout
+                fill_t = ready_l[full_limit - 1] if full_limit - 1 < k \
+                    else _FAR_FUTURE
+                start = min(max(start, fill_t), hold_until)
+                hi = _fill_boundary(ready, ready_l, ptr, limit, start)
+        b = hi - ptr
+        ends.append(start + lut_l[b])
+        counts.append(b)
+        ptr = hi
+        push(free, ends[-1])
+    batches = np.asarray(counts, dtype=np.int64)
+    done = np.repeat(np.asarray(ends, dtype=np.float64), batches)
+    return done, batches
+
+
+def _fifo_dynamic(
+    ready: np.ndarray,
+    ready_l: List[float],
+    lut_l: List[float],
+    eff_batch: int,
+    replicas: int,
+    replica_events: Sequence[Tuple[float, int]],
+    timeout_s: float,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """FIFO under a (t, +/-1) replica schedule (live-cluster runs)."""
+    k = len(ready_l)
+    pool = _ReplicaPool(replicas, replica_events)
+    ends: List[float] = []
+    counts: List[int] = []
+    starved = False
+    ptr = 0
+    while ptr < k:
+        if not pool.free:
+            if pool.has_future_adds():
+                pool.fast_forward()
+                continue
+            ends.append(_FAR_FUTURE)       # no capacity ever again
+            counts.append(k - ptr)
+            starved = True
+            break
+        f = heapq.heappop(pool.free)
+        r0 = ready_l[ptr]
+        start = r0 if r0 > f else f
+        pool.apply_events(start)
+        if pool.retire_if_pending(start):
+            continue
+        full_limit = ptr + eff_batch
+        limit = full_limit if full_limit < k else k
+        hi = _fill_boundary(ready, ready_l, ptr, limit, start)
+        if timeout_s > 0.0 and hi < limit:
+            hold_until = r0 + timeout_s
+            if hold_until > start:
+                fill_t = ready_l[full_limit - 1] if full_limit - 1 < k \
+                    else _FAR_FUTURE
+                start = min(max(start, fill_t), hold_until)
+                hi = _fill_boundary(ready, ready_l, ptr, limit, start)
+        b = hi - ptr
+        ends.append(start + lut_l[b])
+        counts.append(b)
+        ptr = hi
+        heapq.heappush(pool.free, ends[-1])
+    run_lengths = np.asarray(counts, dtype=np.int64)
+    done = np.repeat(np.asarray(ends, dtype=np.float64), run_lengths)
+    # the capacity-exhausted tail is a run, not a served batch
+    return done, (run_lengths[:-1] if starved else run_lengths)
+
+
+def edf(
+    ready: np.ndarray,
+    latency_lut: np.ndarray,
+    max_batch: int,
+    replicas: int,
+    replica_events: Optional[Sequence[Tuple[float, int]]] = None,
+    timeout_s: float = 0.0,
+    deadline: Optional[np.ndarray] = None,
+) -> StageOutcome:
+    """Earliest-deadline-first batching.
+
+    At each dispatch, the batch is the (up to) ``max_batch`` queries with
+    the earliest deadlines among those ready. Without deadlines this
+    degrades to ordering by ready time (= FIFO). ``timeout_s`` is ignored:
+    EDF already trades head latency explicitly via the deadline order.
+
+    The pending set is a (deadline, index) heap, so sustained backlog —
+    exactly the regime EDF targets — costs O(n log n), not O(n^2). A
+    popped entry that is not yet ready at this dispatch instant (possible
+    because dispatch times are not monotone across replicas) is deferred
+    and re-pushed; deferrals only arise after idle-jump admissions and
+    stay rare.
+    """
+    k = ready.shape[0]
+    done = np.full(k, _FAR_FUTURE, dtype=np.float64)
+    dropped = np.zeros(k, dtype=bool)
+    if k == 0:
+        return done, np.zeros(0, dtype=np.int64), dropped
+    eff_batch = _effective_max_batch(latency_lut, max_batch)
+    pool = _ReplicaPool(replicas, replica_events)
+    batches: List[int] = []
+    ready_l = ready.tolist()
+    lut_l = latency_lut.tolist()
+    key_l = deadline.tolist() if deadline is not None else ready_l
+
+    pending: List[Tuple[float, int]] = []   # heap of (deadline, idx)
+    ai = 0                         # next un-admitted index (ready-sorted)
+    served = 0
+    while served < k:
+        if not pool.free:
+            if pool.has_future_adds():
+                pool.fast_forward()
+                continue
+            break                   # unserved queries keep _FAR_FUTURE
+        f = heapq.heappop(pool.free)
+        start = f
+        take: List[int] = []
+        retired = False
+        while True:
+            if pool.events:
+                pool.apply_events(start)
+                if pool.retire_if_pending(start):
+                    retired = True
+                    break
+            while ai < k and ready_l[ai] <= start:
+                heapq.heappush(pending, (key_l[ai], ai))
+                ai += 1
+            deferred: List[Tuple[float, int]] = []
+            while pending and len(take) < eff_batch:
+                item = heapq.heappop(pending)
+                if ready_l[item[1]] <= start:
+                    take.append(item[1])
+                else:
+                    deferred.append(item)
+            for item in deferred:
+                heapq.heappush(pending, item)
+            if take:
+                break
+            # nothing serviceable at `start`: the replica idles until the
+            # earliest instant any unserved query becomes ready
+            t_next = min((ready_l[i] for _, i in pending), default=np.inf)
+            if ai < k and ready_l[ai] < t_next:
+                t_next = ready_l[ai]
+            start = t_next          # finite: served < k => queries remain
+        if retired:
+            continue
+        b = len(take)
+        end = start + lut_l[b]
+        for i in take:
+            done[i] = end
+        batches.append(b)
+        served += b
+        heapq.heappush(pool.free, end)
+    return done, np.asarray(batches, dtype=np.int64), dropped
+
+
+def slo_drop(
+    ready: np.ndarray,
+    latency_lut: np.ndarray,
+    max_batch: int,
+    replicas: int,
+    replica_events: Optional[Sequence[Tuple[float, int]]] = None,
+    timeout_s: float = 0.0,
+    deadline: Optional[np.ndarray] = None,
+) -> StageOutcome:
+    """FIFO with SLO-aware shedding at dequeue (admission control).
+
+    When a batch is formed at time ``start``, any candidate query whose
+    deadline cannot be met even by a batch-1 dispatch right now
+    (``deadline < start + lut[1]``) is dropped rather than served: it
+    completes at ``+inf`` and is flagged in the drop mask. Under overload
+    this keeps the queue from collapsing — the paper's feasibility-only
+    planner has no answer once the offered load exceeds capacity.
+
+    ``timeout_s`` is ignored (as in ``edf``) — holding a batch open is
+    at odds with shedding already-late work — and it is ignored
+    consistently whether or not deadlines are supplied, so a stage
+    config means the same system with and without an ``slo_s``.
+    Without deadlines there is nothing to shed against and the policy
+    reduces to greedy-batching ``fifo``.
+    """
+    if deadline is None:
+        return fifo(ready, latency_lut, max_batch, replicas,
+                    replica_events, timeout_s=0.0)
+    k = ready.shape[0]
+    done = np.empty(k, dtype=np.float64)
+    dropped = np.zeros(k, dtype=bool)
+    if k == 0:
+        return done, np.zeros(0, dtype=np.int64), dropped
+    eff_batch = _effective_max_batch(latency_lut, max_batch)
+    solo_lat = latency_lut[1]
+    pool = _ReplicaPool(replicas, replica_events)
+    batches: List[int] = []
+
+    ptr = 0
+    while ptr < k:
+        if not pool.free:
+            if pool.has_future_adds():
+                pool.fast_forward()
+                continue
+            done[ptr:] = _FAR_FUTURE
+            break
+        f = heapq.heappop(pool.free)
+        r0 = ready[ptr]
+        start = r0 if r0 > f else f
+        pool.apply_events(start)
+        if pool.retire_if_pending(start):
+            continue
+        # form the batch in arrival order, shedding hopeless queries
+        take: List[int] = []
+        i = ptr
+        while i < k and ready[i] <= start and len(take) < eff_batch:
+            if deadline[i] < start + solo_lat:
+                dropped[i] = True
+                done[i] = np.inf
+            else:
+                take.append(i)
+            i += 1
+        ptr = i
+        if not take:                 # everything scanned was shed
+            heapq.heappush(pool.free, f)
+            continue
+        b = len(take)
+        end = start + latency_lut[b]
+        done[take] = end
+        batches.append(b)
+        heapq.heappush(pool.free, end)
+    return done, np.asarray(batches, dtype=np.int64), dropped
+
+
+PolicyFn = Callable[..., StageOutcome]
+
+QUEUE_POLICIES: Dict[str, PolicyFn] = {
+    "fifo": fifo,
+    "edf": edf,
+    "slo-drop": slo_drop,
+}
+
+
+def get_policy(name: str) -> PolicyFn:
+    try:
+        return QUEUE_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown queueing policy {name!r}; "
+            f"have {sorted(QUEUE_POLICIES)}") from None
+
+
+def simulate_stage(
+    policy: str,
+    ready: np.ndarray,
+    latency_lut: np.ndarray,
+    max_batch: int,
+    replicas: int,
+    replica_events: Optional[Sequence[Tuple[float, int]]] = None,
+    timeout_s: float = 0.0,
+    deadline: Optional[np.ndarray] = None,
+) -> StageOutcome:
+    """Dispatch to a named policy. `ready` must be sorted ascending."""
+    return get_policy(policy)(ready, latency_lut, max_batch, replicas,
+                              replica_events, timeout_s, deadline)

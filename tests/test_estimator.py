@@ -171,6 +171,26 @@ def test_dynamic_replica_remove_event():
     assert done_dropped.max() >= done_2.max()
 
 
+def test_lut_clamp_no_bogus_extrapolation():
+    """A max_batch above the profiled LUT range must clamp batch formation
+    to the profiled range, not extrapolate a linear-through-origin latency
+    (the seed scaled lut[-1] * b / (len - 1), wildly wrong for
+    constant-latency stages)."""
+    ready = np.zeros(6)
+    order = np.arange(6)
+    lut = np.array([0.0, 0.01, 0.012])    # profiled up to batch 2 only
+    done, batches = _simulate_stage(ready, order, lut, 8, 1)
+    assert batches.max() <= 2              # never forms an unprofiled batch
+    # 3 batches of 2 back-to-back, all latencies straight from the LUT
+    np.testing.assert_allclose(np.sort(done),
+                               np.repeat(0.012 * np.arange(1, 4), 2))
+
+
+def test_lut_too_short_rejected():
+    with pytest.raises(ValueError):
+        _simulate_stage(np.zeros(3), np.arange(3), np.array([0.0]), 4, 1)
+
+
 def test_windowed_miss_rate_shapes():
     pipe, store = _single_stage(0.01)
     est = Estimator(pipe, store)
@@ -218,8 +238,7 @@ def test_timeout_batching_full_batch_cuts_wait_short():
 
 # ---------------------------------------------------------------- properties
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 
 arrivals_st = st.lists(

@@ -1,0 +1,343 @@
+"""Unified sim engine: golden equivalence, incrementality, policies.
+
+The contract of the refactor (repro.sim) is *exact* reproduction: the
+engine must return bit-identical per-query latencies to the frozen seed
+implementation (repro.sim.golden) on arbitrary DAG pipelines, traces,
+and configurations — and incremental re-simulation after single-stage
+mutations must equal full re-simulation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (
+    SOURCE,
+    Edge,
+    Pipeline,
+    PipelineConfig,
+    Stage,
+    StageConfig,
+)
+from repro.core.profiler import ModelProfile, ProfileStore
+from repro.sim import QUEUE_POLICIES, SimEngine, simulate_stage
+from repro.sim.golden import GoldenEstimator
+
+HW = "cpu-1"
+
+
+def _random_pipeline(rng, n_stages):
+    """Random feed-forward DAG with conditional edges + random profiles."""
+    names = [f"s{i}" for i in range(n_stages)]
+    stages = {nm: Stage(nm, nm, (HW,)) for nm in names}
+    edges = [Edge(SOURCE, names[0])]
+    for i in range(1, n_stages):
+        # every stage gets >= 1 parent among its predecessors (or source)
+        parents = [SOURCE] if rng.random() < 0.3 else []
+        for j in range(i):
+            if rng.random() < 0.5:
+                parents.append(names[j])
+        if not parents:
+            parents = [names[int(rng.integers(i))]]
+        for p in parents:
+            prob = 1.0 if rng.random() < 0.6 else float(rng.uniform(0.2, 0.9))
+            edges.append(Edge(p, names[i], probability=prob))
+    pipe = Pipeline("rand", stages, edges)
+    store = ProfileStore()
+    for nm in names:
+        base = float(rng.uniform(0.001, 0.03))
+        slope = float(rng.uniform(0.0, 0.01))
+        table = {(HW, b): base + slope * b for b in (1, 2, 4, 8, 16, 32)}
+        store.add(ModelProfile(nm, table, (1, 2, 4, 8, 16, 32)))
+    return pipe, store
+
+
+def _random_config(rng, pipe):
+    # 128 crosses queueing._SCAN_CROSSOVER so the searchsorted
+    # batch-boundary branch is equivalence-tested too, not just the
+    # linear walk
+    return PipelineConfig({
+        s: StageConfig(
+            HW,
+            int(rng.choice([1, 2, 4, 8, 16, 64, 128])),
+            int(rng.integers(1, 5)),
+            timeout_s=float(rng.choice([0.0, 0.0, 0.02])),
+        )
+        for s in pipe.stages
+    })
+
+
+def _random_trace(rng):
+    n = int(rng.integers(50, 400))
+    gaps = rng.exponential(1.0 / 80.0, n)
+    arr = np.cumsum(gaps)
+    # inject simultaneous arrivals (burst ties exercise heap tie-breaks)
+    if n > 10:
+        arr[n // 2:n // 2 + 5] = arr[n // 2]
+    return np.sort(arr)
+
+
+def test_golden_equivalence_randomized():
+    """Engine == frozen seed, bit for bit, over random DAGs x configs."""
+    rng = np.random.default_rng(7)
+    for trial in range(30):
+        pipe, store = _random_pipeline(rng, int(rng.integers(1, 6)))
+        seed = int(rng.integers(100))
+        engine = SimEngine(pipe, store, seed=seed)
+        golden = GoldenEstimator(pipe, store, seed=seed)
+        arr = _random_trace(rng)
+        for _ in range(3):
+            cfg = _random_config(rng, pipe)
+            a = engine.simulate(cfg, arr)
+            g = golden.simulate(cfg, arr)
+            np.testing.assert_array_equal(a.latency, g.latency)
+            for s in pipe.stages:
+                np.testing.assert_array_equal(
+                    a.per_stage_batches[s], g.per_stage_batches[s])
+
+
+def test_golden_equivalence_replica_schedules():
+    rng = np.random.default_rng(21)
+    for _ in range(10):
+        pipe, store = _random_pipeline(rng, int(rng.integers(1, 4)))
+        engine = SimEngine(pipe, store)
+        golden = GoldenEstimator(pipe, store)
+        arr = _random_trace(rng)
+        cfg = _random_config(rng, pipe)
+        t_end = float(arr.max())
+        sched = {}
+        for s in pipe.stages:
+            evs = []
+            for _ in range(int(rng.integers(0, 4))):
+                evs.append((float(rng.uniform(0, t_end)),
+                            int(rng.choice([-1, 1]))))
+            if evs:
+                sched[s] = sorted(evs)
+        a = engine.simulate(cfg, arr, replica_schedules=sched)
+        g = golden.simulate(cfg, arr, replica_schedules=sched)
+        np.testing.assert_array_equal(a.latency, g.latency)
+
+
+def test_incremental_equals_full_after_mutations():
+    """Session re-simulation after random single-stage mutations is
+    bit-identical to a fresh full simulation, and only re-simulates the
+    mutated stage's downstream cone."""
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        pipe, store = _random_pipeline(rng, int(rng.integers(2, 6)))
+        engine = SimEngine(pipe, store)
+        arr = _random_trace(rng)
+        session = engine.session(arr)
+        cfg = _random_config(rng, pipe)
+        session.simulate(cfg)
+        stages = list(pipe.stages)
+        for _ in range(8):
+            stage = stages[int(rng.integers(len(stages)))]
+            new = cfg.copy()
+            sc = new[stage]
+            move = int(rng.integers(3))
+            if move == 0:
+                sc.batch_size = max(1, sc.batch_size // 2) \
+                    if rng.random() < 0.5 else min(32, sc.batch_size * 2)
+            elif move == 1:
+                sc.replicas = max(1, sc.replicas + int(rng.choice([-1, 1])))
+            else:
+                sc.timeout_s = 0.02 if sc.timeout_s == 0.0 else 0.0
+            before = dict(session.stats)
+            inc = session.simulate_delta(new, changed_stage=stage)
+            full = SimEngine(pipe, store).simulate(new, arr)
+            np.testing.assert_array_equal(inc.latency, full.latency)
+            if new.cache_key() != cfg.cache_key():
+                resimmed = session.stats["stage_sims"] - before["stage_sims"]
+                # at most the downstream cone is recomputed (cache may
+                # even hold parts of the cone from earlier mutations)
+                assert resimmed <= len(engine.descendants(stage))
+            cfg = new
+
+
+def test_simulate_many_matches_individual():
+    rng = np.random.default_rng(11)
+    pipe, store = _random_pipeline(rng, 4)
+    engine = SimEngine(pipe, store)
+    arr = _random_trace(rng)
+    configs = [_random_config(rng, pipe) for _ in range(6)]
+    session = engine.session(arr)
+    batch = session.simulate_many(configs)
+    for cfg, res in zip(configs, batch):
+        fresh = SimEngine(pipe, store).simulate(cfg, arr)
+        np.testing.assert_array_equal(res.latency, fresh.latency)
+
+
+def test_stage_cache_hits_on_repeat():
+    rng = np.random.default_rng(13)
+    pipe, store = _random_pipeline(rng, 3)
+    engine = SimEngine(pipe, store)
+    arr = _random_trace(rng)
+    session = engine.session(arr)
+    cfg = _random_config(rng, pipe)
+    session.simulate(cfg)
+    sims_before = session.stats["stage_sims"]
+    session.simulate(cfg)                      # pure cache replay
+    assert session.stats["stage_sims"] == sims_before
+    assert session.stats["stage_hits"] >= len(pipe.stages)
+
+
+# ---------------------------------------------------------------- policies
+
+
+def _one_stage(latency=0.01, batches=(1, 2, 4, 8)):
+    pipe = Pipeline("one", {"m": Stage("m", "m", (HW,))},
+                    [Edge(SOURCE, "m")])
+    store = ProfileStore()
+    store.add(ModelProfile("m", {(HW, b): latency for b in batches},
+                           tuple(batches)))
+    return pipe, store
+
+
+def test_policy_registry_exposes_paper_and_new_policies():
+    assert {"fifo", "edf", "slo-drop"} <= set(QUEUE_POLICIES)
+
+
+def test_edf_serves_urgent_queries_first():
+    """Two queries ready together, reversed deadlines: EDF reorders."""
+    ready = np.array([0.0, 0.0, 0.0, 0.0])
+    lut = np.array([0.0, 0.01])
+    deadline = np.array([4.0, 3.0, 2.0, 1.0])     # last query most urgent
+    done_fifo, _, _ = simulate_stage("fifo", ready, lut, 1, 1)
+    done_edf, _, _ = simulate_stage("edf", ready, lut, 1, 1,
+                                    deadline=deadline)
+    assert done_fifo[0] < done_fifo[-1]           # fifo: arrival order
+    assert done_edf[-1] < done_edf[0]             # edf: deadline order
+    # same work conserves the completion-time multiset
+    np.testing.assert_allclose(np.sort(done_fifo), np.sort(done_edf))
+
+
+def _edf_reference(ready, deadline, lut, max_batch, replicas):
+    """Brute-force EDF oracle: O(n^2) scan-and-sort per dispatch."""
+    import heapq
+    k = ready.shape[0]
+    done = np.full(k, 1e18)
+    unserved = set(range(k))
+    free = [0.0] * replicas
+    heapq.heapify(free)
+    eff = min(max_batch, len(lut) - 1)
+    while unserved:
+        f = heapq.heappop(free)
+        start = f
+        elig = [i for i in unserved if ready[i] <= start]
+        if not elig:
+            start = min(ready[i] for i in unserved)
+            elig = [i for i in unserved if ready[i] <= start]
+        elig.sort(key=lambda i: (deadline[i], i))
+        take = elig[:eff]
+        end = start + lut[len(take)]
+        for i in take:
+            done[i] = end
+            unserved.discard(i)
+        heapq.heappush(free, end)
+    return done
+
+
+def test_edf_heap_matches_bruteforce_reference():
+    """The heap-based EDF (O(n log n)) equals the O(n^2) oracle on random
+    ready/deadline patterns, including non-monotone deadline-vs-ready
+    order and multi-replica pools."""
+    rng = np.random.default_rng(17)
+    lut = np.array([0.0, 0.01, 0.015, 0.018, 0.02])
+    for _ in range(25):
+        n = int(rng.integers(5, 120))
+        ready = np.sort(rng.uniform(0, 0.5, n))
+        deadline = ready + rng.uniform(0.01, 0.3, n)
+        b = int(rng.choice([1, 2, 4]))
+        r = int(rng.integers(1, 4))
+        got, _, _ = simulate_stage("edf", ready, lut, b, r,
+                                   deadline=deadline)
+        want = _edf_reference(ready, deadline, lut, b, r)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_edf_without_deadlines_matches_fifo_order():
+    ready = np.sort(np.random.default_rng(0).uniform(0, 1, 50))
+    lut = np.array([0.0, 0.05])
+    done_fifo, _, _ = simulate_stage("fifo", ready, lut, 1, 2)
+    done_edf, _, _ = simulate_stage("edf", ready, lut, 1, 2)
+    np.testing.assert_allclose(done_fifo, done_edf)
+
+
+def test_slo_drop_sheds_hopeless_queries():
+    """Overloaded stage: shedding keeps served queries inside the SLO."""
+    n = 60
+    ready = np.zeros(n)                  # one giant burst
+    lut = np.array([0.0, 0.01])
+    slo = 0.055
+    deadline = ready + slo
+    done, batches, dropped = simulate_stage(
+        "slo-drop", ready, lut, 1, 1, deadline=deadline)
+    assert dropped.any() and not dropped.all()
+    served = done[~dropped]
+    assert (served <= deadline[~dropped] + 1e-12).all()
+    assert np.isinf(done[dropped]).all()
+    assert batches.sum() == n - dropped.sum()
+
+
+def test_slo_drop_noop_when_underloaded():
+    ready = np.arange(20) * 1.0
+    lut = np.array([0.0, 0.01])
+    deadline = ready + 1.0
+    d1, b1, drop1 = simulate_stage("slo-drop", ready, lut, 4, 1,
+                                   deadline=deadline)
+    d0, b0, drop0 = simulate_stage("fifo", ready, lut, 4, 1)
+    assert not drop1.any()
+    np.testing.assert_array_equal(d1, d0)
+    np.testing.assert_array_equal(b1, b0)
+
+
+def test_engine_slo_drop_end_to_end():
+    """Dropped mask propagates to SimResult; drops count as SLO misses."""
+    pipe, store = _one_stage(latency=0.01)
+    engine = SimEngine(pipe, store)
+    arrivals = np.zeros(50)              # hopeless burst for 1 replica
+    slo = 0.05
+    cfg_drop = PipelineConfig({"m": StageConfig(HW, 1, 1, policy="slo-drop")})
+    cfg_fifo = PipelineConfig({"m": StageConfig(HW, 1, 1)})
+    res_drop = engine.simulate(cfg_drop, arrivals, slo_s=slo)
+    res_fifo = engine.simulate(cfg_fifo, arrivals, slo_s=slo)
+    assert res_drop.dropped is not None and res_drop.drop_rate > 0
+    assert res_fifo.dropped is None
+    # shedding can't reduce the miss rate below fifo's here (every shed
+    # query is a miss) but served queries all meet the SLO
+    served = res_drop.latency[~res_drop.dropped]
+    assert (served <= slo).all()
+    # every miss under shedding IS a drop: miss rate == drop rate
+    assert res_drop.slo_miss_rate(slo) == pytest.approx(res_drop.drop_rate)
+    assert np.isinf(res_drop.latency[res_drop.dropped]).all()
+
+
+def test_unknown_policy_raises():
+    pipe, store = _one_stage()
+    engine = SimEngine(pipe, store)
+    cfg = PipelineConfig({"m": StageConfig(HW, 1, 1, policy="lifo")})
+    with pytest.raises(ValueError, match="unknown queueing policy"):
+        engine.simulate(cfg, np.array([0.0]))
+
+
+def test_windowed_miss_rate_matches_naive_loop():
+    """bincount aggregation == the seed's per-window Python loop."""
+    pipe, store = _one_stage(latency=0.02)
+    engine = SimEngine(pipe, store)
+    rng = np.random.default_rng(5)
+    arr = np.sort(rng.uniform(0, 30, 500))
+    cfg = PipelineConfig({"m": StageConfig(HW, 2, 1)})
+    res = engine.simulate(cfg, arr)
+    slo, window = 0.03, 2.5
+    edges, rates = res.windowed_miss_rate(slo, window)
+    # naive reference (the seed implementation)
+    ref_edges = np.arange(0.0, float(arr.max()) + window, window)
+    idx = np.clip(np.digitize(arr, ref_edges) - 1, 0, len(ref_edges) - 1)
+    miss = (res.latency > slo).astype(np.float64)
+    ref = np.full(len(ref_edges), np.nan)
+    for w in range(len(ref_edges)):
+        sel = idx == w
+        if sel.any():
+            ref[w] = miss[sel].mean()
+    np.testing.assert_array_equal(edges, ref_edges)
+    np.testing.assert_allclose(rates, ref, equal_nan=True)

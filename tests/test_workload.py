@@ -2,8 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.workload.generator import (
     cv_ramp_trace,
