@@ -1,0 +1,166 @@
+"""SLO-class scenario suite -> BENCH_slo_classes.json.
+
+Mixed per-query SLO classes (interactive + batch sharing one fleet) are
+the scenario family the scalar-SLO paper cannot express. Each scenario
+interleaves class-tagged Gamma streams (:mod:`repro.workload.slo_classes`)
+and runs the SAME configuration — so equal cost — under the three
+queueing policies; the table reports what each class experiences.
+
+The headline the suite asserts on every run: a deadline-aware policy
+(EDF or slo-drop) beats FIFO on the tight class's miss rate at equal
+cost in every class-mix scenario.
+
+A final `planner` section quantifies the provisioning angle: planning
+the mix at the tightest SLO for everyone (the only option without
+classes) vs `Planner.plan_classed` (every class meets its own deadline)
+with FIFO and with EDF stages.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.pipeline import (
+    SOURCE,
+    Edge,
+    Pipeline,
+    PipelineConfig,
+    Stage,
+    StageConfig,
+    linear_pipeline,
+)
+from repro.core.planner import Planner
+from repro.core.profiler import (
+    ModelProfile,
+    ModelSpec,
+    ProfileStore,
+    profile_model_analytic,
+)
+from repro.sim import SimEngine
+from repro.workload import SLOClass, classed_trace
+
+from benchmarks.common import save, table
+
+HW = "cpu-1"
+
+# name -> (classes, duration_s, seed, stage latency-per-batch fn, batch,
+#          replicas). Single contended stage: capacity vs the offered mix
+# is what separates the policies.
+Scenario = Tuple[List[SLOClass], float, int, float, int, int]
+
+SCENARIOS: Dict[str, Scenario] = {
+    # steady interactive + heavy batch, ~95% utilized
+    "steady_mix": (
+        [SLOClass("interactive", 80.0, 2.0, 0.03),
+         SLOClass("batch", 140.0, 1.0, 1.0)],
+        60.0, 2, 0.004, 4, 1),
+    # bursty interactive stream (cv=4) over a steady batch floor
+    "bursty_interactive": (
+        [SLOClass("interactive", 60.0, 4.0, 0.04),
+         SLOClass("batch", 150.0, 1.0, 2.0)],
+        60.0, 3, 0.004, 4, 1),
+    # three tiers sharing two replicas
+    "three_tiers": (
+        [SLOClass("gold", 50.0, 2.0, 0.04),
+         SLOClass("silver", 100.0, 1.0, 0.15),
+         SLOClass("bronze", 250.0, 1.0, 3.0)],
+        60.0, 4, 0.004, 4, 2),
+}
+
+
+def _one_stage_engine(lat_per_batch: float) -> SimEngine:
+    pipe = Pipeline("slo-mix", {"m": Stage("m", "m", (HW,))},
+                    [Edge(SOURCE, "m")])
+    store = ProfileStore()
+    batches = (1, 2, 4, 8, 16)
+    store.add(ModelProfile(
+        "m", {(HW, b): lat_per_batch * b for b in batches}, batches))
+    return SimEngine(pipe, store)
+
+
+def _run_scenarios() -> dict:
+    out: dict = {}
+    for name, (classes, dur, seed, lat, batch, reps) in SCENARIOS.items():
+        tr = classed_trace(classes, dur, seed=seed)
+        engine = _one_stage_engine(lat)
+        tight = classes[0].name          # scenario lists tightest first
+        rows = []
+        per_policy: dict = {}
+        for policy in ("fifo", "edf", "slo-drop"):
+            cfg = PipelineConfig(
+                {"m": StageConfig(HW, batch, reps, policy=policy)})
+            res = engine.simulate(cfg, tr.arrivals,
+                                  slo_s=tr.slo_per_query,
+                                  class_ids=tr.class_ids,
+                                  class_names=tr.class_names)
+            bc = res.per_class()
+            per_policy[policy] = {
+                "cost_per_hr": cfg.cost_per_hr(),
+                "overall_miss_rate": res.per_query_miss_rate(),
+                "per_class": bc,
+            }
+            rows.append([policy] + [
+                f"{bc[c.name]['miss_rate']:.3f}/"
+                f"{bc[c.name]['p99_served'] * 1e3:.0f}ms"
+                for c in classes])
+        print(f"\n-- {name}: {tr.n} queries, classes "
+              f"{[c.name for c in classes]}")
+        print(table(rows, ["policy"] + [f"{c.name} miss/p99"
+                                        for c in classes]))
+        fifo_tight = per_policy["fifo"]["per_class"][tight]["miss_rate"]
+        best_aware = min(
+            per_policy[p]["per_class"][tight]["miss_rate"]
+            for p in ("edf", "slo-drop"))
+        # the suite's contract: deadline-awareness beats FIFO on the
+        # tight class at equal cost, in every scenario
+        assert best_aware < fifo_tight, (name, fifo_tight, best_aware)
+        out[name] = {
+            "classes": [vars(c) for c in classes],
+            "n_queries": tr.n,
+            "tight_class": tight,
+            "policies": per_policy,
+            "tight_miss_fifo": fifo_tight,
+            "tight_miss_best_deadline_aware": best_aware,
+        }
+    return out
+
+
+def _bench_planner() -> dict:
+    """Provisioning: uniform-tightest vs multi-class objective."""
+    prep = ModelSpec("prep", flops_per_query=2e9, weight_bytes=1e6,
+                     act_bytes_per_query=1e6, parallelizable=False)
+    cls = ModelSpec("res152", flops_per_query=2.3e10, weight_bytes=1.2e8,
+                    act_bytes_per_query=5e7)
+    store = ProfileStore()
+    for s in (prep, cls):
+        store.add(profile_model_analytic(s))
+    pipe = linear_pipeline("image-processing", ["prep", "res152"])
+    mix = classed_trace([SLOClass("interactive", 40.0, 1.0, 0.1),
+                         SLOClass("batch", 160.0, 1.0, 2.0)], 60.0, seed=1)
+
+    uniform = Planner(pipe, store).plan(mix.arrivals, mix.min_slo_s)
+    classed_fifo = Planner(pipe, store).plan_classed(mix)
+    classed_edf = Planner(pipe, store, policy="edf").plan_classed(mix)
+    rows, out = [], {}
+    for name, res in (("uniform_tightest", uniform),
+                      ("classed_fifo", classed_fifo),
+                      ("classed_edf", classed_edf)):
+        out[name] = {
+            "feasible": res.feasible,
+            "cost_per_hr": res.cost_per_hr,
+            "per_class_p99": res.per_class_p,
+        }
+        rows.append([name, res.feasible, f"${res.cost_per_hr:.2f}/hr"])
+    print()
+    print(table(rows, ["objective", "feasible", "cost"]))
+    assert classed_fifo.cost_per_hr <= uniform.cost_per_hr + 1e-9
+    assert classed_edf.cost_per_hr <= uniform.cost_per_hr + 1e-9
+    return out
+
+
+def run() -> dict:
+    payload = {"scenarios": _run_scenarios(), "planner": _bench_planner()}
+    save("BENCH_slo_classes", payload)
+    return payload

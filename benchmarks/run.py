@@ -3,6 +3,11 @@
 Usage:
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig5 fig6  # subset
+
+Related test lanes (see pyproject.toml):
+  PYTHONPATH=src python -m pytest -x -q       # tier-1 (slow tests skipped)
+  PYTHONPATH=src python -m pytest -m slow -q  # slow lane: full ~3 min
+                                              # mamba/pallas kernel sweep
 """
 
 from __future__ import annotations
@@ -12,6 +17,7 @@ import time
 
 from benchmarks import (
     bench_engine,
+    bench_slo_classes,
     beyond_planner,
     fig3_profiles,
     fig5_planner_vs_cg,
@@ -39,6 +45,7 @@ BENCHES = {
     "fig14": fig14_ds2,
     "beyond_planner": beyond_planner,
     "engine": bench_engine,
+    "slo_classes": bench_slo_classes,
     "roofline": roofline_report,
 }
 

@@ -18,7 +18,7 @@ Tuner) are supported via per-stage ``(time, +1/-1)`` replica events; see
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -70,16 +70,22 @@ class Estimator:
                                 seed=seed)
 
     def session(self, arrivals: np.ndarray,
-                slo_s: Optional[float] = None) -> TraceSession:
+                slo_s: Optional[Union[float, np.ndarray]] = None,
+                class_ids: Optional[np.ndarray] = None,
+                class_names: Optional[Sequence[str]] = None) -> TraceSession:
         """Bind to one trace for incremental re-simulation across configs."""
-        return self.engine.session(arrivals, slo_s=slo_s)
+        return self.engine.session(arrivals, slo_s=slo_s,
+                                   class_ids=class_ids,
+                                   class_names=class_names)
 
     def simulate(
         self,
         config: PipelineConfig,
         arrivals: np.ndarray,
         replica_schedules: Optional[Dict[str, Sequence[Tuple[float, int]]]] = None,
-        slo_s: Optional[float] = None,
+        slo_s: Optional[Union[float, np.ndarray]] = None,
+        class_ids: Optional[np.ndarray] = None,
+        class_names: Optional[Sequence[str]] = None,
     ) -> SimResult:
         """Run the trace through the configured pipeline.
 
@@ -90,10 +96,15 @@ class Estimator:
             (used by the live-cluster simulation; see module docstring).
           slo_s: optional per-query deadline horizon (arrival + slo_s),
             consumed by deadline-aware policies (``edf``, ``slo-drop``).
+            Scalar = uniform SLO; an (n,) vector carries mixed per-query
+            SLO classes (:mod:`repro.workload.slo_classes`).
+          class_ids / class_names: optional per-query SLO-class tags for
+            ``SimResult.per_class`` breakdowns.
         """
         return self.engine.simulate(config, arrivals,
                                     replica_schedules=replica_schedules,
-                                    slo_s=slo_s)
+                                    slo_s=slo_s, class_ids=class_ids,
+                                    class_names=class_names)
 
     # -- planner-facing helpers ----------------------------------------------
     def estimate_p99(self, config: PipelineConfig, arrivals: np.ndarray) -> float:

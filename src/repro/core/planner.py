@@ -82,25 +82,38 @@ class PlannerResult:
     estimated_p99: float
     iterations: int
     simulations: int
+    # per-class estimated percentile latency, set by plan_classed() only
+    per_class_p: Optional[Dict[str, float]] = None
 
     def describe(self) -> str:
         if not self.feasible:
             return "INFEASIBLE under the current hardware menu/SLO"
         assert self.config is not None
-        return (f"{self.config.describe()}\n  est. P99 = "
-                f"{self.estimated_p99 * 1e3:.1f} ms "
-                f"({self.iterations} iters, {self.simulations} sims)")
+        txt = (f"{self.config.describe()}\n  est. P99 = "
+               f"{self.estimated_p99 * 1e3:.1f} ms "
+               f"({self.iterations} iters, {self.simulations} sims)")
+        if self.per_class_p:
+            txt += "".join(f"\n  class {name}: P = {p * 1e3:.1f} ms"
+                           for name, p in self.per_class_p.items())
+        return txt
 
 
 class Planner:
     def __init__(self, pipeline: Pipeline, profiles: ProfileStore,
                  estimator: Optional[Estimator] = None,
-                 percentile: float = 99.0):
+                 percentile: float = 99.0, policy: str = "fifo"):
         self.pipeline = pipeline
         self.profiles = profiles
         self.estimator = estimator or Estimator(pipeline, profiles)
         self.percentile = percentile
+        # queueing policy stamped on every stage of the search space —
+        # "edf" lets a multi-class plan serve tight-deadline traffic from
+        # fewer replicas (deadline scheduling instead of overprovisioning)
+        self.policy = policy
         self._session = None
+        # set by plan_classed() for the duration of the search: feasibility
+        # then means EVERY class meets its own percentile deadline
+        self._classed = None
 
     # ---------------------------------------------------------------- utils
     def _stage_hw_options(self, stage: str) -> List[str]:
@@ -118,8 +131,18 @@ class Planner:
         """One incremental session per plan() call: all candidate
         evaluations share the per-stage memoization."""
         if hasattr(self.estimator, "session"):
-            self._session = self.estimator.session(arrivals)
+            if self._classed is not None:
+                t = self._classed
+                self._session = self.estimator.session(
+                    arrivals, slo_s=t.slo_per_query,
+                    class_ids=t.class_ids, class_names=t.class_names)
+            else:
+                self._session = self.estimator.session(arrivals)
         else:  # estimator-like object without an engine (golden oracle)
+            if self._classed is not None:
+                raise ValueError(
+                    "multi-class planning requires an engine-backed "
+                    "estimator (got a session-less estimator)")
             self._session = _ScalarSession(self.estimator, arrivals)
 
     def _ensure_session(self, arrivals: np.ndarray) -> None:
@@ -139,6 +162,15 @@ class Planner:
         return self._session.percentile(config, self.percentile)
 
     def _feasible(self, config: PipelineConfig, slo: float) -> bool:
+        if self._classed is not None:
+            # multi-class objective: every class meets its OWN percentile
+            # deadline (the scalar `slo` threaded through the search loops
+            # is the min over classes, used only for service-time
+            # prefilters — a necessary condition for the tightest class)
+            return all(
+                self._session.class_percentile(config, self.percentile, cid)
+                <= c.slo_s
+                for cid, c in enumerate(self._classed.classes))
         return self._p99(config) <= slo
 
     def _throughput(self, config: PipelineConfig, stage: str) -> float:
@@ -152,7 +184,7 @@ class Planner:
         arrivals = np.asarray(arrivals, dtype=np.float64)
         self._ensure_session(arrivals)
         config = PipelineConfig({
-            s: StageConfig(self._best_hardware(s), 1, 1)
+            s: StageConfig(self._best_hardware(s), 1, 1, policy=self.policy)
             for s in self.pipeline.stages
         })
         if self.estimator.service_time(config) > slo:
@@ -289,6 +321,41 @@ class Planner:
         p99 = self._p99(config)
         return PlannerResult(True, config, config.cost_per_hr(), p99,
                              iterations, self._sims)
+
+    # ------------------------------------------------- multi-class objective
+    def plan_classed(self, trace, **plan_kwargs) -> PlannerResult:
+        """Provision for a mixed per-query SLO workload.
+
+        ``trace`` is a :class:`repro.workload.slo_classes.ClassedTrace`:
+        interleaved arrival stream plus per-query class tags, each class
+        carrying its own latency SLO. The search is the paper's greedy
+        loop (or the annealed refinement on :class:`AnnealedPlanner`)
+        with the feasibility predicate replaced by the multi-class
+        objective — the configured percentile of EVERY class must meet
+        that class's own deadline — while cost is minimized across the
+        mix. Service-time prefilters use the tightest class's SLO (a
+        necessary condition, so no feasible configuration is pruned).
+
+        Uniform-SLO degenerate case: with one class this reduces exactly
+        to ``plan(trace.arrivals, slo)`` feasibility-wise (one constraint
+        over all queries).
+        """
+        if not getattr(trace, "classes", None):
+            raise ValueError("plan_classed needs a ClassedTrace with >=1 "
+                             "SLOClass")
+        self._classed = trace
+        try:
+            result = self.plan(trace.arrivals, trace.min_slo_s,
+                               **plan_kwargs)
+            if result.feasible:
+                result.per_class_p = {
+                    c.name: self._session.class_percentile(
+                        result.config, self.percentile, cid)
+                    for cid, c in enumerate(trace.classes)
+                }
+            return result
+        finally:
+            self._classed = None
 
 
 # ---------------------------------------------------------------------------

@@ -56,8 +56,14 @@ class TunerPlanInfo:
                   profiles: ProfileStore, sample_arrivals: np.ndarray,
                   service_time_s: float) -> "TunerPlanInfo":
         arr = np.asarray(sample_arrivals, dtype=np.float64)
-        duration = float(arr.max() - arr.min()) if arr.size > 1 else 1.0
-        lam = arr.size / max(duration, 1e-9)
+        # lam = n / (max - min) diverges when the span is ~0 (0, 1, or
+        # simultaneous arrivals); a degenerate sample carries no planned
+        # rate, so fall back to rho = 1 (no burst slack: scale exactly to
+        # demand) — a tiny rho floor here would make _replicas_for_rate,
+        # which divides by rho, explode to millions of replicas on the
+        # first real traffic
+        duration = float(arr.max() - arr.min()) if arr.size > 1 else 0.0
+        lam = arr.size / duration if duration > 1e-9 else 0.0
         s = pipeline.scale_factors()
         mu, rho, k = {}, {}, {}
         for stage, cfg in config.stage_configs.items():
@@ -66,7 +72,8 @@ class TunerPlanInfo:
             mu[stage] = mu_m
             k[stage] = cfg.replicas
             lam_m = lam * s[stage]
-            rho[stage] = max(lam_m / (cfg.replicas * mu_m), 1e-6)
+            rho[stage] = max(lam_m / (cfg.replicas * mu_m), 1e-6) \
+                if lam > 0.0 else 1.0
         env = TrafficEnvelope.from_trace(arr, service_time_s)
         return TunerPlanInfo(env, mu, rho, s, k, service_time_s)
 
@@ -186,4 +193,10 @@ def run_tuner_offline(
                 schedules[stage].append((t, delta))
         before = after
         t += interval_s
+    # scale-ups land at t + activation_delay_s while scale-downs land at
+    # t, so a down issued within activation_delay_s of an up would appear
+    # *before* it in emission order — the engine's _ReplicaPool.apply_events
+    # assumes a time-sorted (t, +/-1) stream, so merge-sort each schedule
+    for evs in schedules.values():
+        evs.sort(key=lambda e: e[0])
     return schedules

@@ -55,8 +55,10 @@ def _mamba_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref,
         a_bar = jnp.exp(dt_t[:, None] * a)                    # (D_blk, N)
         h = a_bar * h + (dt_t * x_t)[:, None] * b_t[None, :]
         y_t = jnp.sum(h * c_t[None, :], axis=1)               # (D_blk,)
-        pl.store(y_ref, (0, pl.dslice(t, 1), slice(None)),
-                 y_t[None, :].astype(y_ref.dtype))
+        # NB: every ref index must be a slice (pl.ds/:): a raw int index
+        # crashes interpret-mode state discharge (_swap_discharge_rule)
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y_t[None, None, :].astype(y_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, chunk, step, h_scratch[...])
@@ -64,7 +66,7 @@ def _mamba_kernel(dt_ref, x_ref, b_ref, c_ref, a_ref, h0_ref,
 
     @pl.when(ci == n_chunks - 1)
     def _flush():
-        hout_ref[0] = h.astype(hout_ref.dtype)
+        hout_ref[...] = h[None].astype(hout_ref.dtype)
 
 
 def mamba_scan(

@@ -27,7 +27,7 @@ re-simulation.
 from __future__ import annotations
 
 import collections
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -124,11 +124,21 @@ class SimEngine:
         return draws
 
     # -- public API ---------------------------------------------------------
-    def session(self, arrivals: np.ndarray, slo_s: Optional[float] = None,
+    def session(self, arrivals: np.ndarray,
+                slo_s: Optional[Union[float, np.ndarray]] = None,
+                class_ids: Optional[np.ndarray] = None,
+                class_names: Optional[Sequence[str]] = None,
                 max_cache_entries: int = 512,
                 max_cache_bytes: Optional[int] = None) -> "TraceSession":
-        """Bind the engine to one trace for incremental re-simulation."""
+        """Bind the engine to one trace for incremental re-simulation.
+
+        ``slo_s`` may be a scalar (uniform SLO, the paper's setting) or a
+        per-query vector for mixed SLO classes; ``class_ids`` /
+        ``class_names`` tag queries for per-class ``SimResult``
+        breakdowns (see :mod:`repro.workload.slo_classes`).
+        """
         return TraceSession(self, arrivals, slo_s=slo_s,
+                            class_ids=class_ids, class_names=class_names,
                             max_cache_entries=max_cache_entries,
                             max_cache_bytes=max_cache_bytes)
 
@@ -137,10 +147,13 @@ class SimEngine:
         config: PipelineConfig,
         arrivals: np.ndarray,
         replica_schedules: Optional[Schedules] = None,
-        slo_s: Optional[float] = None,
+        slo_s: Optional[Union[float, np.ndarray]] = None,
+        class_ids: Optional[np.ndarray] = None,
+        class_names: Optional[Sequence[str]] = None,
     ) -> SimResult:
         """One-shot simulation (fresh session; no cross-call memoization)."""
-        return self.session(arrivals, slo_s=slo_s).simulate(
+        return self.session(arrivals, slo_s=slo_s, class_ids=class_ids,
+                            class_names=class_names).simulate(
             config, replica_schedules=replica_schedules)
 
     def service_time(self, config: PipelineConfig) -> float:
@@ -194,14 +207,40 @@ class TraceSession:
     DEFAULT_CACHE_BYTES = 256 * 1024 * 1024
 
     def __init__(self, engine: SimEngine, arrivals: np.ndarray,
-                 slo_s: Optional[float] = None,
+                 slo_s: Optional[Union[float, np.ndarray]] = None,
+                 class_ids: Optional[np.ndarray] = None,
+                 class_names: Optional[Sequence[str]] = None,
                  max_cache_entries: int = 512,
                  max_cache_bytes: Optional[int] = None):
         self.engine = engine
         self.arrivals = np.asarray(arrivals, dtype=np.float64)
         self.n = int(self.arrivals.shape[0])
         self.slo_s = slo_s
-        self.deadline = (self.arrivals + slo_s) if slo_s is not None else None
+        # scalar slo_s = uniform deadline (seed semantics, bit-identical:
+        # arrivals + scalar and arrivals + broadcast vector are the same
+        # float64 adds); a (n,) vector carries mixed per-query SLO classes
+        if slo_s is None:
+            self.slo_per_query: Optional[np.ndarray] = None
+            self.deadline: Optional[np.ndarray] = None
+        else:
+            slo_arr = np.asarray(slo_s, dtype=np.float64)
+            if slo_arr.ndim == 0:
+                slo_arr = np.full(self.n, float(slo_arr))
+            elif slo_arr.shape != (self.n,):
+                raise ValueError(
+                    f"slo_s must be a scalar or shape ({self.n},) vector, "
+                    f"got shape {slo_arr.shape}")
+            self.slo_per_query = slo_arr
+            self.deadline = self.arrivals + slo_arr
+        if class_ids is None:
+            self.class_ids: Optional[np.ndarray] = None
+        else:
+            self.class_ids = np.asarray(class_ids, dtype=np.int64)
+            if self.class_ids.shape != (self.n,):
+                raise ValueError(
+                    f"class_ids must have shape ({self.n},), got "
+                    f"{self.class_ids.shape}")
+        self.class_names = tuple(class_names) if class_names else None
         self.draws = engine.edge_draws(self.n)
         self.max_cache_entries = max_cache_entries
         self.max_cache_bytes = (max_cache_bytes if max_cache_bytes is not None
@@ -332,7 +371,10 @@ class TraceSession:
                            else dropped | ent.dropped)
 
         latency = last_done - self.arrivals + engine.rpc_delay_s  # reply hop
-        return SimResult(self.arrivals, latency, per_stage_batches, dropped)
+        return SimResult(self.arrivals, latency, per_stage_batches, dropped,
+                         class_ids=self.class_ids,
+                         class_names=self.class_names,
+                         slo_s=self.slo_per_query)
 
     def simulate_delta(
         self,
@@ -372,6 +414,38 @@ class TraceSession:
             self._pctl_cache[key] = val
             if len(self._pctl_cache) > self._max_pctl_entries:
                 self._pctl_cache.popitem(last=False)
+        else:
+            self._pctl_cache.move_to_end(key)
+        return val
+
+    def class_percentile(self, config: PipelineConfig, p: float,
+                         class_id: int,
+                         replica_schedules: Optional[Schedules] = None
+                         ) -> float:
+        """Memoized latency percentile over one class's queries — the
+        scalar the multi-class planner objective consumes. One cache miss
+        simulates once and fills the entry for EVERY class (the planner
+        always probes all classes per candidate), so the per-candidate
+        cost stays one simulation regardless of class count. A class with
+        no queries reports 0.0 (trivially feasible)."""
+        if self.class_ids is None:
+            raise ValueError("session has no class_ids; open the session "
+                             "with class tags for per-class percentiles")
+        cfg_key = self.config_key(config, replica_schedules)
+        key = (cfg_key, p, ("class", int(class_id)))
+        val = self._pctl_cache.get(key)
+        if val is None:
+            res = self.simulate(config, replica_schedules)
+            for cid in np.unique(self.class_ids):
+                sel = res.latency[self.class_ids == cid]
+                v = float(np.percentile(sel, p)) if sel.size else 0.0
+                self._pctl_cache[(cfg_key, p, ("class", int(cid)))] = v
+            while len(self._pctl_cache) > self._max_pctl_entries:
+                self._pctl_cache.popitem(last=False)
+            val = self._pctl_cache.get(key)
+            if val is None:          # class absent from the trace
+                val = 0.0
+                self._pctl_cache[key] = val
         else:
             self._pctl_cache.move_to_end(key)
         return val

@@ -8,6 +8,12 @@ Beyond the seed estimator's result it carries an optional per-query
 ``dropped`` mask for SLO-aware load-shedding policies
 (:mod:`repro.sim.queueing`): shed queries have ``latency = +inf`` and
 ``dropped[q] = True``, and count as SLO misses.
+
+For mixed per-query SLO workloads (:mod:`repro.workload.slo_classes`)
+it additionally carries per-query ``class_ids`` / ``slo_s`` tags, and
+:meth:`per_class` reports the latency/miss/drop breakdown each class
+sees — the multi-class planner objective and the SLO-class benchmark
+both consume it.
 """
 
 from __future__ import annotations
@@ -26,6 +32,9 @@ class SimResult:
     latency: np.ndarray            # (n,) end-to-end latency (s); +inf if shed
     per_stage_batches: Dict[str, np.ndarray]  # stage -> batch sizes formed
     dropped: Optional[np.ndarray] = None      # (n,) bool; None = no shedding
+    class_ids: Optional[np.ndarray] = None    # (n,) int SLO-class tags
+    class_names: Optional[Tuple[str, ...]] = None  # id -> display name
+    slo_s: Optional[np.ndarray] = None        # (n,) per-query SLO (s)
 
     @property
     def num_queries(self) -> int:
@@ -72,6 +81,85 @@ class SimResult:
 
     def slo_attainment(self, slo: float) -> float:
         return 1.0 - self.slo_miss_rate(slo)
+
+    # -- per-query / per-class SLO accounting -----------------------------
+    def per_query_miss_mask(self) -> np.ndarray:
+        """Miss mask against each query's OWN SLO (requires ``slo_s``)."""
+        if self.slo_s is None:
+            raise ValueError("result carries no per-query slo_s")
+        miss = self.latency > self.slo_s
+        if self.dropped is not None:
+            miss = miss | self.dropped
+        return miss
+
+    def per_query_miss_rate(self) -> float:
+        if not self.latency.size:
+            return 0.0
+        return float(self.per_query_miss_mask().mean())
+
+    def class_mask(self, cls) -> np.ndarray:
+        """Bool mask for one class, by id or (if names were set) name."""
+        if self.class_ids is None:
+            raise ValueError("result carries no class_ids")
+        if isinstance(cls, str):
+            if self.class_names is None:
+                raise ValueError("result carries no class_names")
+            cls = self.class_names.index(cls)
+        return self.class_ids == int(cls)
+
+    def per_class(self) -> Dict[str, Dict[str, float]]:
+        """Latency/miss/drop breakdown per SLO class.
+
+        Returns ``{class_name: {n, slo_s, p50, p99, p99_served,
+        mean_served, miss_rate, drop_rate}}``; miss rate is against the
+        class's own SLO (misses include drops). When ``class_names`` is
+        set, every named class gets an entry — a class with no queries
+        in the trace reports ``n=0`` and zero latencies rather than
+        vanishing from the breakdown.
+        """
+        if self.class_ids is None:
+            raise ValueError("result carries no class_ids")
+        ids = (range(len(self.class_names)) if self.class_names
+               else np.unique(self.class_ids))
+        out: Dict[str, Dict[str, float]] = {}
+        for cid in ids:
+            sel = self.class_ids == cid
+            name = (self.class_names[int(cid)] if self.class_names
+                    else str(int(cid)))
+            if not sel.any():
+                out[name] = {"n": 0, "p50": 0.0, "p99": 0.0,
+                             "p99_served": 0.0, "mean_served": 0.0,
+                             "drop_rate": 0.0}
+                if self.slo_s is not None:
+                    out[name]["slo_s"] = float("nan")
+                    out[name]["miss_rate"] = 0.0
+                continue
+            lat = self.latency[sel]
+            dropped = self.dropped[sel] if self.dropped is not None else \
+                np.zeros(lat.shape[0], dtype=bool)
+            served = lat[~dropped]
+            # under heavy shedding the all-queries percentiles interpolate
+            # between +infs (nan); that is meaningful ("tail is shed"),
+            # p99_served carries the finite tail — just mute the warning
+            with np.errstate(invalid="ignore"):
+                p50 = float(np.percentile(lat, 50.0))
+                p99 = float(np.percentile(lat, 99.0))
+            stats = {
+                "n": int(lat.shape[0]),
+                "p50": p50,
+                "p99": p99,
+                "p99_served": (float(np.percentile(served, 99.0))
+                               if served.size else 0.0),
+                "mean_served": float(served.mean()) if served.size else 0.0,
+                "drop_rate": float(dropped.mean()) if lat.size else 0.0,
+            }
+            if self.slo_s is not None:
+                slo = self.slo_s[sel]
+                stats["slo_s"] = float(slo[0]) if slo.size else float("nan")
+                stats["miss_rate"] = float(
+                    ((lat > slo) | dropped).mean()) if lat.size else 0.0
+            out[name] = stats
+        return out
 
     def windowed_miss_rate(self, slo: float, window_s: float = 5.0
                            ) -> Tuple[np.ndarray, np.ndarray]:

@@ -4,4 +4,9 @@ from repro.workload.generator import (  # noqa: F401
     cv_ramp_trace,
     rate_ramp_trace,
 )
+from repro.workload.slo_classes import (  # noqa: F401
+    ClassedTrace,
+    SLOClass,
+    classed_trace,
+)
 from repro.workload.traces import autoscale_derived_trace  # noqa: F401

@@ -229,6 +229,7 @@ def test_xla_flash_matches_pallas_interpret():
 from repro.kernels.mamba_scan import mamba_scan  # noqa: E402
 
 
+@pytest.mark.slow   # interpret-mode fori_loop over full sequences: ~3 min
 @pytest.mark.parametrize("b,s,d,n,chunk,dblk", [
     (2, 512, 256, 16, 128, 128),
     (1, 256, 128, 32, 256, 128),    # single chunk

@@ -1,0 +1,361 @@
+"""Mixed per-query SLO classes end-to-end (workload -> engine -> planner).
+
+Covers the three contracts of the SLO-class feature:
+
+1. **Golden equivalence** — class-tagging is pure metadata on the
+   arrival stream: a single-class trace simulated through the classed
+   path (deadline vector + class ids attached) is *bit-identical* to the
+   frozen seed implementation and to the untagged engine path.
+2. **Per-class accounting** — `SimResult.per_class` partitions the trace
+   exactly, and miss rates are measured against each class's own SLO.
+3. **Multi-class planning** — `Planner.plan_classed` returns a
+   configuration under which every class meets its own percentile
+   deadline, never costing more than planning the whole mix at the
+   tightest SLO.
+
+Plus the hypothesis property tests (via the tests/_hyp.py shim): EDF
+serves ready queries in deadline order, and tagging a class with a
+tighter deadline never makes it slower than the uniform-deadline run.
+"""
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+from test_sim_engine import _random_config, _random_pipeline, _random_trace
+
+from repro.core.pipeline import (
+    SOURCE,
+    Edge,
+    Pipeline,
+    PipelineConfig,
+    Stage,
+    StageConfig,
+)
+from repro.core.planner import AnnealedPlanner, Planner
+from repro.core.profiler import (
+    ModelProfile,
+    ModelSpec,
+    ProfileStore,
+    profile_model_analytic,
+)
+from repro.sim import SimEngine, simulate_stage
+from repro.sim.golden import GoldenEstimator
+from repro.workload import SLOClass, classed_trace
+from repro.workload.generator import gamma_trace
+
+HW = "cpu-1"
+
+
+def _one_stage(lat_fn, batches=(1, 2, 4, 8)):
+    pipe = Pipeline("one", {"m": Stage("m", "m", (HW,))},
+                    [Edge(SOURCE, "m")])
+    store = ProfileStore()
+    store.add(ModelProfile("m", {(HW, b): lat_fn(b) for b in batches},
+                           tuple(batches)))
+    return pipe, store
+
+
+MIX = (SLOClass("interactive", 80.0, 2.0, 0.03),
+       SLOClass("batch", 140.0, 1.0, 1.0))
+
+
+# ------------------------------------------------------- trace generation
+
+def test_classed_trace_interleaves_and_tags():
+    tr = classed_trace(MIX, 30.0, seed=3)
+    assert tr.arrivals.shape == tr.class_ids.shape
+    assert (np.diff(tr.arrivals) >= 0).all()
+    assert set(np.unique(tr.class_ids)) == {0, 1}
+    # each class's sub-stream is exactly its own gamma trace
+    for i, c in enumerate(MIX):
+        own = gamma_trace(c.lam, c.cv, 30.0, seed=3 + i)
+        np.testing.assert_array_equal(tr.arrivals[tr.class_ids == i], own)
+    # per-query SLO vector reflects the class tags
+    np.testing.assert_array_equal(
+        tr.slo_per_query,
+        np.where(tr.class_ids == 0, MIX[0].slo_s, MIX[1].slo_s))
+    np.testing.assert_array_equal(tr.deadline,
+                                  tr.arrivals + tr.slo_per_query)
+    assert tr.counts() == {"interactive": int((tr.class_ids == 0).sum()),
+                           "batch": int((tr.class_ids == 1).sum())}
+    assert tr.min_slo_s == MIX[0].slo_s
+
+
+def test_classed_trace_single_class_matches_gamma_trace():
+    tr = classed_trace([SLOClass("only", 120.0, 1.0, 0.2)], 20.0, seed=9)
+    np.testing.assert_array_equal(
+        tr.arrivals, gamma_trace(120.0, 1.0, 20.0, seed=9))
+    assert (tr.class_ids == 0).all()
+
+
+def test_classed_trace_rejects_bad_input():
+    with pytest.raises(ValueError):
+        classed_trace([], 10.0)
+    with pytest.raises(ValueError):
+        classed_trace([SLOClass("a", 10, 1.0, 0.1),
+                       SLOClass("a", 20, 1.0, 0.2)], 10.0)
+    with pytest.raises(ValueError):
+        SLOClass("bad", 10.0, 1.0, -1.0)
+
+
+# -------------------------------------------------- golden equivalence guard
+
+def test_single_class_bit_identical_to_seed_randomized():
+    """The classed path (deadline vector + tags attached) must NOT perturb
+    simulation: on uniform-SLO traces with the paper's fifo policy, the
+    per-query latencies equal the frozen seed implementation bit for bit,
+    and equal the untagged engine path."""
+    rng = np.random.default_rng(99)
+    for _ in range(10):
+        pipe, store = _random_pipeline(rng, int(rng.integers(1, 5)))
+        seed = int(rng.integers(100))
+        engine = SimEngine(pipe, store, seed=seed)
+        golden = GoldenEstimator(pipe, store, seed=seed)
+        arr = _random_trace(rng)
+        uniform_slo = np.full(arr.shape[0], 0.25)
+        ids = np.zeros(arr.shape[0], dtype=np.int64)
+        for _ in range(2):
+            cfg = _random_config(rng, pipe)
+            tagged = engine.simulate(cfg, arr, slo_s=uniform_slo,
+                                     class_ids=ids, class_names=("only",))
+            plain = engine.simulate(cfg, arr)
+            gold = golden.simulate(cfg, arr)
+            np.testing.assert_array_equal(tagged.latency, gold.latency)
+            np.testing.assert_array_equal(tagged.latency, plain.latency)
+            for s in pipe.stages:
+                np.testing.assert_array_equal(
+                    tagged.per_stage_batches[s], gold.per_stage_batches[s])
+
+
+def test_scalar_and_vector_slo_identical():
+    """A scalar slo_s and its broadcast vector drive identical deadline
+    behavior through the deadline-aware policies."""
+    pipe, store = _one_stage(lambda b: 0.004 * b)
+    engine = SimEngine(pipe, store)
+    tr = classed_trace([SLOClass("only", 250.0, 2.0, 0.05)], 20.0, seed=4)
+    for policy in ("edf", "slo-drop"):
+        cfg = PipelineConfig({"m": StageConfig(HW, 4, 1, policy=policy)})
+        scalar = engine.simulate(cfg, tr.arrivals, slo_s=0.05)
+        vector = engine.simulate(cfg, tr.arrivals, slo_s=tr.slo_per_query,
+                                 class_ids=tr.class_ids,
+                                 class_names=tr.class_names)
+        np.testing.assert_array_equal(scalar.latency, vector.latency)
+
+
+def test_session_rejects_misshapen_vectors():
+    pipe, store = _one_stage(lambda b: 0.004 * b)
+    engine = SimEngine(pipe, store)
+    arr = np.arange(10) * 0.01
+    with pytest.raises(ValueError, match="slo_s"):
+        engine.session(arr, slo_s=np.zeros(3))
+    with pytest.raises(ValueError, match="class_ids"):
+        engine.session(arr, class_ids=np.zeros(3, dtype=np.int64))
+
+
+# --------------------------------------------------- per-class accounting
+
+def test_per_class_breakdown_partitions_trace():
+    pipe, store = _one_stage(lambda b: 0.004 * b)
+    engine = SimEngine(pipe, store)
+    tr = classed_trace(MIX, 30.0, seed=1)
+    cfg = PipelineConfig({"m": StageConfig(HW, 4, 2, policy="edf")})
+    res = engine.simulate(cfg, tr.arrivals, slo_s=tr.slo_per_query,
+                          class_ids=tr.class_ids,
+                          class_names=tr.class_names)
+    bc = res.per_class()
+    assert set(bc) == {"interactive", "batch"}
+    assert sum(v["n"] for v in bc.values()) == res.num_queries
+    for i, c in enumerate(MIX):
+        sel = tr.class_ids == i
+        assert bc[c.name]["n"] == int(sel.sum())
+        assert bc[c.name]["slo_s"] == c.slo_s
+        assert bc[c.name]["p99"] == pytest.approx(
+            np.percentile(res.latency[sel], 99.0))
+        assert bc[c.name]["miss_rate"] == pytest.approx(
+            float((res.latency[sel] > c.slo_s).mean()))
+    # overall per-query miss rate is the n-weighted mix of the classes
+    want = sum(bc[c.name]["miss_rate"] * bc[c.name]["n"] for c in MIX)
+    assert res.per_query_miss_rate() == pytest.approx(want / res.num_queries)
+    np.testing.assert_array_equal(res.class_mask("interactive"),
+                                  tr.class_ids == 0)
+
+
+def test_per_class_reports_empty_classes():
+    """A named class with zero arrivals must still appear (n=0), and its
+    planner constraint is trivially feasible — not a silent KeyError."""
+    pipe, store = _one_stage(lambda b: 0.004 * b)
+    engine = SimEngine(pipe, store)
+    tr = classed_trace([SLOClass("tight", 50.0, 1.0, 0.1),
+                        SLOClass("ghost", 0.0, 1.0, 0.5)], 10.0, seed=0)
+    assert tr.counts()["ghost"] == 0
+    cfg = PipelineConfig({"m": StageConfig(HW, 4, 1)})
+    res = engine.simulate(cfg, tr.arrivals, slo_s=tr.slo_per_query,
+                          class_ids=tr.class_ids,
+                          class_names=tr.class_names)
+    bc = res.per_class()
+    assert bc["ghost"]["n"] == 0 and bc["ghost"]["miss_rate"] == 0.0
+    assert bc["tight"]["n"] == tr.n
+    session = engine.session(tr.arrivals, slo_s=tr.slo_per_query,
+                             class_ids=tr.class_ids,
+                             class_names=tr.class_names)
+    assert session.class_percentile(cfg, 99.0, 1) == 0.0
+
+
+def test_per_class_requires_tags():
+    pipe, store = _one_stage(lambda b: 0.004 * b)
+    res = SimEngine(pipe, store).simulate(
+        PipelineConfig({"m": StageConfig(HW, 1, 1)}), np.zeros(5))
+    with pytest.raises(ValueError):
+        res.per_class()
+    with pytest.raises(ValueError):
+        res.per_query_miss_rate()
+
+
+def test_edf_cuts_tight_class_misses_vs_fifo():
+    """The headline scenario: interactive+batch mix through a contended
+    stage — EDF must not serve the tight class worse than FIFO does."""
+    pipe, store = _one_stage(lambda b: 0.004 * b)
+    engine = SimEngine(pipe, store)
+    tr = classed_trace(MIX, 60.0, seed=2)
+    miss = {}
+    for policy in ("fifo", "edf"):
+        cfg = PipelineConfig({"m": StageConfig(HW, 4, 1, policy=policy)})
+        res = engine.simulate(cfg, tr.arrivals, slo_s=tr.slo_per_query,
+                              class_ids=tr.class_ids,
+                              class_names=tr.class_names)
+        miss[policy] = res.per_class()["interactive"]["miss_rate"]
+    assert miss["edf"] <= miss["fifo"]
+    assert miss["fifo"] > 0          # the scenario actually has contention
+
+
+# ------------------------------------------------------ multi-class planner
+
+def _image_pipeline():
+    prep = ModelSpec("prep", flops_per_query=2e9, weight_bytes=1e6,
+                     act_bytes_per_query=1e6, parallelizable=False)
+    cls = ModelSpec("res152", flops_per_query=2.3e10, weight_bytes=1.2e8,
+                    act_bytes_per_query=5e7)
+    from repro.core.pipeline import linear_pipeline
+    store = ProfileStore()
+    for s in (prep, cls):
+        store.add(profile_model_analytic(s))
+    return linear_pipeline("image-processing", ["prep", "res152"]), store
+
+
+def test_plan_classed_meets_every_class_slo():
+    pipe, store = _image_pipeline()
+    mix = classed_trace([SLOClass("interactive", 60.0, 1.0, 0.12),
+                         SLOClass("batch", 120.0, 1.0, 1.0)], 60.0, seed=0)
+    res = Planner(pipe, store).plan_classed(mix)
+    assert res.feasible
+    assert set(res.per_class_p) == {"interactive", "batch"}
+    for c in mix.classes:
+        assert res.per_class_p[c.name] <= c.slo_s
+    # verify against an independent simulation of the returned config
+    engine = SimEngine(pipe, store)
+    sim = engine.simulate(res.config, mix.arrivals,
+                          slo_s=mix.slo_per_query, class_ids=mix.class_ids,
+                          class_names=mix.class_names)
+    for name, stats in sim.per_class().items():
+        assert stats["p99"] <= dict(
+            (c.name, c.slo_s) for c in mix.classes)[name] + 1e-12
+
+
+def test_plan_classed_never_costlier_than_uniform_tightest():
+    """Relaxing the batch class to its own loose SLO can only relax the
+    constraint set: the multi-class plan costs at most the uniform plan
+    at the tightest SLO."""
+    pipe, store = _image_pipeline()
+    mix = classed_trace([SLOClass("interactive", 40.0, 1.0, 0.1),
+                         SLOClass("batch", 160.0, 1.0, 2.0)], 60.0, seed=1)
+    classed = Planner(pipe, store).plan_classed(mix)
+    uniform = Planner(pipe, store).plan(mix.arrivals, 0.1)
+    assert classed.feasible and uniform.feasible
+    assert classed.cost_per_hr <= uniform.cost_per_hr + 1e-9
+
+
+def test_plan_classed_single_class_matches_plan():
+    """One class == the paper's scalar-SLO planning, same configuration."""
+    pipe, store = _image_pipeline()
+    tr = classed_trace([SLOClass("only", 100.0, 1.0, 0.15)], 60.0, seed=0)
+    a = Planner(pipe, store).plan_classed(tr)
+    b = Planner(pipe, store).plan(tr.arrivals, 0.15)
+    assert a.feasible == b.feasible
+    assert a.config.cache_key() == b.config.cache_key()
+    assert a.cost_per_hr == b.cost_per_hr
+
+
+def test_plan_classed_annealed_dispatch():
+    pipe, store = _image_pipeline()
+    mix = classed_trace([SLOClass("interactive", 60.0, 1.0, 0.12),
+                         SLOClass("batch", 120.0, 1.0, 1.0)], 60.0, seed=0)
+    greedy = Planner(pipe, store).plan_classed(mix)
+    annealed = AnnealedPlanner(pipe, store).plan_classed(mix, steps=40)
+    assert annealed.feasible
+    assert annealed.cost_per_hr <= greedy.cost_per_hr + 1e-9
+    for c in mix.classes:
+        assert annealed.per_class_p[c.name] <= c.slo_s
+
+
+def test_plan_classed_requires_engine_estimator():
+    pipe, store = _image_pipeline()
+    tr = classed_trace([SLOClass("only", 100.0, 1.0, 0.15)], 20.0, seed=0)
+    planner = Planner(pipe, store, estimator=GoldenEstimator(pipe, store))
+    with pytest.raises(ValueError, match="multi-class"):
+        planner.plan_classed(tr)
+
+
+# ------------------------------------------------------- property tests
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=8, max_value=80))
+def test_edf_serves_ready_queries_in_deadline_order(seed, n):
+    """EDF invariant: a query left waiting at a dispatch it was ready for
+    must have a deadline no earlier than every query in that batch."""
+    rng = np.random.default_rng(seed)
+    ready = np.sort(rng.uniform(0.0, 0.3, n))
+    deadline = ready + rng.uniform(0.01, 0.4, n)
+    lut = np.array([0.0, 0.01, 0.014, 0.017, 0.02])
+    max_batch = int(rng.integers(1, 5))
+    done, batches, _ = simulate_stage("edf", ready, lut, max_batch, 1,
+                                      deadline=deadline)
+    assert int(batches.sum()) == n
+    # replicas=1: reconstruct each dispatch from its completion time
+    for end in np.unique(done):
+        members = np.nonzero(done == end)[0]
+        start = end - lut[min(len(members), len(lut) - 1)]
+        d_max = deadline[members].max()
+        waiting = (done > end + 1e-12) & (ready <= start + 1e-12)
+        assert (deadline[waiting] >= d_max - 1e-9).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=0.02, max_value=0.08),
+       st.floats(min_value=0.3, max_value=2.0),
+       st.integers(min_value=1, max_value=3))
+def test_tighter_class_never_worse_than_single_class(seed, tight_slo,
+                                                     loose_slo, replicas):
+    """Tagging a subset of queries with a TIGHTER deadline must never
+    serve that subset worse under EDF than the uniform-deadline run of
+    the same trace (where EDF degenerates to arrival order). Holds
+    per-query for batch=1 with constant service time (work-conserving,
+    equal-service-time exchange argument), hence at p99 too."""
+    rng = np.random.default_rng(seed)
+    n = 120
+    ready = np.sort(rng.uniform(0.0, 0.4, n))
+    tight = rng.random(n) < 0.4
+    slo_mixed = np.where(tight, tight_slo, loose_slo)
+    lut = np.array([0.0, 0.008])          # batch=1, constant service time
+    done_mixed, _, _ = simulate_stage("edf", ready, lut, 1, replicas,
+                                      deadline=ready + slo_mixed)
+    done_uniform, _, _ = simulate_stage("edf", ready, lut, 1, replicas,
+                                        deadline=ready + tight_slo)
+    assert (done_mixed[tight] <= done_uniform[tight] + 1e-9).all()
+    if tight.any():
+        lat_mixed = done_mixed[tight] - ready[tight]
+        lat_uniform = done_uniform[tight] - ready[tight]
+        assert np.percentile(lat_mixed, 99.0) <= \
+            np.percentile(lat_uniform, 99.0) + 1e-9

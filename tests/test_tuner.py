@@ -128,6 +128,73 @@ def test_no_premature_scale_down_at_startup(planned_image):
     assert not downs, downs
 
 
+class _ScriptedTuner:
+    """Minimal tuner stand-in: replays a scripted {t: {stage: k}} plan."""
+
+    def __init__(self, initial, script):
+        self.current = dict(initial)
+        self.script = script
+
+    def step(self, now, arrivals_so_far):
+        for t, targets in self.script.items():
+            if abs(now - t) < 1e-9:
+                self.current.update(targets)
+        return dict(self.current)
+
+
+def test_offline_schedule_sorted_with_overlapping_up_down():
+    """Regression: a scale-up lands at t + activation_delay_s but a
+    scale-down lands at t, so a down issued within the activation window
+    of an up used to yield an UNSORTED event list — violating the sorted
+    (t, +/-1) contract `_ReplicaPool.apply_events` assumes."""
+    tuner = _ScriptedTuner({"m": 2}, {1.0: {"m": 4}, 3.0: {"m": 1}})
+    sched = run_tuner_offline(tuner, np.arange(0.0, 10.0, 0.5),
+                              activation_delay_s=5.0)
+    evs = sched["m"]
+    # up of +2 issued at t=1 (lands at 6.0), down of -3 issued at t=3
+    assert (3.0, -3) in evs and (6.0, 2) in evs
+    assert evs == sorted(evs, key=lambda e: e[0])
+
+
+def test_offline_schedule_sorted_for_all_stages_on_real_tuner(planned_image):
+    """The real tuner's schedules honor the sorted contract too, even with
+    an activation delay longer than the downscale hysteresis."""
+    pipe, store, res, info, sample = planned_image
+    head = gamma_trace(150, 1.0, 30, seed=4)
+    tail = 30.0 + gamma_trace(2.0, 1.0, 60, seed=5)
+    trace = np.concatenate([head, tail])
+    for delay in (5.0, 20.0):
+        sched = run_tuner_offline(Tuner(info), trace,
+                                  activation_delay_s=delay)
+        for stage, evs in sched.items():
+            assert evs == sorted(evs, key=lambda e: e[0]), (stage, delay)
+
+
+def test_plan_info_degenerate_sample_traces(planned_image):
+    """Regression: lam = n / (max - min) diverged on 0-1 arrival traces
+    (and on simultaneous arrivals). Degenerate samples now read as "no
+    planned rate" with rho = 1 (scale exactly to demand) — NOT a tiny
+    rho floor, which would make _replicas_for_rate (divides by rho)
+    request millions of replicas on the first real traffic."""
+    pipe, store, res, info, sample = planned_image
+    est = Estimator(pipe, store)
+    st = est.service_time(res.config)
+    for trace in (np.zeros(0), np.array([1.0]), np.array([2.0, 2.0, 2.0])):
+        got = TunerPlanInfo.from_plan(pipe, res.config, store, trace, st)
+        for stage in pipe.stages:
+            assert got.rho[stage] == 1.0, (stage, got.rho)
+        # a tuner built from the degenerate plan must still function and
+        # scale to (bounded) real demand: k = ceil(rate * s / mu)
+        tuner = Tuner(got)
+        burst = np.sort(np.random.default_rng(0).uniform(0, 1.0, 100))
+        target = tuner.step(1.0, burst)
+        for stage, k in target.items():
+            need = np.ceil(100.0 * got.scale_factors[stage]
+                           / got.mu[stage])
+            assert 1 <= k <= max(need * 4, res.config[stage].replicas * 4), \
+                (stage, k)
+
+
 def test_flat_trace_stays_near_plan(planned_image):
     """A fresh same-law flat trace must not drift far from the planned
     replica counts (envelope detection tolerates sampling noise)."""
