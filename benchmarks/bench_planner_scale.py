@@ -1,0 +1,226 @@
+"""Planner-scale benchmark -> BENCH_planner_scale.json (ISSUE 3).
+
+Extends the BENCH_engine.json perf trajectory with the three layers of
+the vectorized-fill / batched-scoring / beam-search stack:
+
+* **fill_kernel** — raw throughput of the blocked FIFO fill
+  (``repro.sim.queueing.fifo``) vs the frozen seed stage loop, on three
+  single-stage regimes: underloaded (tie-run blocks), mixed (blocks +
+  scalar bursts + backoff), and saturated (full-batch backlog blocks).
+  Outputs are asserted bit-identical while timing.
+* **simulate_many** — batched candidate scoring vs the pre-batching loop
+  path (same engine, accumulator cache disabled) on planner-style probe
+  grids over the motif pipelines: every distinct stage entry simulated
+  once + prefix-shared assembly vs per-config assembly.
+* **beam_vs_greedy** — BeamPlanner vs greedy Planner cost and wall-clock
+  across >= 3 pipelines x >= 2 SLOs. The beam must never cost more than
+  greedy (acceptance bar), and any strict win is the §7.2 local-optimum
+  escape paid for by the cheap batched probes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.pipelines import get_motif
+from repro.core.planner import BeamPlanner, Planner
+from repro.core.pipeline import PipelineConfig, StageConfig
+from repro.sim import SimEngine
+from repro.sim.golden import golden_simulate_stage
+from repro.sim.queueing import simulate_stage
+from repro.workload.generator import gamma_trace
+
+from benchmarks.common import save, table
+
+BEAM_GRID = (
+    ("image-processing", (0.10, 0.25)),
+    ("tf-cascade", (0.10, 0.25)),
+    ("video-monitoring", (0.15, 0.30)),
+)
+
+
+def _bench_fill_kernel() -> dict:
+    """One stage, one hour of traffic, three load regimes."""
+    lut = np.array([0.0] + [0.004 + 0.0005 * b for b in range(1, 9)])
+    rng = np.random.default_rng(7)
+    n = 500_000
+    scenarios = {}
+    # underloaded: 140 qps into ~1/0.0045s (~222 qps/replica) x 4
+    gaps = rng.exponential(1 / 140.0, n)
+    gaps[rng.random(n) < 0.2] = 0.0
+    scenarios["underloaded"] = (np.cumsum(gaps), 8, 4)
+    # mixed: alternating calm/burst phases interleave the regimes
+    gaps = np.where(rng.random(n) < 0.5, rng.exponential(1 / 600.0, n),
+                    rng.exponential(1 / 60.0, n))
+    scenarios["mixed"] = (np.cumsum(gaps), 8, 2)
+    # saturated: one giant burst, full batches end to end
+    scenarios["saturated"] = (np.zeros(n), 8, 4)
+
+    out, rows = {}, []
+    for name, (ready, max_batch, replicas) in scenarios.items():
+        # best-of-3 on both paths (shared-machine jitter control)
+        dt = dt_seed = float("inf")
+        done, batches, _ = simulate_stage("fifo", ready, lut, max_batch,
+                                          replicas)
+        for _ in range(3):
+            t0 = time.perf_counter()
+            done, batches, _ = simulate_stage("fifo", ready, lut,
+                                              max_batch, replicas)
+            dt = min(dt, time.perf_counter() - t0)
+        for _ in range(3):
+            t0 = time.perf_counter()
+            want_done, want_batches = golden_simulate_stage(
+                ready, np.arange(n), lut, max_batch, replicas)
+            dt_seed = min(dt_seed, time.perf_counter() - t0)
+        np.testing.assert_array_equal(done, want_done)
+        np.testing.assert_array_equal(batches, want_batches)
+        out[name] = {
+            "queries": n,
+            "kernel_s": dt,
+            "seed_loop_s": dt_seed,
+            "kernel_qps": n / dt,
+            "speedup": dt_seed / dt,
+            "bit_identical": True,
+        }
+        rows.append([name, f"{n/dt/1e6:.2f}M q/s", f"{n/dt_seed/1e6:.2f}M q/s",
+                     f"{dt_seed/dt:.1f}x"])
+    print(table(rows, ["regime", "blocked kernel", "seed loop", "speedup"]))
+    return out
+
+
+def _probe_grid(pipe, base: PipelineConfig, stage: str) -> list:
+    """A downgrade-style grid: sweep (batch, replicas) on one stage."""
+    grid = []
+    for batch in (1, 2, 4, 8, 16):
+        for replicas in (1, 2, 3, 4, 6, 8):
+            cand = base.copy()
+            cand[stage].batch_size = batch
+            cand[stage].replicas = replicas
+            grid.append(cand)
+    return grid
+
+
+def _bench_simulate_many() -> dict:
+    """Batched vs loop candidate scoring.
+
+    Both paths share the per-stage cone cache (PR 1), so a probe grid's
+    distinct stage entries are simulated exactly once either way and the
+    cold first pass is dominated by those identical simulations. The
+    regime that separates the paths is *scoring*: planner searches
+    re-evaluate overlapping candidate sets hundreds of times (greedy
+    re-probes, lockstep binary-search rounds, beam frontiers), where the
+    loop path pays full per-candidate result assembly and the batched
+    path shares it across common configuration prefixes. Both passes are
+    reported; the acceptance speedup is the scoring one.
+    """
+    reps = 5
+    out, rows = {}, []
+    for motif in ("image-processing", "social-media", "video-monitoring"):
+        bound = get_motif(motif)
+        pipe, store = bound.pipeline, bound.profiles
+        arr = gamma_trace(200.0, 2.0, 120.0, seed=9)
+        base = PipelineConfig({
+            s: StageConfig(pipe.stages[s].hardware_options[0], 4, 4)
+            for s in pipe.stages
+        })
+        stage = pipe.toposort()[-1]           # deepest cone: max sharing
+        grid = _probe_grid(pipe, base, stage)
+        engine = SimEngine(pipe, store)
+
+        loop_sess = engine.session(arr, max_accum_bytes=0)
+        t0 = time.perf_counter()
+        loop = [loop_sess.simulate(c) for c in grid]
+        t_loop_cold = time.perf_counter() - t0
+        t_loop = float("inf")           # best-of-reps: jitter control
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            loop = [loop_sess.simulate(c) for c in grid]
+            t_loop = min(t_loop, time.perf_counter() - t0)
+
+        batch_sess = engine.session(arr)
+        t0 = time.perf_counter()
+        batched = batch_sess.simulate_many(grid)
+        t_batch_cold = time.perf_counter() - t0
+        t_batch = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            batched = batch_sess.simulate_many(grid)
+            t_batch = min(t_batch, time.perf_counter() - t0)
+
+        for a, b in zip(batched, loop):
+            np.testing.assert_array_equal(a.latency, b.latency)
+        out[motif] = {
+            "candidates": len(grid),
+            "queries": int(arr.size),
+            "first_pass_loop_s": t_loop_cold,
+            "first_pass_batched_s": t_batch_cold,
+            "scoring_loop_s": t_loop,
+            "scoring_batched_s": t_batch,
+            "scoring_speedup": t_loop / t_batch,
+            "accum_hits": batch_sess.stats["accum_hits"],
+            "identical": True,
+        }
+        rows.append([motif, len(grid), f"{t_loop*1e3:.1f}ms",
+                     f"{t_batch*1e3:.1f}ms", f"{t_loop/t_batch:.2f}x"])
+    print(table(rows, ["pipeline", "cands", "loop scoring",
+                       "batched scoring", "speedup"]))
+    speedups = [v["scoring_speedup"] for v in out.values()]
+    out["min_scoring_speedup"] = min(speedups)
+    # no hard assert: a timing inversion on a noisy machine must not
+    # discard the whole payload — the committed artifact is the record
+    if out["min_scoring_speedup"] <= 1.0:
+        print("WARNING: batched scoring did not beat the loop path on "
+              "this run (machine jitter?)")
+    return out
+
+
+def _bench_beam_vs_greedy() -> dict:
+    out, rows = {}, []
+    sample = gamma_trace(200.0, 4.0, 60.0, seed=10)
+    for motif, slos in BEAM_GRID:
+        for slo in slos:
+            bound = get_motif(motif)
+            pipe, store = bound.pipeline, bound.profiles
+            t0 = time.perf_counter()
+            g = Planner(pipe, store).plan(sample, slo)
+            t_g = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            b = BeamPlanner(pipe, store, beam_width=4).plan(sample, slo)
+            t_b = time.perf_counter() - t0
+            assert g.feasible and b.feasible, f"{motif}@{slo} infeasible"
+            assert b.cost_per_hr <= g.cost_per_hr + 1e-9, \
+                f"beam worse than greedy on {motif}@{slo}"
+            key = f"{motif}|slo={slo}"
+            out[key] = {
+                "greedy_cost_per_hr": g.cost_per_hr,
+                "beam_cost_per_hr": b.cost_per_hr,
+                "cost_ratio": b.cost_per_hr / g.cost_per_hr,
+                "greedy_plan_s": t_g,
+                "beam_plan_s": t_b,
+                "greedy_sims": g.simulations,
+                "beam_sims": b.simulations,
+            }
+            rows.append([motif, slo, f"${g.cost_per_hr:.2f}",
+                         f"${b.cost_per_hr:.2f}",
+                         f"{(1 - b.cost_per_hr/g.cost_per_hr)*100:.1f}%",
+                         f"{t_g:.2f}s", f"{t_b:.2f}s"])
+    print(table(rows, ["pipeline", "slo", "greedy", "beam", "saving",
+                       "greedy t", "beam t"]))
+    ratios = [v["cost_ratio"] for v in out.values()]
+    out["max_cost_ratio"] = max(ratios)       # must be <= 1.0
+    out["mean_saving_pct"] = float(100 * (1 - np.mean(ratios)))
+    print(f"beam vs greedy: max ratio {out['max_cost_ratio']:.3f} "
+          f"(bar: <= 1.0), mean saving {out['mean_saving_pct']:.1f}%")
+    return out
+
+
+def run() -> dict:
+    payload = {
+        "fill_kernel": _bench_fill_kernel(),
+        "simulate_many": _bench_simulate_many(),
+        "beam_vs_greedy": _bench_beam_vs_greedy(),
+    }
+    save("BENCH_planner_scale", payload)
+    return payload

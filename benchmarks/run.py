@@ -17,6 +17,7 @@ import time
 
 from benchmarks import (
     bench_engine,
+    bench_planner_scale,
     bench_slo_classes,
     beyond_planner,
     fig3_profiles,
@@ -45,6 +46,7 @@ BENCHES = {
     "fig14": fig14_ds2,
     "beyond_planner": beyond_planner,
     "engine": bench_engine,
+    "planner_scale": bench_planner_scale,
     "slo_classes": bench_slo_classes,
     "roofline": roofline_report,
 }

@@ -106,6 +106,20 @@ class Estimator:
                                     slo_s=slo_s, class_ids=class_ids,
                                     class_names=class_names)
 
+    def simulate_many(
+        self,
+        configs: Sequence[PipelineConfig],
+        arrivals: np.ndarray,
+        replica_schedules: Optional[Dict[str, Sequence[Tuple[float, int]]]] = None,
+    ) -> Sequence[SimResult]:
+        """Batched candidate evaluation over one trace: every distinct
+        stage entry is simulated exactly once and result assembly is
+        shared across candidates with common configuration prefixes
+        (see :meth:`repro.sim.TraceSession.simulate_many`). Element-wise
+        equal to ``[self.simulate(c, arrivals) for c in configs]``."""
+        return self.session(arrivals).simulate_many(
+            configs, replica_schedules=replica_schedules)
+
     # -- planner-facing helpers ----------------------------------------------
     def estimate_p99(self, config: PipelineConfig, arrivals: np.ndarray) -> float:
         return self.simulate(config, arrivals).p99

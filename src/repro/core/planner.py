@@ -23,8 +23,13 @@ differs from its incumbent in exactly ONE stage, so all feasibility
 checks run through one incremental :class:`repro.sim.TraceSession` —
 only the mutated stage's downstream cone is re-simulated, and repeated
 whole configurations are scalar cache hits (this subsumes the seed
-planner's private whole-config ``_cache``). Outputs are bit-identical to
-full re-simulation; ``BENCH_engine.json`` records the wall-clock win.
+planner's private whole-config ``_cache``). On top of that, candidate
+*sets* — the downgrade action's (hw, batch) probe grid, its replica
+binary searches (run in lockstep), and the :class:`BeamPlanner`
+frontier — are scored through the session's batched ``percentile_many``
+surface. Outputs are bit-identical to full re-simulation;
+``BENCH_engine.json`` / ``BENCH_planner_scale.json`` record the
+wall-clock wins.
 """
 
 from __future__ import annotations
@@ -73,6 +78,11 @@ class _ScalarSession:
             self._pctl[key] = val
         return val
 
+    def percentile_many(self, configs, p: float):
+        """Same batched-scoring surface as TraceSession (memo-backed
+        loop here — the oracle has no shared-entry machinery)."""
+        return [self.percentile(c, p) for c in configs]
+
 
 @dataclasses.dataclass
 class PlannerResult:
@@ -111,6 +121,10 @@ class Planner:
         # fewer replicas (deadline scheduling instead of overprovisioning)
         self.policy = policy
         self._session = None
+        self._session_token = None
+        # scale factors are a pure function of the (immutable) pipeline:
+        # computed once per planner, not once per action probe
+        self._scale_cache: Optional[Dict[str, float]] = None
         # set by plan_classed() for the duration of the search: feasibility
         # then means EVERY class meets its own percentile deadline
         self._classed = None
@@ -144,13 +158,30 @@ class Planner:
                     "multi-class planning requires an engine-backed "
                     "estimator (got a session-less estimator)")
             self._session = _ScalarSession(self.estimator, arrivals)
+        self._session_token = self._trace_token(arrivals)
+
+    @staticmethod
+    def _trace_token(arrivals: np.ndarray) -> Tuple:
+        """Cheap trace identity: repeated probes against the bound trace
+        must not pay an O(n) array compare per call. The id() is backed
+        by the endpoint fingerprint so a recycled address cannot silently
+        alias a different trace of the same length."""
+        n = arrivals.shape[0]
+        return (id(arrivals), n,
+                float(arrivals[0]) if n else 0.0,
+                float(arrivals[-1]) if n else 0.0)
 
     def _ensure_session(self, arrivals: np.ndarray) -> None:
         """Bind a session to `arrivals` unless one already is (lets
         initialize() be called directly, not only via plan())."""
-        if self._session is None or not np.array_equal(
-                self._session.arrivals, arrivals):
+        if self._session is None or \
+                self._session_token != self._trace_token(arrivals):
             self._open_session(arrivals)
+
+    def _scale_factors(self) -> Dict[str, float]:
+        if self._scale_cache is None:
+            self._scale_cache = self.pipeline.scale_factors()
+        return self._scale_cache
 
     @property
     def _sims(self) -> int:
@@ -173,6 +204,18 @@ class Planner:
                 for cid, c in enumerate(self._classed.classes))
         return self._p99(config) <= slo
 
+    def _feasible_many(self, configs: List[PipelineConfig], slo: float
+                       ) -> List[bool]:
+        """Batched feasibility: one ``percentile_many`` call scores the
+        whole candidate set against the session's shared stage entries
+        (identical booleans to per-config ``_feasible``)."""
+        if not configs:
+            return []
+        if self._classed is not None:
+            return [self._feasible(c, slo) for c in configs]
+        vals = self._session.percentile_many(configs, self.percentile)
+        return [v <= slo for v in vals]
+
     def _throughput(self, config: PipelineConfig, stage: str) -> float:
         cfg = config[stage]
         prof = self.profiles.get(self.pipeline.stages[stage].model_id)
@@ -189,7 +232,7 @@ class Planner:
         })
         if self.estimator.service_time(config) > slo:
             return None  # infeasible: bare service time exceeds the SLO
-        scale = self.pipeline.scale_factors()
+        scale = self._scale_factors()
         while not self._feasible(config, slo):
             # throughput bottleneck, demand-normalized by scale factor
             bottleneck = min(
@@ -222,20 +265,38 @@ class Planner:
     def _action_downgrade_hw(self, config: PipelineConfig, stage: str,
                              arrivals: np.ndarray, slo: float
                              ) -> Optional[PipelineConfig]:
-        """Localized re-init + cost minimization on cheaper hardware (§4.3)."""
+        """Localized re-init + cost minimization on cheaper hardware (§4.3).
+
+        The whole (hw, batch) probe grid is scored through the session's
+        ``percentile_many`` surface: one call decides every grid point's
+        feasibility at its cost cap, then the surviving probes
+        binary-search their minimal replica counts in lockstep — one
+        scoring call per halving round. Each probe still simulates once
+        on a miss; the win is that the whole grid shares the session's
+        stage-entry, assembly-prefix, and percentile caches. Selection
+        order and predicate values match the sequential formulation
+        exactly (same returned candidate)."""
         cfg = config[stage]
         options = [h for h in cheaper_hardware(cfg.hardware)
                    if h in self._stage_hw_options(stage)]
         if not options:
             return None
         prof = self.profiles.get(self.pipeline.stages[stage].model_id)
-        scale = self.pipeline.scale_factors()[stage]
+        scale = self._scale_factors()[stage]
         duration = float(arrivals.max() - arrivals.min()) if arrivals.size > 1 else 1.0
         lam_m = arrivals.size * scale / max(duration, 1e-9)
         current_cost = config.cost_per_hr()
-
-        best: Optional[PipelineConfig] = None
         old_stage_cost = get_hardware(cfg.hardware).cost_per_hr * cfg.replicas
+
+        def with_k(hw: str, batch: int, k: int) -> PipelineConfig:
+            cand = config.copy()
+            cand.stage_configs[stage] = dataclasses.replace(
+                cfg, hardware=hw, batch_size=batch, replicas=k)
+            return cand
+
+        # the probe grid, after the static prefilters (cost cap + bare
+        # service time + required throughput), in scan order
+        grid: List[Tuple[str, int, int, int]] = []   # (hw, batch, k0, k_cap)
         for hw in options:
             hw_cost = get_hardware(hw).cost_per_hr
             # replicas beyond which the downgrade cannot reduce total cost
@@ -244,38 +305,46 @@ class Planner:
                 if batch > MAX_BATCH:
                     continue
                 # prefilter: bare service time must fit before simulating
-                probe = config.copy()
-                probe.stage_configs[stage] = dataclasses.replace(
-                    cfg, hardware=hw, batch_size=batch, replicas=1)
-                if self.estimator.service_time(probe) > slo:
+                if self.estimator.service_time(with_k(hw, batch, 1)) > slo:
                     continue
                 mu = prof.throughput(hw, batch)
                 k0 = max(1, math.ceil(lam_m / mu))
                 if k0 > k_cap:
                     continue
+                grid.append((hw, batch, k0, k_cap))
+        if not grid:
+            return None
 
-                def with_k(k: int) -> PipelineConfig:
-                    cand = config.copy()
-                    cand.stage_configs[stage] = dataclasses.replace(
-                        cfg, hardware=hw, batch_size=batch, replicas=k)
-                    return cand
+        # batched feasibility of every grid point at its cost cap
+        feas = self._feasible_many(
+            [with_k(hw, b, k_cap) for hw, b, _, k_cap in grid], slo)
+        # feasibility is monotone in replicas: binary-search the smallest
+        # feasible k in [k0, k_cap] — all survivors halve in lockstep, one
+        # batched call per round
+        search = [[hw, b, k0, k_cap]
+                  for (hw, b, k0, k_cap), ok in zip(grid, feas) if ok]
+        while True:
+            open_i = [i for i, (_, _, lo, hi) in enumerate(search)
+                      if lo < hi]
+            if not open_i:
+                break
+            mids = [(search[i][2] + search[i][3]) // 2 for i in open_i]
+            ok_mid = self._feasible_many(
+                [with_k(search[i][0], search[i][1], m)
+                 for i, m in zip(open_i, mids)], slo)
+            for i, m, ok in zip(open_i, mids, ok_mid):
+                if ok:
+                    search[i][3] = m
+                else:
+                    search[i][2] = m + 1
 
-                # feasibility is monotone in replicas: binary-search the
-                # smallest feasible k in [k0, k_cap]
-                if not self._feasible(with_k(k_cap), slo):
-                    continue
-                lo, hi = k0, k_cap
-                while lo < hi:
-                    mid = (lo + hi) // 2
-                    if self._feasible(with_k(mid), slo):
-                        hi = mid
-                    else:
-                        lo = mid + 1
-                cand = with_k(lo)
-                if cand.cost_per_hr() < current_cost - 1e-12 and (
-                        best is None
-                        or cand.cost_per_hr() < best.cost_per_hr()):
-                    best = cand
+        best: Optional[PipelineConfig] = None
+        for hw, b, lo, _ in search:
+            cand = with_k(hw, b, lo)
+            if cand.cost_per_hr() < current_cost - 1e-12 and (
+                    best is None
+                    or cand.cost_per_hr() < best.cost_per_hr()):
+                best = cand
         return best
 
     # ------------------------------------------------------------ Algorithm 2
@@ -356,6 +425,97 @@ class Planner:
             return result
         finally:
             self._classed = None
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: beam-search refinement over the Alg. 2 action set
+# ---------------------------------------------------------------------------
+
+class BeamPlanner(Planner):
+    """Greedy (Alg. 1+2) followed by a k-wide beam search.
+
+    Where the greedy loop commits to the single best action per
+    iteration, the beam keeps the ``beam_width`` cheapest feasible
+    configurations reached so far and expands *all* of their actions —
+    so an early cost-neutral move (e.g. a batch increase on a stage the
+    greedy rule never favors) can pay off several actions later. The
+    whole frontier's successor set is scored per round through the
+    session's ``percentile_many`` surface, whose shared stage-entry /
+    assembly-prefix / percentile caches are what make the wider search
+    affordable (BENCH_planner_scale.json records the search cost next
+    to greedy's).
+
+    Guarantees: the greedy fixed point is computed first on the same
+    incremental session (its probes stay cache-hot for the beam) and is
+    only ever *improved on* — the returned plan is feasible and costs at
+    most the greedy plan, preserving both §4.3 guarantees.
+    """
+
+    def __init__(self, pipeline: Pipeline, profiles: ProfileStore,
+                 estimator: Optional[Estimator] = None,
+                 percentile: float = 99.0, policy: str = "fifo",
+                 beam_width: int = 4, max_rounds: int = 64):
+        super().__init__(pipeline, profiles, estimator=estimator,
+                         percentile=percentile, policy=policy)
+        if beam_width < 1:
+            raise ValueError(f"beam_width must be >= 1, got {beam_width}")
+        self.beam_width = beam_width
+        self.max_rounds = max_rounds
+
+    def plan(self, arrivals: np.ndarray, slo: float) -> PlannerResult:
+        arrivals = np.asarray(arrivals, dtype=np.float64)
+        greedy = super().plan(arrivals, slo)
+        if not greedy.feasible:
+            return greedy
+        best = greedy.config
+        best_cost = greedy.cost_per_hr
+
+        init = self.initialize(arrivals, slo)   # cache-hot replay
+        frontier: List[PipelineConfig] = []
+        visited = set()
+        for cfg in (init, greedy.config):
+            key = cfg.cache_key()
+            if key not in visited:
+                visited.add(key)
+                frontier.append(cfg)
+
+        stages = list(self.pipeline.stages)
+        rounds = 0
+        while frontier and rounds < self.max_rounds:
+            rounds += 1
+            # expand every frontier member's full action set; feasibility
+            # for the flat moves is decided by ONE batched scoring call
+            flat: List[PipelineConfig] = []
+            kept: List[PipelineConfig] = []   # pre-verified (downgrades)
+            for cfg in frontier:
+                for stage in stages:
+                    for cand in (self._action_increase_batch(cfg, stage),
+                                 self._action_remove_replica(cfg, stage)):
+                        if cand is None:
+                            continue
+                        key = cand.cache_key()
+                        if key not in visited:
+                            visited.add(key)
+                            flat.append(cand)
+                    dg = self._action_downgrade_hw(cfg, stage, arrivals, slo)
+                    if dg is not None:
+                        key = dg.cache_key()
+                        if key not in visited:
+                            visited.add(key)
+                            kept.append(dg)
+            feas = self._feasible_many(flat, slo)
+            kept.extend(c for c, ok in zip(flat, feas) if ok)
+            if not kept:
+                break
+            kept.sort(key=lambda c: c.cost_per_hr())
+            frontier = kept[:self.beam_width]
+            front_cost = frontier[0].cost_per_hr()
+            if front_cost < best_cost - 1e-12:
+                best, best_cost = frontier[0], front_cost
+
+        p = self._p99(best)
+        return PlannerResult(True, best, best_cost, p,
+                             greedy.iterations + rounds, self._sims)
 
 
 # ---------------------------------------------------------------------------

@@ -6,10 +6,10 @@ selected per stage via ``StageConfig.policy``:
 
 * ``fifo``      — the paper's greedy arrival-order batching, plus the
   beyond-paper batch-formation timeout (``StageConfig.timeout_s``). This
-  is the seed estimator's exact semantics, bit-identical, but the inner
-  per-query fill loop is replaced with a numpy batch-boundary scan
-  (``np.searchsorted`` per batch) so cost scales with the number of
-  batches formed, not queries scanned.
+  is the seed estimator's exact semantics, bit-identical, but the fill
+  loop is a *blocked, vectorized batch-boundary scan* (see below) so
+  long stretches of steady-state traffic cost a handful of numpy calls,
+  not one Python iteration per batch.
 * ``edf``       — earliest-deadline-first: among the queries ready at
   dispatch time, serve the ``batch`` with the earliest deadlines.
   Deadline scheduling lets late-but-urgent queries (e.g. a query delayed
@@ -19,6 +19,36 @@ selected per stage via ``StageConfig.policy``:
   alone right now is dropped instead of poisoning the batch behind it.
   Dropped queries complete at ``+inf`` and are flagged in the returned
   drop mask.
+
+Vectorized FIFO fill (EXPERIMENTS.md §Perf)
+-------------------------------------------
+The FIFO recurrence is sequential in general (each batch's start depends
+on the replica freed by earlier batches), but almost every batch falls
+into one of two regimes with closed vectorized forms:
+
+* **underload** (a replica is free when the head-of-line query arrives):
+  the batch start equals the head arrival, so batch boundaries are the
+  run-length decomposition of tied ready times capped at the max batch —
+  computable for a whole block with one ``np.repeat``/``arange``
+  expansion. The replica pool never delays these batches; validity is
+  checked per batch with an order-statistic count (``searchsorted`` +
+  ``bincount`` + ``cumsum``) over the pool's free times and the block's
+  own completions.
+* **backlog with full batches** (every query of a max-size batch is
+  already waiting when a replica frees): service times are all equal, so
+  the pop sequence of the replica heap is the sorted merge of R
+  arithmetic progressions — generated exactly with a per-lane
+  ``np.cumsum`` (sequential adds, bit-identical to repeated scalar
+  addition) and one ``argsort``.
+
+Each block is evaluated optimistically and committed up to the first
+batch that violates its regime; mixed stretches fall back to a scalar
+burst with exponential backoff so churny stages never pay block setup
+per batch. The scalar step itself is leaner than the seed loop: with no
+timeout, batch boundaries come from a precomputed run-length table
+instead of a per-query walk. All paths are bit-identical to the frozen
+seed oracle (``repro.sim.golden``) — guarded by the golden-equivalence
+suite and the kernel property tests.
 
 All policies share the dynamic replica-pool semantics of the seed engine:
 ``replica_events`` is a sorted list of ``(t, +1/-1)`` scale events; ``+1``
@@ -40,6 +70,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 _FAR_FUTURE = 1e18
+_INF = float("inf")
 
 # (completion times, batch sizes formed, dropped mask) — all aligned with
 # the sorted `ready` input except `batches`, which is per batch formed.
@@ -49,6 +80,22 @@ StageOutcome = Tuple[np.ndarray, np.ndarray, np.ndarray]
 # Linear walks beat np.searchsorted's per-call overhead for short fills;
 # wide fills (large batches) cross over to the O(log k) boundary search.
 _SCAN_CROSSOVER = 64
+
+# Blocked-fill tuning: the attempt size doubles while blocks commit in
+# full and halves when they come up short; a block that commits fewer
+# than _MIN_COMMIT batches triggers a scalar burst whose length doubles
+# on repeated failures (and halves again on success), so stages that
+# interleave regimes every few batches converge to pure scalar stepping
+# and never pay block setup per batch.
+_BLOCK_MIN = 128
+_BLOCK_MAX = 8192
+_MIN_COMMIT = 96
+_BURST_MIN = 64
+_BURST_MAX = 8192
+# below this many queries a fill never attempts blocks: numpy call
+# overhead cannot amortize against the lean scalar loop on short fills
+# (planner probe traces are ~10k queries; hour-scale traces are >100k)
+_BLOCK_THRESHOLD = 32768
 
 
 def _effective_max_batch(latency_lut: np.ndarray, max_batch: int) -> int:
@@ -106,15 +153,8 @@ def fifo(
 ) -> StageOutcome:
     """Arrival-order batching (the paper's policy). `deadline` is ignored.
 
-    Bit-identical to the seed estimator's ``_simulate_stage``. Hot-loop
-    engineering (EXPERIMENTS.md §Perf): all per-query numpy scalar work
-    is hoisted out of the loop — ready times and the LUT become native
-    floats (exact same IEEE-754 values), batch boundaries come from an
-    inline walk or an ``np.searchsorted`` scan past the crossover, and
-    per-query completions are materialized with one ``np.repeat`` over
-    the (batch end, batch size) run-lengths instead of a slice write per
-    batch. Static schedules (no replica events) take a specialized path;
-    batch=1 stages reduce to a pure scalar recurrence.
+    Bit-identical to the seed estimator's ``_simulate_stage``; the fill
+    runs through the blocked vectorized kernel (module docstring).
     """
     k = ready.shape[0]
     dropped = np.zeros(k, dtype=bool)
@@ -122,15 +162,50 @@ def fifo(
         return np.empty(0, dtype=np.float64), np.zeros(0, dtype=np.int64), \
             dropped
     eff_batch = _effective_max_batch(latency_lut, max_batch)
-    ready_l = ready.tolist()
-    lut_l = latency_lut.tolist()
     if not replica_events:
-        done, batches = _fifo_static(ready, ready_l, lut_l, eff_batch,
-                                     replicas, timeout_s)
+        if replicas <= 0:
+            return (np.full(k, _FAR_FUTURE), np.zeros(0, dtype=np.int64),
+                    dropped)
+        if eff_batch == 1:
+            done, batches = _fifo_batch1_static(ready, latency_lut,
+                                                replicas)
+            return done, batches, dropped
+        pool = None
     else:
-        done, batches = _fifo_dynamic(ready, ready_l, lut_l, eff_batch,
-                                      replicas, replica_events, timeout_s)
+        pool = _ReplicaPool(replicas, replica_events)
+    fill = _FifoFill(ready, latency_lut, eff_batch, timeout_s)
+    if pool is None:
+        done, batches = fill.run_static(replicas)
+    else:
+        done, batches = fill.run_dynamic(pool)
     return done, batches, dropped
+
+
+def _fifo_batch1_static(ready: np.ndarray, latency_lut: np.ndarray,
+                        replicas: int) -> Tuple[np.ndarray, np.ndarray]:
+    """batch=1, fixed pool: the fill scan is vacuous (every batch is one
+    query, so the timeout hold never applies) and the loop is a scalar
+    recurrence. With R identical servers the replica-pool minimum at
+    step i is exactly the completion of query i-R (services are equal,
+    so completions leave the pool in insertion order): the heap reduces
+    to ``done[i-R]``, bit-identical and allocation-free — cheaper per
+    query than the blocked kernel's scalar step, and the planner's
+    batch=1 probes are exactly this shape."""
+    ready_l = ready.tolist()
+    lat1 = latency_lut.tolist()[1]
+    k = len(ready_l)
+    ends: List[float] = []
+    if replicas == 1:
+        f = 0.0
+        for r in ready_l:
+            f = (r if r > f else f) + lat1
+            ends.append(f)
+    else:
+        R = replicas
+        for i, r in enumerate(ready_l):
+            f = ends[i - R] if i >= R else 0.0
+            ends.append((r if r > f else f) + lat1)
+    return (np.asarray(ends, dtype=np.float64), np.ones(k, dtype=np.int64))
 
 
 def _fill_boundary(ready: np.ndarray, ready_l: List[float],
@@ -149,124 +224,334 @@ def _fill_boundary(ready: np.ndarray, ready_l: List[float],
     return hi if hi < limit else limit
 
 
-def _fifo_static(
-    ready: np.ndarray,
-    ready_l: List[float],
-    lut_l: List[float],
-    eff_batch: int,
-    replicas: int,
-    timeout_s: float,
-) -> Tuple[np.ndarray, np.ndarray]:
-    """FIFO with a fixed replica pool — the planner's hot path."""
-    k = len(ready_l)
-    if replicas <= 0:
-        return np.full(k, _FAR_FUTURE), np.zeros(0, dtype=np.int64)
+class _FifoFill:
+    """One FIFO fill: blocked vectorized fast paths + exact scalar steps.
 
-    if eff_batch == 1:
-        # batch=1: the fill scan is vacuous (hi == ptr+1 always, so the
-        # timeout hold never applies) and the loop is a scalar recurrence.
-        # With R identical servers the replica-pool minimum at step i is
-        # exactly the completion of query i-R (service times are equal,
-        # so completions leave the pool in insertion order): the heap
-        # reduces to `done[i-R]`, bit-identical and allocation-free.
-        lat1 = lut_l[1]
-        ends: List[float] = []
-        if replicas == 1:
-            f = 0.0
-            for r in ready_l:
-                f = (r if r > f else f) + lat1
-                ends.append(f)
+    Completions are accumulated as run-length segments (a list of
+    (batch-end, batch-size) array pairs) and materialized once at the
+    end with ``np.repeat`` — identical to the seed's per-batch writes.
+    """
+
+    def __init__(self, ready: np.ndarray, latency_lut: np.ndarray,
+                 eff_batch: int, timeout_s: float):
+        self.ready = ready
+        self.ready_l: List[float] = ready.tolist()
+        self.lut = latency_lut
+        self.lut_l: List[float] = latency_lut.tolist()
+        self.B = eff_batch
+        self.k = ready.shape[0]
+        self.timeout_s = timeout_s
+        self.ptr = 0
+        self.block_batches = _BLOCK_MIN
+        # (ends, counts) alternating scalar lists and committed block arrays
+        self._seg_ends: List[np.ndarray] = []
+        self._seg_counts: List[np.ndarray] = []
+        self._sc_ends: List[float] = []
+        self._sc_counts: List[int] = []
+        # blocks assume completions never precede starts (lut >= 0); a
+        # negative "latency" would break the order-statistic argument.
+        # Short fills skip blocks outright (see _BLOCK_THRESHOLD).
+        self._blocks_ok = (self.k >= _BLOCK_THRESHOLD
+                           and min(self.lut_l[1:eff_batch + 1]) >= 0.0)
+        self._runs_built = False
+        self._nb_l: Optional[List[int]] = None
+
+    # -- run-length precomputation ---------------------------------------
+    def _build_runs(self) -> None:
+        ready, k = self.ready, self.k
+        newrun = np.empty(k, dtype=bool)
+        newrun[0] = True
+        np.not_equal(ready[1:], ready[:-1], out=newrun[1:])
+        self._run_idx = np.cumsum(newrun) - 1
+        self._run_starts = np.nonzero(newrun)[0]
+        self._run_ends = np.append(self._run_starts[1:], k)
+        self._runs_built = True
+
+    def _nb(self) -> List[int]:
+        """nb[p]: boundary of an underload batch headed at p (timeout=0) —
+        min(p + B, end of p's tie run). One vectorized table replaces the
+        seed's per-query fill walk in the scalar path."""
+        if self._nb_l is None:
+            if not self._runs_built:
+                self._build_runs()
+            nb = np.minimum(np.arange(self.k) + self.B,
+                            self._run_ends[self._run_idx])
+            self._nb_l = nb.tolist()
+        return self._nb_l
+
+    # -- segment bookkeeping ----------------------------------------------
+    def _flush_scalar(self) -> None:
+        if self._sc_ends:
+            self._seg_ends.append(np.asarray(self._sc_ends, dtype=np.float64))
+            self._seg_counts.append(
+                np.asarray(self._sc_counts, dtype=np.int64))
+            # clear in place: the drivers hold bound .append methods
+            self._sc_ends.clear()
+            self._sc_counts.clear()
+
+    def _commit_block(self, ends: np.ndarray, counts: np.ndarray) -> None:
+        self._flush_scalar()
+        self._seg_ends.append(ends)
+        self._seg_counts.append(counts)
+
+    def _finish(self) -> Tuple[np.ndarray, np.ndarray]:
+        self._flush_scalar()
+        if not self._seg_ends:
+            return (np.empty(0, dtype=np.float64),
+                    np.zeros(0, dtype=np.int64))
+        ends = (self._seg_ends[0] if len(self._seg_ends) == 1
+                else np.concatenate(self._seg_ends))
+        counts = (self._seg_counts[0] if len(self._seg_counts) == 1
+                  else np.concatenate(self._seg_counts))
+        return np.repeat(ends, counts), counts
+
+    # -- vectorized blocks -------------------------------------------------
+    def _under_block(self, free: List[float], t_gate: float) -> int:
+        """Underload block: batches are tie runs of `ready` capped at B,
+        started at their head arrival. Valid while the replica pool has a
+        server free by each head arrival — checked en masse by counting,
+        per batch j, pool free times and earlier block completions at or
+        below the head arrival: the (j+1)-th smallest such value is the
+        server that would be popped. Commits the valid prefix; returns
+        the number of batches committed."""
+        if not self._runs_built:
+            self._build_runs()
+        ptr, B = self.ptr, self.B
+        cap = self.block_batches
+        r0i = int(self._run_idx[ptr])
+        nruns = self._run_starts.shape[0]
+        # each run yields >= 1 batch, so `cap` runs suffice
+        hi_run = min(r0i + cap, nruns)
+        starts = self._run_starts[r0i:hi_run].copy()
+        starts[0] = ptr
+        rends = self._run_ends[r0i:hi_run]
+        cnts = -((starts - rends) // B)          # ceil((end - start) / B)
+        ccum = np.cumsum(cnts)
+        need = int(np.searchsorted(ccum, cap, side="left")) + 1
+        if need < starts.shape[0]:
+            starts, rends = starts[:need], rends[:need]
+            cnts, ccum = cnts[:need], ccum[:need]
+        total = int(ccum[-1])
+        # expand runs -> batch head positions and sizes
+        offs = np.repeat(ccum - cnts, cnts)
+        within = np.arange(total) - offs
+        bs = np.repeat(starts, cnts) + B * within
+        sizes = np.minimum(np.repeat(rends, cnts) - bs, B)
+        if total > cap:
+            bs, sizes = bs[:cap], sizes[:cap]
+            total = cap
+        r0v = self.ready[bs]
+        ends = r0v + self.lut[sizes]
+        # validity: batch j is served at its head arrival iff >= j+1 of
+        # {pool free times} ∪ {block completions 0..j-1} are <= r0v[j]
+        h = np.sort(np.asarray(free, dtype=np.float64))
+        avail = np.searchsorted(h, r0v, side="right")
+        t_m = np.searchsorted(r0v, ends, side="left")
+        pos = np.maximum(t_m, np.arange(1, total + 1))
+        np.minimum(pos, total, out=pos)
+        avail += np.cumsum(np.bincount(pos, minlength=total + 1))[:total]
+        valid = avail >= np.arange(1, total + 1)
+        if t_gate != _INF:
+            valid &= r0v < t_gate
+        j = int(np.argmin(valid)) if not valid.all() else total
+        if j == 0:
+            return 0
+        ends_c, sizes_c = ends[:j], sizes[:j]
+        self._commit_block(ends_c, sizes_c)
+        self.ptr = int(bs[j - 1]) + int(sizes_c[j - 1])
+        merged = np.sort(np.concatenate([h, ends_c]))
+        free[:] = merged[j:].tolist()            # sorted list is a heap
+        return j
+
+    def _over_block(self, free: List[float], t_gate: float) -> int:
+        """Backlog block: consecutive full-size batches. All services
+        equal lut[B], so the heap's pop sequence is the sorted merge of
+        one arithmetic progression per server (exact via per-lane cumsum,
+        which accumulates sequentially like the scalar loop). Valid while
+        each batch's last query arrived by its server's free time."""
+        ptr, B, k = self.ptr, self.B, self.k
+        L = self.lut_l[B]
+        if L <= 0.0:                  # degenerate: progressions collapse
+            return 0
+        total = min((k - ptr) // B, self.block_batches)
+        if total <= 0:
+            return 0
+        R = len(free)
+        nterms = (total + R - 1) // R + 2
+        mat = np.empty((R, nterms), dtype=np.float64)
+        mat[:, 0] = np.sort(np.asarray(free, dtype=np.float64))
+        mat[:, 1:] = L
+        np.cumsum(mat, axis=1, out=mat)
+        flat = mat.ravel()
+        order = np.argsort(flat, kind="stable")[:total]
+        f = flat[order]
+        # last query of batch j must be waiting when its server frees
+        lasts = self.ready[ptr + B - 1: ptr + total * B: B]
+        valid = lasts <= f
+        # beyond min(lane tails) the merge may miss ungenerated elements
+        valid &= f <= mat[:, -1].min()
+        if t_gate != _INF:
+            valid &= f < t_gate
+        j = int(np.argmin(valid)) if not valid.all() else total
+        if j == 0:
+            return 0
+        ends_c = f[:j] + L
+        self._commit_block(ends_c, np.full(j, B, dtype=np.int64))
+        self.ptr = ptr + j * B
+        popped = np.bincount(order[:j] // nterms, minlength=R)
+        exhausted = popped >= nterms              # == only; advance by +L
+        lane_next = mat[np.arange(R), np.minimum(popped, nterms - 1)]
+        lane_next = np.where(exhausted, lane_next + L, lane_next)
+        free[:] = np.sort(lane_next).tolist()
+        return j
+
+    def _try_block(self, free: List[float], t_gate: float) -> int:
+        """One block attempt; adapts the attempt size to the commit rate
+        so steadily-committing fills grow their blocks and churny fills
+        shrink them."""
+        if not self._blocks_ok or not free:
+            return 0
+        if self.ready_l[self.ptr] >= free[0]:     # heap min: regime probe
+            if self.timeout_s > 0.0:
+                got = 0       # underload + timeout: holds alter boundaries
+            else:
+                got = self._under_block(free, t_gate)
         else:
-            R = replicas
-            for i, r in enumerate(ready_l):
-                f = ends[i - R] if i >= R else 0.0
-                ends.append((r if r > f else f) + lat1)
-        return (np.asarray(ends, dtype=np.float64),
-                np.ones(k, dtype=np.int64))
+            got = self._over_block(free, t_gate)
+        if got >= self.block_batches:
+            self.block_batches = min(self.block_batches * 2, _BLOCK_MAX)
+        elif got < _MIN_COMMIT:
+            # failed attempt: restart small so churny stretches pay the
+            # cheapest possible setup on the next try
+            self.block_batches = _BLOCK_MIN
+        elif got < self.block_batches // 4:
+            self.block_batches = max(self.block_batches // 2, _BLOCK_MIN)
+        return got
 
-    free = [0.0] * replicas
-    heapq.heapify(free)
-    pop, push = heapq.heappop, heapq.heappush
-    ends, counts = [], []          # run-length encoded completions
-    ptr = 0
-    while ptr < k:
-        f = pop(free)
-        r0 = ready_l[ptr]
-        start = r0 if r0 > f else f
-        full_limit = ptr + eff_batch       # where a full batch would end
-        limit = full_limit if full_limit < k else k
-        hi = _fill_boundary(ready, ready_l, ptr, limit, start)
-        if timeout_s > 0.0 and hi < limit:
-            # timeout batching (beyond-paper): hold the batch open until
-            # either max_batch queries are ready or `timeout_s` elapses
-            # from the head-of-line query's arrival
-            hold_until = r0 + timeout_s
-            if hold_until > start:
-                # a batch that can never fill waits out the full timeout
-                fill_t = ready_l[full_limit - 1] if full_limit - 1 < k \
-                    else _FAR_FUTURE
-                start = min(max(start, fill_t), hold_until)
+    # -- drivers -----------------------------------------------------------
+    def run_static(self, replicas: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Static replica pool (the planner's hot path). Scalar stepping
+        is inlined with local bindings: per batch it is one heap pop, a
+        boundary lookup (precomputed run table when there is no timeout),
+        one add, and a heap push — the seed's per-query fill walk and all
+        numpy scalar indexing are gone."""
+        free = [0.0] * replicas
+        heapq.heapify(free)
+        pop, push = heapq.heappop, heapq.heappush
+        ready, ready_l, lut_l = self.ready, self.ready_l, self.lut_l
+        k, B = self.k, self.B
+        timeout_s = self.timeout_s
+        end_app = self._sc_ends.append
+        cnt_app = self._sc_counts.append
+        nb_l: Optional[List[int]] = None
+        ptr = 0
+        burst, backoff = 0, _BURST_MIN
+        while ptr < k:
+            if burst == 0:
+                self.ptr = ptr
+                got = self._try_block(free, _INF)
+                ptr = self.ptr
+                if got >= _MIN_COMMIT:
+                    backoff = max(backoff // 2, _BURST_MIN)
+                    continue
+                burst = backoff
+                backoff = min(backoff * 2, _BURST_MAX)
+                if ptr >= k:
+                    break
+                if nb_l is None and timeout_s == 0.0:
+                    nb_l = self._nb()
+            f = pop(free)
+            r0 = ready_l[ptr]
+            if nb_l is not None and r0 >= f:
+                # underload, no timeout: boundary from the run table; the
+                # start value is r0 whether the seed's max picked r0
+                # (r0 > f) or the tied f (r0 == f)
+                hi = nb_l[ptr]
+                b = hi - ptr
+                end = r0 + lut_l[b]
+            else:
+                start = r0 if r0 > f else f
+                full_limit = ptr + B
+                limit = full_limit if full_limit < k else k
                 hi = _fill_boundary(ready, ready_l, ptr, limit, start)
-        b = hi - ptr
-        ends.append(start + lut_l[b])
-        counts.append(b)
-        ptr = hi
-        push(free, ends[-1])
-    batches = np.asarray(counts, dtype=np.int64)
-    done = np.repeat(np.asarray(ends, dtype=np.float64), batches)
-    return done, batches
+                if timeout_s > 0.0 and hi < limit:
+                    # timeout batching (beyond-paper): hold the batch open
+                    # until either max_batch queries are ready or
+                    # `timeout_s` elapses from the head-of-line arrival
+                    hold_until = r0 + timeout_s
+                    if hold_until > start:
+                        # a batch that can never fill waits out the timeout
+                        fill_t = ready_l[full_limit - 1] \
+                            if full_limit - 1 < k else _FAR_FUTURE
+                        start = min(max(start, fill_t), hold_until)
+                        hi = _fill_boundary(ready, ready_l, ptr, limit,
+                                            start)
+                b = hi - ptr
+                end = start + lut_l[b]
+            end_app(end)
+            cnt_app(b)
+            ptr = hi
+            push(free, end)
+            burst -= 1
+        self.ptr = ptr
+        return self._finish()
 
-
-def _fifo_dynamic(
-    ready: np.ndarray,
-    ready_l: List[float],
-    lut_l: List[float],
-    eff_batch: int,
-    replicas: int,
-    replica_events: Sequence[Tuple[float, int]],
-    timeout_s: float,
-) -> Tuple[np.ndarray, np.ndarray]:
-    """FIFO under a (t, +/-1) replica schedule (live-cluster runs)."""
-    k = len(ready_l)
-    pool = _ReplicaPool(replicas, replica_events)
-    ends: List[float] = []
-    counts: List[int] = []
-    starved = False
-    ptr = 0
-    while ptr < k:
-        if not pool.free:
-            if pool.has_future_adds():
-                pool.fast_forward()
+    def run_dynamic(self, pool: _ReplicaPool) -> Tuple[np.ndarray, np.ndarray]:
+        ready, ready_l, lut_l = self.ready, self.ready_l, self.lut_l
+        k, B = self.k, self.B
+        starved = False
+        burst, backoff = 0, _BURST_MIN
+        while self.ptr < k:
+            if not pool.free:
+                if pool.has_future_adds():
+                    pool.fast_forward()
+                    continue
+                self._sc_ends.append(_FAR_FUTURE)  # no capacity ever again
+                self._sc_counts.append(k - self.ptr)
+                starved = True
+                break
+            if burst == 0:
+                # blocks must not cross a scale event or a pending
+                # retirement — both mutate the pool mid-fill
+                if not pool.pending_removals:
+                    t_gate = (pool.events[pool.ev_i][0]
+                              if pool.ev_i < len(pool.events) else _INF)
+                    got = self._try_block(pool.free, t_gate)
+                    if got >= _MIN_COMMIT:
+                        backoff = max(backoff // 2, _BURST_MIN)
+                        continue
+                burst = backoff
+                backoff = min(backoff * 2, _BURST_MAX)
+                if self.ptr >= k:
+                    break
+            ptr = self.ptr
+            f = heapq.heappop(pool.free)
+            r0 = ready_l[ptr]
+            start = r0 if r0 > f else f
+            pool.apply_events(start)
+            if pool.retire_if_pending(start):
+                burst -= 1
                 continue
-            ends.append(_FAR_FUTURE)       # no capacity ever again
-            counts.append(k - ptr)
-            starved = True
-            break
-        f = heapq.heappop(pool.free)
-        r0 = ready_l[ptr]
-        start = r0 if r0 > f else f
-        pool.apply_events(start)
-        if pool.retire_if_pending(start):
-            continue
-        full_limit = ptr + eff_batch
-        limit = full_limit if full_limit < k else k
-        hi = _fill_boundary(ready, ready_l, ptr, limit, start)
-        if timeout_s > 0.0 and hi < limit:
-            hold_until = r0 + timeout_s
-            if hold_until > start:
-                fill_t = ready_l[full_limit - 1] if full_limit - 1 < k \
-                    else _FAR_FUTURE
-                start = min(max(start, fill_t), hold_until)
-                hi = _fill_boundary(ready, ready_l, ptr, limit, start)
-        b = hi - ptr
-        ends.append(start + lut_l[b])
-        counts.append(b)
-        ptr = hi
-        heapq.heappush(pool.free, ends[-1])
-    run_lengths = np.asarray(counts, dtype=np.int64)
-    done = np.repeat(np.asarray(ends, dtype=np.float64), run_lengths)
-    # the capacity-exhausted tail is a run, not a served batch
-    return done, (run_lengths[:-1] if starved else run_lengths)
+            full_limit = ptr + B
+            limit = full_limit if full_limit < k else k
+            hi = _fill_boundary(ready, ready_l, ptr, limit, start)
+            if self.timeout_s > 0.0 and hi < limit:
+                hold_until = r0 + self.timeout_s
+                if hold_until > start:
+                    fill_t = ready_l[full_limit - 1] if full_limit - 1 < k \
+                        else _FAR_FUTURE
+                    start = min(max(start, fill_t), hold_until)
+                    hi = _fill_boundary(ready, ready_l, ptr, limit, start)
+            b = hi - ptr
+            end = start + lut_l[b]
+            self._sc_ends.append(end)
+            self._sc_counts.append(b)
+            self.ptr = hi
+            heapq.heappush(pool.free, end)
+            burst -= 1
+        done, counts = self._finish()
+        # the capacity-exhausted tail is a run, not a served batch
+        return done, (counts[:-1] if starved else counts)
 
 
 def edf(
@@ -379,6 +664,11 @@ def slo_drop(
     config means the same system with and without an ``slo_s``.
     Without deadlines there is nothing to shed against and the policy
     reduces to greedy-batching ``fifo``.
+
+    Hot-loop engineering: like ``fifo``, all per-query numpy scalar
+    indexing (``ready[ptr]``, ``deadline[i]``, the LUT) is hoisted to
+    native lists — exact same IEEE-754 values, regression-tested against
+    the original loop in ``tests/test_fill_kernel.py``.
     """
     if deadline is None:
         return fifo(ready, latency_lut, max_batch, replicas,
@@ -389,7 +679,10 @@ def slo_drop(
     if k == 0:
         return done, np.zeros(0, dtype=np.int64), dropped
     eff_batch = _effective_max_batch(latency_lut, max_batch)
-    solo_lat = latency_lut[1]
+    ready_l = ready.tolist()
+    deadline_l = deadline.tolist()
+    lut_l = latency_lut.tolist()
+    solo_lat = lut_l[1]
     pool = _ReplicaPool(replicas, replica_events)
     batches: List[int] = []
 
@@ -402,16 +695,17 @@ def slo_drop(
             done[ptr:] = _FAR_FUTURE
             break
         f = heapq.heappop(pool.free)
-        r0 = ready[ptr]
+        r0 = ready_l[ptr]
         start = r0 if r0 > f else f
         pool.apply_events(start)
         if pool.retire_if_pending(start):
             continue
         # form the batch in arrival order, shedding hopeless queries
+        floor = start + solo_lat
         take: List[int] = []
         i = ptr
-        while i < k and ready[i] <= start and len(take) < eff_batch:
-            if deadline[i] < start + solo_lat:
+        while i < k and ready_l[i] <= start and len(take) < eff_batch:
+            if deadline_l[i] < floor:
                 dropped[i] = True
                 done[i] = np.inf
             else:
@@ -422,7 +716,7 @@ def slo_drop(
             heapq.heappush(pool.free, f)
             continue
         b = len(take)
-        end = start + latency_lut[b]
+        end = start + lut_l[b]
         done[take] = end
         batches.append(b)
         heapq.heappush(pool.free, end)

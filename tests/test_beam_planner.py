@@ -1,0 +1,92 @@
+"""BeamPlanner: beam-search refinement over the Alg. 2 action set.
+
+Contract (ISSUE 3 acceptance): on every benchmark pipeline the beam
+returns a *feasible* plan costing at most the greedy Planner's — the
+greedy fixed point seeds the search and is only ever improved on. The
+frontier's successor sets are scored through the session's batched
+``percentile_many`` surface, so these tests double as end-to-end
+coverage of the batched planner scoring path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.estimator import Estimator
+from repro.core.planner import BeamPlanner, Planner
+from repro.workload.generator import gamma_trace
+
+SLO = 0.15
+
+
+def test_beam_never_worse_than_greedy_and_feasible(image_pipeline,
+                                                   sample_trace):
+    pipe, store = image_pipeline
+    g = Planner(pipe, store).plan(sample_trace, SLO)
+    b = BeamPlanner(pipe, store, beam_width=4).plan(sample_trace, SLO)
+    assert g.feasible and b.feasible
+    assert b.cost_per_hr <= g.cost_per_hr + 1e-9
+    est = Estimator(pipe, store)
+    assert est.simulate(b.config, sample_trace).p99 <= SLO
+
+
+def test_beam_on_conditional_pipeline(social_pipeline, sample_trace):
+    pipe, store = social_pipeline
+    g = Planner(pipe, store).plan(sample_trace, SLO)
+    b = BeamPlanner(pipe, store, beam_width=3).plan(sample_trace, SLO)
+    assert b.feasible
+    assert b.cost_per_hr <= g.cost_per_hr + 1e-9
+    est = Estimator(pipe, store)
+    assert est.simulate(b.config, sample_trace).p99 <= SLO
+
+
+def test_beam_width_one_still_sound(image_pipeline, sample_trace):
+    """Width-1 beam degenerates gracefully (still >= greedy quality)."""
+    pipe, store = image_pipeline
+    g = Planner(pipe, store).plan(sample_trace, SLO)
+    b = BeamPlanner(pipe, store, beam_width=1).plan(sample_trace, SLO)
+    assert b.feasible
+    assert b.cost_per_hr <= g.cost_per_hr + 1e-9
+
+
+def test_beam_infeasible_slo_detected(image_pipeline, sample_trace):
+    pipe, store = image_pipeline
+    res = BeamPlanner(pipe, store).plan(sample_trace, slo=1e-4)
+    assert not res.feasible
+    assert res.config is None
+
+
+def test_beam_width_validation(image_pipeline):
+    pipe, store = image_pipeline
+    with pytest.raises(ValueError, match="beam_width"):
+        BeamPlanner(pipe, store, beam_width=0)
+
+
+def test_beam_bursty_tight_slo_can_beat_greedy(image_pipeline):
+    """The §7.2 local-optimum corner (bursty + tight SLO): the beam must
+    never lose to greedy, and its batched frontier search is the place
+    a win would come from."""
+    pipe, store = image_pipeline
+    trace = gamma_trace(300, 4.0, 60, seed=44)
+    slo = 0.12
+    g = Planner(pipe, store).plan(trace, slo)
+    b = BeamPlanner(pipe, store, beam_width=6).plan(trace, slo)
+    assert b.feasible
+    assert b.cost_per_hr <= g.cost_per_hr + 1e-9
+    est = Estimator(pipe, store)
+    assert est.simulate(b.config, trace).p99 <= slo
+
+
+def test_beam_classed_plan(image_pipeline, sample_trace):
+    """plan_classed works through the beam (multi-class feasibility)."""
+    from repro.workload.slo_classes import SLOClass, classed_trace
+    pipe, store = image_pipeline
+    classes = (SLOClass("tight", lam=30.0, cv=1.0, slo_s=0.12),
+               SLOClass("loose", lam=70.0, cv=1.0, slo_s=0.5))
+    trace = classed_trace(classes, duration_s=30.0, seed=5)
+    g = Planner(pipe, store).plan_classed(trace)
+    b = BeamPlanner(pipe, store, beam_width=3).plan_classed(trace)
+    assert b.feasible
+    assert b.cost_per_hr <= g.cost_per_hr + 1e-9
+    assert set(b.per_class_p) == {"tight", "loose"}
+    for cls in classes:
+        assert b.per_class_p[cls.name] <= cls.slo_s

@@ -1,0 +1,271 @@
+"""Vectorized batch-fill kernel: bit-identity property tests.
+
+The blocked kernel (repro.sim.queueing) commits whole regimes of batches
+with numpy scans; its contract is EXACT reproduction of the frozen seed
+loop — same IEEE-754 completion times, same batch decomposition — across
+policies, timeouts, replica schedules, and batch sizes. The frozen
+oracle is ``repro.sim.golden.golden_simulate_stage`` for fifo, and an
+inline copy of the pre-hoist loop for slo-drop (whose satellite change
+was a pure native-list hoist).
+
+Property tests run via the tests/_hyp.py shim (hypothesis if installed,
+a seeded deterministic fallback otherwise).
+"""
+
+import heapq
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+import repro.sim.queueing as queueing
+from repro.sim.golden import golden_simulate_stage
+from repro.sim.queueing import simulate_stage
+
+_FAR_FUTURE = 1e18
+
+
+class _forced_blocks:
+    """Drop the short-fill gate so block paths fire on small traces too
+    (production only attempts blocks past _BLOCK_THRESHOLD queries).
+    A context manager rather than a fixture so the hypothesis-shim
+    property tests (zero-arg wrappers) can use it."""
+
+    _KNOBS = {"_BLOCK_THRESHOLD": 0, "_BLOCK_MIN": 8,
+              "_MIN_COMMIT": 4, "_BURST_MIN": 4}
+
+    def __enter__(self):
+        self._saved = {k: getattr(queueing, k) for k in self._KNOBS}
+        for k, v in self._KNOBS.items():
+            setattr(queueing, k, v)
+
+    def __exit__(self, *exc):
+        for k, v in self._saved.items():
+            setattr(queueing, k, v)
+
+
+# --------------------------------------------------------------------- helpers
+
+def _make_trace(seed: int, n: int, burstiness: int, tie_frac: float
+                ) -> np.ndarray:
+    """Sorted arrivals with tunable tie density (tie runs are exactly
+    what the underload block run-length-encodes, so sweep them hard)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(burstiness, 1), n)
+    # zero out a fraction of gaps -> exact float ties
+    gaps[rng.random(n) < tie_frac] = 0.0
+    arr = np.cumsum(gaps)
+    arr -= arr[0]
+    return arr
+
+
+def _make_lut(seed: int, max_b: int) -> np.ndarray:
+    rng = np.random.default_rng(seed + 1)
+    base = float(rng.uniform(1e-4, 0.05))
+    slope = float(rng.uniform(0.0, 0.01))
+    # occasionally constant-latency (slope 0) LUTs: the over-block's
+    # equal-progression merge must handle them too
+    return np.array([0.0] + [base + slope * b for b in range(1, max_b + 1)])
+
+
+def _make_schedule(seed: int, t_end: float):
+    rng = np.random.default_rng(seed + 2)
+    n_ev = int(rng.integers(0, 5))
+    if n_ev == 0:
+        return None
+    evs = sorted((float(rng.uniform(0.0, max(t_end, 1e-6))),
+                  int(rng.choice([-1, 1]))) for _ in range(n_ev))
+    return evs
+
+
+# ------------------------------------------------------------- fifo vs golden
+
+@settings(max_examples=120, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),   # seed
+       st.integers(min_value=1, max_value=400),      # n queries
+       st.integers(min_value=1, max_value=6),        # replicas
+       st.integers(min_value=0, max_value=7),        # batch exponent (2^e)
+       st.integers(min_value=0, max_value=2),        # timeout mode
+       st.integers(min_value=1, max_value=200),      # burstiness (rate)
+       st.integers(min_value=0, max_value=9))        # tie density decile
+def test_fifo_bit_identical_to_golden(seed, n, replicas, b_exp, tmode,
+                                      burstiness, tie_dec):
+    """The blocked kernel == the frozen seed loop, bit for bit, across
+    batch sizes x replica counts x timeouts x replica schedules x tie
+    structures (both regimes and both block fast paths get exercised)."""
+    max_batch = 2 ** b_exp
+    lut = _make_lut(seed, max(max_batch, 1))
+    ready = _make_trace(seed, n, burstiness, tie_dec / 10.0)
+    timeout_s = (0.0, 0.005, 0.5)[tmode]
+    sched = _make_schedule(seed, float(ready[-1])) if seed % 3 == 0 else None
+    want_done, want_batches = golden_simulate_stage(
+        ready, np.arange(n), lut, max_batch, replicas, sched, timeout_s)
+    # default path (short fill -> lean scalar) AND forced block path
+    for force in (False, True):
+        if force:
+            with _forced_blocks():
+                done, batches, dropped = simulate_stage(
+                    "fifo", ready, lut, max_batch, replicas, sched,
+                    timeout_s)
+        else:
+            done, batches, dropped = simulate_stage(
+                "fifo", ready, lut, max_batch, replicas, sched, timeout_s)
+        np.testing.assert_array_equal(done, want_done)
+        np.testing.assert_array_equal(batches, want_batches)
+        assert not dropped.any()
+
+
+def test_fifo_saturated_full_batches_match_golden():
+    """Pure backlog (the over-block path): one burst, many full batches."""
+    with _forced_blocks():
+        for replicas in (1, 2, 5):
+            for max_batch in (1, 4, 8):
+                n = 503
+                ready = np.zeros(n)
+                lut = _make_lut(7, max_batch)
+                done, batches, _ = simulate_stage(
+                    "fifo", ready, lut, max_batch, replicas)
+                want_done, want_batches = golden_simulate_stage(
+                    ready, np.arange(n), lut, max_batch, replicas)
+                np.testing.assert_array_equal(done, want_done)
+                np.testing.assert_array_equal(batches, want_batches)
+
+
+def test_fifo_long_trace_block_paths_match_golden():
+    """Long mixed trace: block commits, scalar bursts, and backoff all
+    fire (n >> block size) and still match the seed loop exactly."""
+    rng = np.random.default_rng(3)
+    n = 60_000
+    # alternating calm / overloaded phases force regime interleaving
+    gaps = np.where(rng.random(n) < 0.5,
+                    rng.exponential(1 / 400.0, n),
+                    rng.exponential(1 / 40.0, n))
+    gaps[rng.random(n) < 0.3] = 0.0
+    ready = np.cumsum(gaps)
+    lut = np.array([0.0, 0.004, 0.006, 0.007, 0.008, 0.009])
+    for max_batch, replicas, timeout in ((4, 2, 0.0), (1, 3, 0.0),
+                                         (5, 1, 0.01)):
+        done, batches, _ = simulate_stage(
+            "fifo", ready, lut, max_batch, replicas, None, timeout)
+        want_done, want_batches = golden_simulate_stage(
+            ready, np.arange(n), lut, max_batch, replicas, None, timeout)
+        np.testing.assert_array_equal(done, want_done)
+        np.testing.assert_array_equal(batches, want_batches)
+
+
+def test_fifo_dynamic_schedule_blocks_match_golden():
+    """Replica events gate the blocks (no block may cross an event)."""
+    rng = np.random.default_rng(11)
+    n = 8_000
+    ready = np.cumsum(rng.exponential(1 / 150.0, n))
+    ready[1000:1200] = ready[1000]            # tie burst mid-trace
+    lut = np.array([0.0, 0.01, 0.015, 0.018])
+    t_end = float(ready[-1])
+    sched = sorted([(t_end * 0.2, 1), (t_end * 0.4, -1), (t_end * 0.6, 2),
+                    (t_end * 0.8, -1)])
+    with _forced_blocks():
+        for replicas in (1, 3):
+            done, batches, _ = simulate_stage(
+                "fifo", ready, lut, 2, replicas, sched)
+            want_done, want_batches = golden_simulate_stage(
+                ready, np.arange(n), lut, 2, replicas, sched)
+            np.testing.assert_array_equal(done, want_done)
+            np.testing.assert_array_equal(batches, want_batches)
+
+
+# ----------------------------------------------------- slo-drop hoist oracle
+
+def _slo_drop_reference(ready, latency_lut, max_batch, replicas, deadline):
+    """The pre-hoist slo_drop loop (numpy scalar indexing), verbatim —
+    the regression oracle for the native-list satellite change."""
+    k = ready.shape[0]
+    done = np.empty(k, dtype=np.float64)
+    dropped = np.zeros(k, dtype=bool)
+    eff_batch = min(int(max_batch), latency_lut.shape[0] - 1)
+    solo_lat = latency_lut[1]
+    free = [0.0] * replicas
+    heapq.heapify(free)
+    batches = []
+    ptr = 0
+    while ptr < k:
+        f = heapq.heappop(free)
+        r0 = ready[ptr]
+        start = r0 if r0 > f else f
+        take = []
+        i = ptr
+        while i < k and ready[i] <= start and len(take) < eff_batch:
+            if deadline[i] < start + solo_lat:
+                dropped[i] = True
+                done[i] = np.inf
+            else:
+                take.append(i)
+            i += 1
+        ptr = i
+        if not take:
+            heapq.heappush(free, f)
+            continue
+        b = len(take)
+        end = start + latency_lut[b]
+        done[take] = end
+        batches.append(b)
+        heapq.heappush(free, end)
+    return done, np.asarray(batches, dtype=np.int64), dropped
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.integers(min_value=1, max_value=250),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=9))
+def test_slo_drop_hoist_bit_identical(seed, n, replicas, max_batch, tie_dec):
+    """Native-list hoist == the original numpy-scalar loop, bit for bit,
+    including drop decisions on deadline boundaries."""
+    ready = _make_trace(seed, n, 50, tie_dec / 10.0)
+    lut = _make_lut(seed, max_batch)
+    rng = np.random.default_rng(seed + 3)
+    deadline = ready + rng.uniform(0.0, 0.2, n)
+    done, batches, dropped = simulate_stage(
+        "slo-drop", ready, lut, max_batch, replicas, deadline=deadline)
+    want = _slo_drop_reference(ready, lut, max_batch, replicas, deadline)
+    np.testing.assert_array_equal(done, want[0])
+    np.testing.assert_array_equal(batches, want[1])
+    np.testing.assert_array_equal(dropped, want[2])
+
+
+# ------------------------------------------------- degenerate / edge inputs
+
+def test_empty_and_singleton_traces():
+    lut = np.array([0.0, 0.01])
+    for n in (0, 1):
+        ready = np.zeros(n)
+        done, batches, dropped = simulate_stage("fifo", ready, lut, 4, 2)
+        want_done, want_batches = golden_simulate_stage(
+            ready, np.arange(n), lut, 4, 2)
+        if n:
+            np.testing.assert_array_equal(done, want_done)
+        assert done.shape == (n,) and dropped.shape == (n,)
+
+
+def test_zero_replicas_static():
+    ready = np.array([0.0, 0.1])
+    lut = np.array([0.0, 0.01])
+    done, batches, _ = simulate_stage("fifo", ready, lut, 2, 0)
+    assert (done == _FAR_FUTURE).all()
+    assert batches.size == 0
+
+
+def test_zero_latency_lut_stays_exact():
+    """lut[b] == 0 disables the over-block (degenerate progressions) but
+    must still match the seed loop through the scalar path."""
+    ready = np.zeros(100)
+    lut = np.array([0.0, 0.0, 0.0])
+    with _forced_blocks():
+        for max_batch, replicas in ((1, 1), (2, 3)):
+            done, batches, _ = simulate_stage("fifo", ready, lut,
+                                              max_batch, replicas)
+            want_done, want_batches = golden_simulate_stage(
+                ready, np.arange(100), lut, max_batch, replicas)
+            np.testing.assert_array_equal(done, want_done)
+            np.testing.assert_array_equal(batches, want_batches)

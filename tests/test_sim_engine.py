@@ -167,6 +167,76 @@ def test_simulate_many_matches_individual():
         np.testing.assert_array_equal(res.latency, fresh.latency)
 
 
+def test_simulate_many_probe_grid_shares_entries():
+    """A planner-style probe grid (one stage varies, the rest fixed):
+    batched evaluation must simulate each distinct stage entry exactly
+    once, share assembly across the common prefix, and still equal
+    per-config simulation element-wise (including duplicates)."""
+    rng = np.random.default_rng(23)
+    pipe, store = _random_pipeline(rng, 5)
+    engine = SimEngine(pipe, store)
+    arr = _random_trace(rng)
+    base = _random_config(rng, pipe)
+    probe_stage = engine._topo[-1]            # deepest cone: max sharing
+    grid = []
+    for r in (1, 2, 3, 4, 2):                 # includes a duplicate
+        cand = base.copy()
+        cand[probe_stage].replicas = r
+        grid.append(cand)
+    session = engine.session(arr)
+    batch = session.simulate_many(grid)
+    # distinct stage entries: |stages| for the first + one per distinct
+    # variation of the probed stage afterwards
+    distinct = len({c.cache_key() for c in grid})
+    assert session.stats["stage_sims"] == len(pipe.stages) + (distinct - 1)
+    assert session.stats["accum_hits"] > 0
+    for cfg, res in zip(grid, batch):
+        fresh = SimEngine(pipe, store).simulate(cfg, arr)
+        np.testing.assert_array_equal(res.latency, fresh.latency)
+        for s in pipe.stages:
+            np.testing.assert_array_equal(
+                res.per_stage_batches[s], fresh.per_stage_batches[s])
+    # duplicates collapse to the same evaluation
+    np.testing.assert_array_equal(batch[1].latency, batch[4].latency)
+
+
+def test_simulate_many_random_grids_match_loop_path():
+    """Randomized grids: the batched path == the pre-batching loop path
+    (accumulator disabled) == fresh simulation, bit for bit."""
+    rng = np.random.default_rng(29)
+    for _ in range(8):
+        pipe, store = _random_pipeline(rng, int(rng.integers(2, 6)))
+        engine = SimEngine(pipe, store)
+        arr = _random_trace(rng)
+        configs = []
+        base = _random_config(rng, pipe)
+        stages = list(pipe.stages)
+        for _ in range(7):
+            cand = base.copy()
+            st_name = stages[int(rng.integers(len(stages)))]
+            cand[st_name].batch_size = int(rng.choice([1, 2, 8, 32]))
+            cand[st_name].replicas = int(rng.integers(1, 5))
+            configs.append(cand)
+        batched = engine.session(arr).simulate_many(configs)
+        loop_sess = engine.session(arr, max_accum_bytes=0)
+        loop = [loop_sess.simulate(c) for c in configs]
+        for b, l in zip(batched, loop):
+            np.testing.assert_array_equal(b.latency, l.latency)
+
+
+def test_percentile_many_matches_scalar():
+    rng = np.random.default_rng(31)
+    pipe, store = _random_pipeline(rng, 3)
+    engine = SimEngine(pipe, store)
+    arr = _random_trace(rng)
+    configs = [_random_config(rng, pipe) for _ in range(5)]
+    session = engine.session(arr)
+    many = session.percentile_many(configs, 99.0)
+    fresh = engine.session(arr)
+    for c, v in zip(configs, many):
+        assert v == fresh.percentile(c, 99.0)
+
+
 def test_stage_cache_hits_on_repeat():
     rng = np.random.default_rng(13)
     pipe, store = _random_pipeline(rng, 3)
