@@ -1,0 +1,210 @@
+"""Closed-loop Tuner co-simulation: spike / overload / flash-crowd.
+
+Three reactive scenarios drive the epoch-stepped control loop
+(:mod:`repro.sim.control`) and compare three controllers on the Image
+Processing motif:
+
+* **static**      — the Planner's configuration, no tuner;
+* **open-loop**   — the §5 ingress-only Tuner via the epoch driver
+  (schedule identical to ``run_tuner_offline``, equivalence-tested);
+* **closed-loop** — :class:`~repro.core.tuner.ClosedLoopTuner` consuming
+  engine telemetry (backlog boost, corroborated ups, telemetry-gated
+  early downs, shed-margin admission control).
+
+Acceptance (recorded in ``BENCH_tuner_loop.json`` and asserted here):
+on the traffic-spike scenario the closed-loop tuner beats the
+precomputed-schedule tuner on SLO miss rate at equal or lower cost.
+
+Scenario notes: each trace opens with the *planning sample itself* so
+neither controller gets a lucky head start from sampling-noise envelope
+trips before the event under test arrives.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.pipelines import get_motif
+from repro.core.estimator import Estimator
+from repro.core.planner import Planner
+from repro.core.tuner import (
+    ClosedLoopTuner,
+    OpenLoopTunerController,
+    Tuner,
+    TunerPlanInfo,
+)
+from repro.serving.cluster import LiveClusterSim
+from repro.sim import ControlLoopSession
+from repro.workload.generator import gamma_trace
+
+from benchmarks.common import save, table
+
+SLO = 0.15
+PLAN_LAM = 150.0
+PLAN_SEED = 60
+
+
+def _setup():
+    bound = get_motif("image-processing")
+    pipe, store = bound.pipeline, bound.profiles
+    sample = gamma_trace(PLAN_LAM, 1.0, 60, seed=PLAN_SEED)
+    plan = Planner(pipe, store).plan(sample, SLO)
+    assert plan.feasible
+    est = Estimator(pipe, store)
+    service = est.service_time(plan.config)
+
+    def info():
+        return TunerPlanInfo.from_plan(pipe, plan.config, store, sample,
+                                       service)
+
+    return pipe, store, plan, sample, info
+
+
+def _record(run):
+    rec = {
+        "miss_rate": run.miss_rate,
+        "mean_cost_per_hr": run.mean_cost_per_hr(),
+        "total_cost": run.total_cost(),
+        "drop_rate": run.sim.drop_rate,
+    }
+    if hasattr(run, "events"):
+        rec["n_events"] = len(run.events)
+    return rec
+
+
+def _served_p99(sim):
+    if sim.dropped is None or not sim.dropped.any():
+        return sim.p99
+    served = sim.latency[~sim.dropped]
+    return float(np.percentile(served, 99.0)) if served.size else 0.0
+
+
+def _recovery_s(telemetry, t_event_end):
+    """Seconds past the event end until the last epoch with observed
+    misses (0 if the controller never missed after the event)."""
+    late = [ep.t_end for ep in telemetry
+            if ep.misses > 0 and ep.t_end > t_event_end]
+    return max(late) - t_event_end if late else 0.0
+
+
+def run() -> dict:
+    pipe, store, plan, sample, info = _setup()
+    payload: dict = {
+        "slo_s": SLO,
+        "planned": {s: plan.config[s].replicas for s in pipe.stages},
+        "planned_cost_per_hr": plan.config.cost_per_hr(),
+    }
+    rows = []
+
+    def compare(name, trace, t_event_end=None, closed_kwargs=None,
+                config=None, shed_stages=()):
+        """t_event_end: when the transient under test ends — recovery is
+        only meaningful (and only recorded) for transient scenarios; a
+        sustained condition has nothing to recover from."""
+        cfg = config if config is not None else plan.config
+        static = LiveClusterSim(pipe, store, cfg, SLO).run(trace)
+        ol = ControlLoopSession(pipe, store, cfg, SLO).run(
+            trace, OpenLoopTunerController(Tuner(info())))
+        cl_tuner = ClosedLoopTuner(info(), shed_stages=shed_stages,
+                                   **(closed_kwargs or {}))
+        cl = ControlLoopSession(pipe, store, cfg, SLO).run(trace, cl_tuner)
+        payload[name] = {
+            "static": _record(static),
+            "open_loop": {**_record(ol), "served_p99": _served_p99(ol.sim)},
+            "closed_loop": {**_record(cl),
+                            "served_p99": _served_p99(cl.sim),
+                            "events": [e.as_record() for e in cl.events]},
+        }
+        if t_event_end is not None:
+            payload[name]["open_loop"]["recovery_s"] = _recovery_s(
+                ol.telemetry, t_event_end)
+            payload[name]["closed_loop"]["recovery_s"] = _recovery_s(
+                cl.telemetry, t_event_end)
+        for label, r in (("static", static), ("open-loop", ol),
+                         ("closed-loop", cl)):
+            rows.append([name, label, f"{r.miss_rate:.4f}",
+                         f"${r.mean_cost_per_hr():.2f}",
+                         f"{r.sim.drop_rate:.4f}"])
+        return ol, cl
+
+    # ---- A. traffic spike (the acceptance scenario) ---------------------
+    # planned 150 qps, then a low-burstiness 550 qps flood for 18 s: the
+    # envelope's r_max tracks the sustained rate closely, so open-loop
+    # provisions for the rate but not for the queue accumulated during
+    # the 5 s activation gap — the regime the backlog boost targets.
+    spike = np.concatenate([
+        sample,
+        60.0 + gamma_trace(550, 0.4, 18, seed=71),
+        78.0 + gamma_trace(PLAN_LAM, 1.0, 72, seed=72)])
+    ol, cl = compare("traffic_spike", spike, t_event_end=78.0,
+                     closed_kwargs={"drain_target_s": 3.0})
+    payload["traffic_spike"]["acceptance"] = {
+        "closed_beats_open_miss": cl.miss_rate < ol.miss_rate,
+        "closed_cost_not_higher": cl.total_cost() <= ol.total_cost(),
+    }
+    assert cl.miss_rate < ol.miss_rate, \
+        (cl.miss_rate, ol.miss_rate)
+    assert cl.total_cost() <= ol.total_cost(), \
+        (cl.total_cost(), ol.total_cost())
+
+    # ---- B. sustained overload with shedding ----------------------------
+    # offered load steps to 320 qps and stays there; the closed-loop
+    # tuner runs replica-capped (a budget) with slo-drop stages and
+    # raises the ENTRY stage's shed margin when misses persist — bounded
+    # cost with in-SLO service for admitted queries, vs open-loop buying
+    # its way out (uncapped scale-up at ~1.5x the cost). Margins are
+    # raised at ingress only: raising them at every stage double-counts
+    # against the end-to-end deadline (the entry stage admits queries at
+    # the viability boundary and the next margin-raised stage sheds
+    # exactly those), which collapses throughput.
+    drop_cfg = plan.config.copy()
+    for s in pipe.stages:
+        drop_cfg[s].policy = "slo-drop"
+    entry = tuple(e.dst for e in pipe.entry_edges())
+    overload = np.concatenate([
+        sample,
+        60.0 + gamma_trace(320, 1.0, 80, seed=81)])
+    cap = max(plan.config[s].replicas for s in pipe.stages) + 4
+    _, cl_b = compare(
+        "sustained_overload", overload,
+        config=drop_cfg, shed_stages=entry,
+        closed_kwargs={"max_replicas": cap, "shed_margin_s": 0.05})
+    # ablation: the same replica cap with the admission margin pinned at
+    # 0 — the queue settles exactly at the deadline horizon and nearly
+    # every admitted query leaves the entry stage with no slack left
+    no_adm = ControlLoopSession(pipe, store, drop_cfg, SLO).run(
+        overload, ClosedLoopTuner(info(), max_replicas=cap))
+    payload["sustained_overload"]["replica_cap"] = cap
+    payload["sustained_overload"]["closed_loop_no_admission"] = \
+        _record(no_adm)
+    rows.append(["sustained_overload", "closed/no-adm",
+                 f"{no_adm.miss_rate:.4f}",
+                 f"${no_adm.mean_cost_per_hr():.2f}",
+                 f"{no_adm.sim.drop_rate:.4f}"])
+    # admission control rescues throughput under the budget, and what
+    # it admits it serves inside the SLO
+    assert cl_b.miss_rate < no_adm.miss_rate / 2
+    assert _served_p99(cl_b.sim) <= SLO + 1e-9
+
+    # ---- C. flash-crowd recovery ----------------------------------------
+    # a 5 s burst at 700 qps: the backlog outlives the burst, so the
+    # metric is how fast each controller stops missing — and what the
+    # recovery costs.
+    flash = np.concatenate([
+        sample,
+        60.0 + gamma_trace(700, 1.0, 5, seed=91),
+        65.0 + gamma_trace(PLAN_LAM, 1.0, 55, seed=92)])
+    compare("flash_crowd", flash, t_event_end=65.0,
+            closed_kwargs={"drain_target_s": 3.0})
+
+    print(table(rows, ["scenario", "controller", "miss", "$/hr", "drop"]))
+    for name in ("traffic_spike", "sustained_overload", "flash_crowd"):
+        o = payload[name]["open_loop"]
+        c = payload[name]["closed_loop"]
+        rec = (f"recovery open={o['recovery_s']:.0f}s "
+               f"closed={c['recovery_s']:.0f}s | "
+               if "recovery_s" in o else "")
+        print(f"{name}: {rec}served p99 "
+              f"open={o['served_p99']:.3f}s closed={c['served_p99']:.3f}s")
+    save("BENCH_tuner_loop", payload)
+    return payload

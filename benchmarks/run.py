@@ -19,6 +19,7 @@ from benchmarks import (
     bench_engine,
     bench_planner_scale,
     bench_slo_classes,
+    bench_tuner_loop,
     beyond_planner,
     fig3_profiles,
     fig5_planner_vs_cg,
@@ -48,6 +49,7 @@ BENCHES = {
     "engine": bench_engine,
     "planner_scale": bench_planner_scale,
     "slo_classes": bench_slo_classes,
+    "tuner_loop": bench_tuner_loop,
     "roofline": roofline_report,
 }
 

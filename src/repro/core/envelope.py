@@ -114,3 +114,54 @@ class TrafficEnvelope:
             for w, q, r in zip(self.windows, self.max_counts, self.rates)
         ]
         return "\n".join(rows)
+
+
+class IncrementalEnvelope:
+    """Streaming traffic envelope over a growing arrival prefix.
+
+    The closed-loop co-simulation (:mod:`repro.sim.control`) observes
+    ingress one epoch at a time; recomputing ``TrafficEnvelope.from_trace``
+    on the whole prefix every epoch is O(n * W) per step. This maintains
+    the same per-window max counts incrementally: each ``extend`` only
+    scans the NEW arrivals, using the end-anchored formulation — the max
+    over windows whose *last* contained arrival is index ``i`` is
+    ``i - first index j with t_j > t_i - w + 1`` — which equals the
+    start-anchored max of :func:`_max_counts_vectorized` (every maximal
+    window can be shifted so an arrival is last in it).
+
+    ``snapshot()`` is property-tested equal to ``from_trace`` on the
+    prefix (``tests/test_envelope.py``).
+    """
+
+    def __init__(self, service_time_s: float, max_window_s: float = 60.0):
+        self.windows = envelope_windows(service_time_s, max_window_s)
+        self.max_counts = np.zeros(self.windows.shape[0], dtype=np.int64)
+        self._arr = np.zeros(0, dtype=np.float64)
+
+    @property
+    def n(self) -> int:
+        return int(self._arr.shape[0])
+
+    def extend(self, new_arrivals: np.ndarray) -> "IncrementalEnvelope":
+        """Fold in arrivals at/after everything seen so far (sorted)."""
+        new = np.asarray(new_arrivals, dtype=np.float64)
+        if new.size == 0:
+            return self
+        if new.size > 1 and np.any(np.diff(new) < 0):
+            raise ValueError("new arrivals must be sorted")
+        if self._arr.size and new[0] < self._arr[-1]:
+            raise ValueError("arrivals must extend the observed prefix")
+        n_old = self._arr.shape[0]
+        arr = np.concatenate([self._arr, new])
+        idx_new = np.arange(n_old, arr.shape[0])
+        for wi, w in enumerate(self.windows):
+            # window ending at each new arrival: count of t_j > t_new - w
+            lo = np.searchsorted(arr, new - w, side="right")
+            best = int((idx_new - lo + 1).max())
+            if best > self.max_counts[wi]:
+                self.max_counts[wi] = best
+        self._arr = arr
+        return self
+
+    def snapshot(self) -> TrafficEnvelope:
+        return TrafficEnvelope(self.windows, self.max_counts.copy())

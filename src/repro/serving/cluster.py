@@ -23,11 +23,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.hardware import get_hardware
 from repro.core.pipeline import Pipeline, PipelineConfig
 from repro.core.profiler import ProfileStore
 from repro.serving.frontends import FRONTENDS, Frontend
-from repro.sim import SimEngine, SimResult
+from repro.sim import SimEngine, SimResult, replica_cost_timeline
 
 
 @dataclasses.dataclass
@@ -79,29 +78,10 @@ class LiveClusterSim:
         schedules: Dict[str, Sequence[Tuple[float, int]]],
         t_end: float,
     ) -> Tuple[np.ndarray, np.ndarray, Dict[str, List[Tuple[float, int]]]]:
-        counts = {s: self.config[s].replicas for s in self.pipeline.stages}
-        hw_cost = {
-            s: get_hardware(self.config[s].hardware).cost_per_hr
-            for s in self.pipeline.stages
-        }
-        events: List[Tuple[float, str, int]] = []
-        for s, evs in (schedules or {}).items():
-            for t, d in evs:
-                events.append((t, s, d))
-        events.sort()
-        times = [0.0]
-        costs = [sum(counts[s] * hw_cost[s] for s in counts)]
-        timeline: Dict[str, List[Tuple[float, int]]] = {
-            s: [(0.0, counts[s])] for s in counts
-        }
-        for t, s, d in events:
-            if t > t_end:
-                break
-            counts[s] += d
-            times.append(t)
-            costs.append(sum(counts[k] * hw_cost[k] for k in counts))
-            timeline[s].append((t, counts[s]))
-        return np.asarray(times), np.asarray(costs), timeline
+        # shared with the closed-loop runner so open- and closed-loop
+        # cost comparisons integrate the same step function
+        return replica_cost_timeline(self.pipeline, self.config,
+                                     schedules, t_end)
 
     def run(
         self,

@@ -5,18 +5,30 @@ AnnealedPlanner search loops, the live-cluster simulation, the
 coarse-grained and DS2 baselines, and the benchmark drivers.
 
 * :mod:`repro.sim.engine`   — SimEngine + TraceSession (incremental
-  per-stage memoization, ``simulate_delta`` / ``simulate_many``)
+  per-stage memoization, ``simulate_delta`` / ``simulate_many``,
+  ``stage_states`` queue snapshots)
 * :mod:`repro.sim.queueing` — pluggable per-stage policies: ``fifo``
   (paper + timeout batching), ``edf`` (deadline scheduling),
-  ``slo-drop`` (SLO-aware load shedding)
-* :mod:`repro.sim.result`   — per-query SimResult (+ dropped mask)
+  ``slo-drop`` (SLO-aware load shedding w/ reprogrammable shed margin)
+* :mod:`repro.sim.result`   — per-query SimResult (+ dropped mask),
+  per-epoch EpochTelemetry / StageTelemetry control records
+* :mod:`repro.sim.control`  — closed-loop Tuner co-simulation: epoch
+  stepping (ControlLoopSession), ControlEvent, replica cost timelines
 * :mod:`repro.sim.golden`   — frozen seed implementation (equivalence
   oracle + benchmark baseline only)
 """
 
+from repro.sim.control import (  # noqa: F401
+    ClosedLoopResult,
+    ControlEvent,
+    ControlLoopSession,
+    NoOpController,
+    replica_cost_timeline,
+)
 from repro.sim.engine import (  # noqa: F401
     DEFAULT_RPC_DELAY_S,
     SimEngine,
+    StageState,
     TraceSession,
 )
 from repro.sim.queueing import (  # noqa: F401
@@ -24,4 +36,8 @@ from repro.sim.queueing import (  # noqa: F401
     get_policy,
     simulate_stage,
 )
-from repro.sim.result import SimResult  # noqa: F401
+from repro.sim.result import (  # noqa: F401
+    EpochTelemetry,
+    SimResult,
+    StageTelemetry,
+)

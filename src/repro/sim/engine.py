@@ -42,10 +42,18 @@ DEFAULT_RPC_DELAY_S = 0.0005
 
 Schedule = Sequence[Tuple[float, int]]
 Schedules = Dict[str, Schedule]
+# piecewise-constant shed-margin schedules for slo-drop stages
+# (see repro.sim.queueing module docstring / repro.sim.control)
+ShedSchedule = Sequence[Tuple[float, float]]
+ShedSchedules = Dict[str, ShedSchedule]
 
 
 def _sched_key(sched: Optional[Schedule]) -> Tuple:
     return tuple((float(t), int(d)) for t, d in sched) if sched else ()
+
+
+def _shed_key(sched: Optional[ShedSchedule]) -> Tuple:
+    return tuple((float(t), float(m)) for t, m in sched) if sched else ()
 
 
 class SimEngine:
@@ -155,11 +163,13 @@ class SimEngine:
         slo_s: Optional[Union[float, np.ndarray]] = None,
         class_ids: Optional[np.ndarray] = None,
         class_names: Optional[Sequence[str]] = None,
+        shed_schedules: Optional[ShedSchedules] = None,
     ) -> SimResult:
         """One-shot simulation (fresh session; no cross-call memoization)."""
         return self.session(arrivals, slo_s=slo_s, class_ids=class_ids,
                             class_names=class_names).simulate(
-            config, replica_schedules=replica_schedules)
+            config, replica_schedules=replica_schedules,
+            shed_schedules=shed_schedules)
 
     def service_time(self, config: PipelineConfig) -> float:
         """Sum of batch-size-configured latencies along the longest path
@@ -182,6 +192,25 @@ class SimEngine:
     def descendants(self, stage: str) -> Tuple[str, ...]:
         """`stage` plus everything downstream of it (the re-sim cone)."""
         return self._descendants[stage]
+
+
+class StageState:
+    """Per-query view of one stage's queue for control-loop telemetry.
+
+    All arrays are aligned to the query index of the bound trace:
+    ``visited`` marks queries that reach the stage, ``ready`` their
+    input-queue arrival instants (0 where not visited), ``completion``
+    their stage completion (-inf not visited, +inf shed), ``dropped``
+    the stage's shed mask (or None).
+    """
+
+    __slots__ = ("visited", "ready", "completion", "dropped")
+
+    def __init__(self, visited, ready, completion, dropped):
+        self.visited = visited
+        self.ready = ready
+        self.completion = completion
+        self.dropped = dropped
 
 
 class _StageEntry:
@@ -278,33 +307,41 @@ class TraceSession:
 
     # -- cache keys ---------------------------------------------------------
     def _stage_key(self, stage: str, config: PipelineConfig,
-                   schedules: Optional[Schedules]) -> Tuple:
+                   schedules: Optional[Schedules],
+                   shed_schedules: Optional[ShedSchedules] = None) -> Tuple:
         # StageConfig.key() is the single source of truth for config
         # identity — new StageConfig knobs invalidate these caches
         # automatically instead of silently colliding
         sched = schedules or {}
+        shed = shed_schedules or {}
         return (stage, tuple(
-            (s, config[s].key(), _sched_key(sched.get(s)))
+            (s, config[s].key(), _sched_key(sched.get(s)),
+             _shed_key(shed.get(s)))
             for s in self.engine._cone[stage]
         ))
 
     @staticmethod
     def config_key(config: PipelineConfig,
-                   schedules: Optional[Schedules] = None) -> Tuple:
-        if not schedules:
+                   schedules: Optional[Schedules] = None,
+                   shed_schedules: Optional[ShedSchedules] = None) -> Tuple:
+        if not schedules and not shed_schedules:
             return config.cache_key()
         return (config.cache_key(), tuple(sorted(
-            (s, _sched_key(sch)) for s, sch in schedules.items())))
+            (s, _sched_key(sch)) for s, sch in (schedules or {}).items())),
+            tuple(sorted((s, _shed_key(sch))
+                         for s, sch in (shed_schedules or {}).items())))
 
     # -- simulation ---------------------------------------------------------
-    def _simulate_stage_entry(
+    def _stage_ready(
         self,
         stage: str,
-        config: PipelineConfig,
-        schedules: Optional[Schedules],
         visited: Dict[str, np.ndarray],
         completion: Dict[str, np.ndarray],
-    ) -> _StageEntry:
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(visited mask, ready times) of a stage's input queue, from its
+        parents' outcomes. Factored out of the stage simulation so the
+        control-loop telemetry (:meth:`stage_states`) reconstructs the
+        exact same queue the policy saw."""
         engine = self.engine
         n = self.n
         vis = np.zeros(n, dtype=bool)
@@ -318,6 +355,20 @@ class TraceSession:
             # AND-join over active parents
             ready = np.where(active, np.maximum(ready, deliver), ready)
             vis |= active
+        return vis, ready
+
+    def _simulate_stage_entry(
+        self,
+        stage: str,
+        config: PipelineConfig,
+        schedules: Optional[Schedules],
+        visited: Dict[str, np.ndarray],
+        completion: Dict[str, np.ndarray],
+        shed_schedules: Optional[ShedSchedules] = None,
+    ) -> _StageEntry:
+        engine = self.engine
+        n = self.n
+        vis, ready = self._stage_ready(stage, visited, completion)
         k = int(vis.sum())
         if k == 0:
             return _StageEntry(vis, np.full(n, -np.inf),
@@ -334,6 +385,7 @@ class TraceSession:
             sorted_ready, lut, cfg.batch_size, cfg.replicas,
             (schedules or {}).get(stage),
             getattr(cfg, "timeout_s", 0.0), sorted_deadline,
+            (shed_schedules or {}).get(stage),
         )
         comp = np.full(n, -np.inf)
         comp[order] = done_sorted
@@ -347,6 +399,7 @@ class TraceSession:
         self,
         config: PipelineConfig,
         replica_schedules: Optional[Schedules] = None,
+        shed_schedules: Optional[ShedSchedules] = None,
     ) -> SimResult:
         """Run the trace through the configured pipeline.
 
@@ -368,11 +421,13 @@ class TraceSession:
         acc_key: Tuple = ()
 
         for stage in engine._topo:
-            skey = self._stage_key(stage, config, replica_schedules)
+            skey = self._stage_key(stage, config, replica_schedules,
+                                   shed_schedules)
             ent = self._stage_cache.get(skey)
             if ent is None:
                 ent = self._simulate_stage_entry(
-                    stage, config, replica_schedules, visited, completion)
+                    stage, config, replica_schedules, visited, completion,
+                    shed_schedules)
                 self._stage_cache[skey] = ent
                 self._cache_bytes += ent.nbytes
                 self.stats["stage_sims"] += 1
@@ -411,6 +466,47 @@ class TraceSession:
                          class_names=self.class_names,
                          slo_s=self.slo_per_query)
 
+    def stage_states(
+        self,
+        config: PipelineConfig,
+        replica_schedules: Optional[Schedules] = None,
+        shed_schedules: Optional[ShedSchedules] = None,
+    ) -> Dict[str, StageState]:
+        """Per-stage queue views for the configured simulation — what the
+        closed-loop telemetry (:mod:`repro.sim.control`) samples at epoch
+        boundaries. Runs (or replays from the stage cache) the same
+        simulation as :meth:`simulate`; the ready times are reconstructed
+        with the identical :meth:`_stage_ready` computation, so queue
+        depths derived from them match what the queueing policy saw."""
+        engine = self.engine
+        n = self.n
+        visited: Dict[str, np.ndarray] = {SOURCE: np.ones(n, dtype=bool)}
+        completion: Dict[str, np.ndarray] = {SOURCE: self.arrivals}
+        out: Dict[str, StageState] = {}
+        for stage in engine._topo:
+            skey = self._stage_key(stage, config, replica_schedules,
+                                   shed_schedules)
+            ent = self._stage_cache.get(skey)
+            if ent is None:
+                ent = self._simulate_stage_entry(
+                    stage, config, replica_schedules, visited, completion,
+                    shed_schedules)
+                self._stage_cache[skey] = ent
+                self._cache_bytes += ent.nbytes
+                self.stats["stage_sims"] += 1
+                while self._stage_cache and (
+                        len(self._stage_cache) > self.max_cache_entries
+                        or self._cache_bytes > self.max_cache_bytes):
+                    _, old = self._stage_cache.popitem(last=False)
+                    self._cache_bytes -= old.nbytes
+            else:
+                self._stage_cache.move_to_end(skey)
+            vis, ready = self._stage_ready(stage, visited, completion)
+            visited[stage] = ent.visited
+            completion[stage] = ent.completion
+            out[stage] = StageState(vis, ready, ent.completion, ent.dropped)
+        return out
+
     def _accum_store(self, acc_key: Tuple, last_done: np.ndarray,
                      dropped: Optional[np.ndarray]) -> None:
         nb = last_done.nbytes + (dropped.nbytes if dropped is not None else 0)
@@ -439,6 +535,7 @@ class TraceSession:
         self,
         configs: Iterable[PipelineConfig],
         replica_schedules: Optional[Schedules] = None,
+        shed_schedules: Optional[ShedSchedules] = None,
     ) -> List[SimResult]:
         """Batched candidate evaluation (the planner's scoring surface).
 
@@ -453,10 +550,11 @@ class TraceSession:
         seen: Dict[Tuple, SimResult] = {}
         out: List[SimResult] = []
         for config in configs:
-            ck = self.config_key(config, replica_schedules)
+            ck = self.config_key(config, replica_schedules, shed_schedules)
             res = seen.get(ck)
             if res is None:
-                res = self.simulate(config, replica_schedules)
+                res = self.simulate(config, replica_schedules,
+                                    shed_schedules)
                 seen[ck] = res
             out.append(res)
         return out
@@ -477,14 +575,16 @@ class TraceSession:
         return [self.percentile(c, p, replica_schedules) for c in configs]
 
     def percentile(self, config: PipelineConfig, p: float,
-                   replica_schedules: Optional[Schedules] = None) -> float:
+                   replica_schedules: Optional[Schedules] = None,
+                   shed_schedules: Optional[ShedSchedules] = None) -> float:
         """Memoized latency percentile per full configuration (the scalar
         the planner's feasibility checks consume — subsumes the seed
         planner's whole-config ``_cache``)."""
-        key = (self.config_key(config, replica_schedules), p)
+        key = (self.config_key(config, replica_schedules, shed_schedules), p)
         val = self._pctl_cache.get(key)
         if val is None:
-            val = self.simulate(config, replica_schedules).percentile(p)
+            val = self.simulate(config, replica_schedules,
+                                shed_schedules).percentile(p)
             self._pctl_cache[key] = val
             if len(self._pctl_cache) > self._max_pctl_entries:
                 self._pctl_cache.popitem(last=False)

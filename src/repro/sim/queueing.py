@@ -55,6 +55,16 @@ All policies share the dynamic replica-pool semantics of the seed engine:
 adds a replica free at ``t``, ``-1`` retires the next replica to go idle
 at/after ``t``.
 
+Admission control (closed-loop Tuner, :mod:`repro.sim.control`): the
+``slo-drop`` policy additionally accepts ``shed_events`` — a sorted list
+of ``(t, margin_s)`` pairs defining a piecewise-constant shed margin
+``m(t)``. A query is shed at dequeue iff
+``deadline < batch_start + lut[1] + m(batch_start)``; the margin before
+the first event is 0 (the policy's historical behavior), ``m > 0`` sheds
+proactively (queries that would poison the batch behind them), and
+``m = -inf`` disables shedding entirely. ``fifo`` and ``edf`` ignore
+``shed_events``.
+
 Defensive LUT clamp: the effective max batch is clamped to the profiled
 range (``len(lut) - 1``), so a configured ``batch_size`` above the
 profile's largest batch can never silently extrapolate a bogus latency
@@ -64,6 +74,7 @@ which can be wildly wrong for constant-latency stages).
 
 from __future__ import annotations
 
+import bisect
 import heapq
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -150,8 +161,10 @@ def fifo(
     replica_events: Optional[Sequence[Tuple[float, int]]] = None,
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
+    shed_events: Optional[Sequence[Tuple[float, float]]] = None,
 ) -> StageOutcome:
-    """Arrival-order batching (the paper's policy). `deadline` is ignored.
+    """Arrival-order batching (the paper's policy). `deadline` and
+    `shed_events` are ignored.
 
     Bit-identical to the seed estimator's ``_simulate_stage``; the fill
     runs through the blocked vectorized kernel (module docstring).
@@ -562,8 +575,9 @@ def edf(
     replica_events: Optional[Sequence[Tuple[float, int]]] = None,
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
+    shed_events: Optional[Sequence[Tuple[float, float]]] = None,
 ) -> StageOutcome:
-    """Earliest-deadline-first batching.
+    """Earliest-deadline-first batching. ``shed_events`` is ignored.
 
     At each dispatch, the batch is the (up to) ``max_batch`` queries with
     the earliest deadlines among those ready. Without deadlines this
@@ -648,15 +662,19 @@ def slo_drop(
     replica_events: Optional[Sequence[Tuple[float, int]]] = None,
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
+    shed_events: Optional[Sequence[Tuple[float, float]]] = None,
 ) -> StageOutcome:
     """FIFO with SLO-aware shedding at dequeue (admission control).
 
     When a batch is formed at time ``start``, any candidate query whose
     deadline cannot be met even by a batch-1 dispatch right now
-    (``deadline < start + lut[1]``) is dropped rather than served: it
-    completes at ``+inf`` and is flagged in the drop mask. Under overload
-    this keeps the queue from collapsing — the paper's feasibility-only
-    planner has no answer once the offered load exceeds capacity.
+    (``deadline < start + lut[1] + m(start)``) is dropped rather than
+    served: it completes at ``+inf`` and is flagged in the drop mask.
+    Under overload this keeps the queue from collapsing — the paper's
+    feasibility-only planner has no answer once the offered load exceeds
+    capacity. The shed margin ``m(t)`` defaults to 0 and is piecewise
+    reprogrammable via ``shed_events`` (module docstring) — the
+    closed-loop Tuner's admission-control knob.
 
     ``timeout_s`` is ignored (as in ``edf``) — holding a batch open is
     at odds with shedding already-late work — and it is ignored
@@ -685,6 +703,13 @@ def slo_drop(
     solo_lat = lut_l[1]
     pool = _ReplicaPool(replicas, replica_events)
     batches: List[int] = []
+    # piecewise-constant shed margin: batch starts are not monotone under
+    # dynamic pools (a replica added at an earlier t can pop below the
+    # previous start), so each batch bisects the event times
+    shed = sorted(shed_events) if shed_events else None
+    if shed is not None:
+        shed_ts = [t for t, _ in shed]
+        shed_ms = [m for _, m in shed]
 
     ptr = 0
     while ptr < k:
@@ -702,6 +727,10 @@ def slo_drop(
             continue
         # form the batch in arrival order, shedding hopeless queries
         floor = start + solo_lat
+        if shed is not None:
+            si = bisect.bisect_right(shed_ts, start)
+            if si:
+                floor += shed_ms[si - 1]
         take: List[int] = []
         i = ptr
         while i < k and ready_l[i] <= start and len(take) < eff_batch:
@@ -750,7 +779,9 @@ def simulate_stage(
     replica_events: Optional[Sequence[Tuple[float, int]]] = None,
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
+    shed_events: Optional[Sequence[Tuple[float, float]]] = None,
 ) -> StageOutcome:
     """Dispatch to a named policy. `ready` must be sorted ascending."""
     return get_policy(policy)(ready, latency_lut, max_batch, replicas,
-                              replica_events, timeout_s, deadline)
+                              replica_events, timeout_s, deadline,
+                              shed_events)

@@ -23,6 +23,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.core.envelope import TrafficEnvelope
+
 
 @dataclasses.dataclass
 class SimResult:
@@ -161,6 +163,14 @@ class SimResult:
             out[name] = stats
         return out
 
+    def telemetry_summary(self) -> Dict[str, float]:
+        """Scalar roll-up used by closed-loop benchmark records."""
+        out = {"n": float(self.num_queries), "p99": self.p99,
+               "mean": self.mean, "drop_rate": self.drop_rate}
+        if self.slo_s is not None:
+            out["miss_rate"] = self.per_query_miss_rate()
+        return out
+
     def windowed_miss_rate(self, slo: float, window_s: float = 5.0
                            ) -> Tuple[np.ndarray, np.ndarray]:
         """(window_start_times, miss_rate per window) for time-series plots.
@@ -181,3 +191,64 @@ class SimResult:
         nz = counts > 0
         rates[nz] = missed[nz] / counts[nz]
         return edges, rates
+
+
+# -- closed-loop co-simulation telemetry (repro.sim.control) ---------------
+#
+# One EpochTelemetry per control epoch: the engine advances to the epoch
+# boundary, samples each stage's queue, and the Tuner consumes the record
+# to decide scale / admission-control events. Everything here is CAUSAL —
+# computed only from batches whose start time is at or before the epoch
+# boundary, which future control events (landing strictly later) can
+# never alter, so the record a controller sees mid-run is exactly the
+# record a full-trace re-simulation with the final schedule reproduces.
+
+
+@dataclasses.dataclass
+class StageTelemetry:
+    """One stage's queue view over one control epoch (t_start, t_end]."""
+
+    stage: str
+    arrived: int          # queries whose input became ready in the window
+    completed: int        # finite completions in the window
+    dropped: int          # shed queries whose deadline fell in the window
+    queue_depth: int      # ready <= t_end, neither completed nor shed yet
+    in_flight: int        # queue_depth subset completing within one batch
+    #                       service time of t_end (= currently in service,
+    #                       up to the batch-latency bound)
+    replicas: int         # configured replica target effective at t_end
+
+
+@dataclasses.dataclass
+class EpochTelemetry:
+    """Everything the engine tells the Tuner at one epoch boundary."""
+
+    epoch: int
+    t_start: float
+    t_end: float
+    ingress: int                      # ingress arrivals in the window
+    ingress_prefix: np.ndarray        # all ingress arrivals <= t_end
+    observed_envelope: TrafficEnvelope  # incremental envelope over prefix
+    stages: Dict[str, StageTelemetry]
+    completed: int                    # pipeline completions in the window
+    missed: int                       # window completions over their SLO
+    overdue: int                      # uncompleted queries whose deadline
+    #                                   newly passed in the window (a miss
+    #                                   observable before completion)
+    drops: int                        # shed, deadline in the window
+    p99_s: float                      # window-completion p99 (nan if none)
+
+    @property
+    def misses(self) -> int:
+        """SLO misses observed this epoch (late completions + newly
+        overdue in-flight/shed queries)."""
+        return self.missed + self.overdue
+
+    @property
+    def queue_depth_total(self) -> int:
+        return sum(s.queue_depth for s in self.stages.values())
+
+    @property
+    def miss_fraction(self) -> float:
+        """Misses over queries resolved or newly overdue this epoch."""
+        return self.misses / max(self.completed + self.overdue, 1)

@@ -6,6 +6,7 @@ import pytest
 from _hyp import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core.envelope import (
+    IncrementalEnvelope,
     TrafficEnvelope,
     envelope_windows,
     max_queries_in_window,
@@ -105,3 +106,52 @@ def test_superset_trace_never_smaller(arr):
     extra = np.sort(np.concatenate([arr, arr + 0.01]))
     env2 = TrafficEnvelope.from_trace(extra, 0.05)
     assert np.all(env2.max_counts >= env.max_counts)
+
+
+# ------------------------------------------------- incremental envelope
+
+incr_chunks_strategy = st.lists(
+    st.lists(st.floats(min_value=0.0, max_value=10.0, allow_nan=False),
+             min_size=0, max_size=40),
+    min_size=1, max_size=8,
+)
+
+
+@given(incr_chunks_strategy, st.floats(min_value=5e-3, max_value=1.0))
+@settings(max_examples=40, deadline=None)
+def test_incremental_envelope_matches_from_trace(chunks, ts):
+    """The streaming envelope equals the batch recomputation after every
+    extend() — the closed-loop telemetry's per-epoch contract."""
+    inc = IncrementalEnvelope(ts)
+    seen = np.zeros(0)
+    t_base = 0.0
+    for chunk in chunks:
+        new = t_base + np.sort(np.asarray(chunk, dtype=np.float64))
+        t_base = float(new[-1]) if new.size else t_base
+        seen = np.concatenate([seen, new])
+        inc.extend(new)
+        batch = TrafficEnvelope.from_trace(seen, ts)
+        np.testing.assert_array_equal(inc.snapshot().max_counts,
+                                      batch.max_counts)
+        np.testing.assert_array_equal(inc.snapshot().windows, batch.windows)
+
+
+def test_incremental_envelope_rejects_out_of_order():
+    inc = IncrementalEnvelope(0.05)
+    inc.extend(np.array([1.0, 2.0]))
+    with pytest.raises(ValueError, match="extend the observed prefix"):
+        inc.extend(np.array([0.5]))
+    # unsorted WITHIN a chunk would silently corrupt the searchsorted
+    # counts (a 2-arrival chunk must not report a 2-count tiny window)
+    with pytest.raises(ValueError, match="sorted"):
+        IncrementalEnvelope(0.05).extend(np.array([2.0, 1.0]))
+
+
+def test_incremental_envelope_empty_extends_are_noops():
+    inc = IncrementalEnvelope(0.05)
+    inc.extend(np.zeros(0))
+    assert inc.n == 0 and np.all(inc.snapshot().max_counts == 0)
+    inc.extend(np.array([1.0]))
+    counts = inc.snapshot().max_counts.copy()
+    inc.extend(np.zeros(0))
+    np.testing.assert_array_equal(inc.snapshot().max_counts, counts)

@@ -1,0 +1,37 @@
+"""Repo hygiene: no bytecode caches may ever be tracked again.
+
+Follow-up to the accidental ``__pycache__`` commit (removed in
+637b35b): ``.gitignore`` prevents *new* cache files from being staged,
+but a tracked file is immune to ignore rules — so this asserts the
+index itself is clean. CI runs the same check as a workflow step.
+"""
+
+import os
+import subprocess
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tracked_files():
+    try:
+        out = subprocess.run(
+            ["git", "ls-files"], cwd=REPO_ROOT, capture_output=True,
+            text=True, timeout=30, check=True)
+    except (OSError, subprocess.SubprocessError):
+        pytest.skip("git unavailable or not a git checkout")
+    return out.stdout.splitlines()
+
+
+def test_no_bytecode_caches_tracked():
+    bad = [f for f in _tracked_files()
+           if "__pycache__" in f.split("/") or f.endswith((".pyc", ".pyo"))]
+    assert not bad, f"bytecode caches tracked in git: {bad}"
+
+
+def test_gitignore_covers_bytecode_caches():
+    with open(os.path.join(REPO_ROOT, ".gitignore")) as f:
+        rules = {line.strip() for line in f}
+    assert "__pycache__/" in rules
+    assert "*.pyc" in rules

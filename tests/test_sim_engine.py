@@ -390,6 +390,153 @@ def test_unknown_policy_raises():
         engine.simulate(cfg, np.array([0.0]))
 
 
+def test_shed_schedule_noop_and_disable_and_proactive():
+    """slo-drop shed-margin schedules: a margin-0 event is bit-identical
+    to no schedule (the policy's historical floor), -inf disables
+    shedding entirely (== fifo), and a positive margin sheds at least as
+    much as the default."""
+    n = 60
+    ready = np.zeros(n)
+    lut = np.array([0.0, 0.01])
+    deadline = ready + 0.055
+    base, _, base_drop = simulate_stage("slo-drop", ready, lut, 1, 1,
+                                        deadline=deadline)
+    zero, _, zero_drop = simulate_stage("slo-drop", ready, lut, 1, 1,
+                                        deadline=deadline,
+                                        shed_events=[(0.0, 0.0)])
+    np.testing.assert_array_equal(base, zero)
+    np.testing.assert_array_equal(base_drop, zero_drop)
+    off, _, off_drop = simulate_stage(
+        "slo-drop", ready, lut, 1, 1, deadline=deadline,
+        shed_events=[(0.0, -np.inf)])
+    fifo_done, _, _ = simulate_stage("fifo", ready, lut, 1, 1)
+    assert not off_drop.any()
+    np.testing.assert_array_equal(off, fifo_done)
+    hot, _, hot_drop = simulate_stage(
+        "slo-drop", ready, lut, 1, 1, deadline=deadline,
+        shed_events=[(0.0, 0.02)])
+    assert hot_drop.sum() >= base_drop.sum() > 0
+
+
+def test_shed_schedule_piecewise_switches_midtrace():
+    """A mid-trace (t, margin) event takes effect for batches starting at
+    or after t: shedding disabled up front, enabled from the switch."""
+    ready = np.arange(40) * 0.001            # overload for one replica
+    lut = np.array([0.0, 0.01])
+    deadline = ready + 0.03
+    on_at = 0.2
+    d, _, drop = simulate_stage(
+        "slo-drop", ready, lut, 1, 1, deadline=deadline,
+        shed_events=[(0.0, -np.inf), (on_at, 0.0)])
+    # before the switch nothing is shed even when hopeless...
+    assert not drop[d <= on_at].any()
+    # ...after it the backlog of hopeless queries is shed again
+    assert drop.any()
+
+
+def test_engine_shed_schedules_thread_to_slo_drop_stages():
+    """Engine-level shed_schedules reach slo-drop stages (and cache keys
+    distinguish them); fifo stages ignore them bit-identically."""
+    pipe, store = _one_stage(latency=0.01)
+    engine = SimEngine(pipe, store)
+    arrivals = np.zeros(50)
+    slo = 0.05
+    cfg = PipelineConfig({"m": StageConfig(HW, 1, 1, policy="slo-drop")})
+    sess = engine.session(arrivals, slo_s=slo)
+    base = sess.simulate(cfg)
+    off = sess.simulate(cfg, shed_schedules={"m": [(0.0, -np.inf)]})
+    again = sess.simulate(cfg)
+    assert base.drop_rate > 0 and off.drop_rate == 0
+    np.testing.assert_array_equal(base.latency, again.latency)
+    # fifo stages: shed schedule is inert
+    cfg_f = PipelineConfig({"m": StageConfig(HW, 1, 1)})
+    a = engine.simulate(cfg_f, arrivals, slo_s=slo)
+    b = engine.simulate(cfg_f, arrivals, slo_s=slo,
+                        shed_schedules={"m": [(0.0, 0.02)]})
+    np.testing.assert_array_equal(a.latency, b.latency)
+
+
+# ------------------------------------------- epoch-stepped control loop
+
+
+def test_epoch_stepped_noop_bit_identical_to_one_shot_and_golden():
+    """Golden guard (closed-loop satellite): with feedback disabled, the
+    epoch-stepped engine produces bit-identical SimResults to the
+    one-shot path — and to the frozen seed oracle — on random DAG
+    pipelines, traces, and configurations."""
+    from repro.sim import ControlLoopSession, NoOpController
+
+    rng = np.random.default_rng(41)
+    for _ in range(6):
+        pipe, store = _random_pipeline(rng, int(rng.integers(1, 5)))
+        seed = int(rng.integers(100))
+        cfg = _random_config(rng, pipe)
+        arr = _random_trace(rng)
+        slo = float(rng.uniform(0.05, 0.5))
+        loop = ControlLoopSession(pipe, store, cfg, slo, epoch_s=0.25,
+                                  seed=seed)
+        out = loop.run(arr, NoOpController())
+        one = SimEngine(pipe, store, seed=seed).simulate(cfg, arr,
+                                                         slo_s=slo)
+        np.testing.assert_array_equal(out.sim.latency, one.latency)
+        golden = GoldenEstimator(pipe, store, seed=seed).simulate(cfg, arr)
+        np.testing.assert_array_equal(out.sim.latency, golden.latency)
+        for s in pipe.stages:
+            np.testing.assert_array_equal(
+                out.sim.per_stage_batches[s], golden.per_stage_batches[s])
+
+
+def test_epoch_stepping_replays_stage_cache():
+    """Epoch stepping must ride the cone cache: an N-epoch no-event run
+    simulates each stage once and replays it ~N times, not N times."""
+    from repro.sim import ControlLoopSession, NoOpController
+
+    rng = np.random.default_rng(43)
+    pipe, store = _random_pipeline(rng, 3)
+    cfg = _random_config(rng, pipe)
+    arr = _random_trace(rng)
+    loop = ControlLoopSession(pipe, store, cfg, 0.2, epoch_s=0.2)
+    engine = loop.engine
+    session_holder = {}
+    orig_session = engine.session
+
+    def capture(*a, **kw):
+        session_holder["s"] = orig_session(*a, **kw)
+        return session_holder["s"]
+
+    engine.session = capture
+    loop.run(arr, NoOpController())
+    stats = session_holder["s"].stats
+    assert stats["stage_sims"] == len(pipe.stages)
+    assert stats["stage_hits"] > stats["stage_sims"]
+
+
+def test_stage_states_match_policy_inputs():
+    """stage_states reconstructs the exact (visited, ready) queues the
+    policies consumed: completions re-derived from the returned ready
+    times through simulate_stage equal the engine's."""
+    rng = np.random.default_rng(47)
+    pipe, store = _random_pipeline(rng, 4)
+    engine = SimEngine(pipe, store)
+    arr = _random_trace(rng)
+    cfg = _random_config(rng, pipe)
+    session = engine.session(arr)
+    res = session.simulate(cfg)
+    states = session.stage_states(cfg)
+    for s in pipe.stages:
+        st = states[s]
+        idx = np.nonzero(st.visited)[0]
+        if idx.size == 0:
+            continue
+        order = idx[np.argsort(st.ready[idx], kind="stable")]
+        lut = engine.latency_lut(s, cfg[s].hardware, cfg[s].batch_size)
+        done, batches, _ = simulate_stage(
+            "fifo", st.ready[order], lut, cfg[s].batch_size,
+            cfg[s].replicas, None, cfg[s].timeout_s)
+        np.testing.assert_array_equal(done, st.completion[order])
+        np.testing.assert_array_equal(batches, res.per_stage_batches[s])
+
+
 def test_windowed_miss_rate_matches_naive_loop():
     """bincount aggregation == the seed's per-window Python loop."""
     pipe, store = _one_stage(latency=0.02)

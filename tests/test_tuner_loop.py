@@ -1,0 +1,335 @@
+"""Closed-loop Tuner co-simulation: property-tested control invariants.
+
+A feedback controller is exactly the kind of code that silently drifts,
+so the Tuner's contract is pinned down as properties (via ``tests/_hyp``,
+hypothesis or the deterministic fallback):
+
+1. scale-up replica targets are monotone in the violating rate r_max;
+2. at ``r_max == lambda_plan`` the Tuner recovers exactly the planned
+   replica counts (the §5 identity);
+3. no scale-down ever fires within ``DOWNSCALE_HYSTERESIS_S`` of a
+   replica-configuration change — under *arbitrary* (adversarial)
+   telemetry streams;
+4. closed-loop replica counts never fall below 1.
+
+Plus the loop-level equivalence guards: the epoch-stepped driver with
+the open-loop adapter reproduces ``run_tuner_offline``'s precomputed
+schedule exactly, and closed-loop telemetry is causally consistent with
+the final one-shot simulation.
+"""
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.core.envelope import TrafficEnvelope
+from repro.core.estimator import Estimator
+from repro.core.planner import Planner
+from repro.core.tuner import (
+    DOWNSCALE_HYSTERESIS_S,
+    ClosedLoopTuner,
+    OpenLoopTunerController,
+    Tuner,
+    TunerPlanInfo,
+    run_tuner_offline,
+)
+from repro.sim import ControlLoopSession, NoOpController
+from repro.sim.result import EpochTelemetry, StageTelemetry
+from repro.workload.generator import gamma_trace
+
+SLO = 0.15
+
+
+# -------------------------------------------------------------- synthetic
+
+def _plan_info(lam, mus, ks, scales, service_time_s=0.05):
+    """TunerPlanInfo built directly from (rate, throughputs, planned
+    replicas, scale factors) with the §5 rho identity."""
+    stages = [f"m{i}" for i in range(len(mus))]
+    mu = {s: float(m) for s, m in zip(stages, mus)}
+    k = {s: int(v) for s, v in zip(stages, ks)}
+    sf = {s: float(v) for s, v in zip(stages, scales)}
+    rho = {s: max(lam * sf[s] / (k[s] * mu[s]), 1e-6) for s in stages}
+    arr = np.arange(0, 2.0, 1.0 / max(lam, 1.0))
+    env = TrafficEnvelope.from_trace(arr, service_time_s)
+    return TunerPlanInfo(env, mu, rho, sf, k, service_time_s)
+
+
+_plan_strategy = dict(
+    lam=st.floats(min_value=5.0, max_value=2000.0),
+    mus=st.lists(st.floats(min_value=0.5, max_value=500.0),
+                 min_size=1, max_size=5),
+    ks=st.lists(st.integers(min_value=1, max_value=64),
+                min_size=5, max_size=5),
+    scales=st.lists(st.floats(min_value=0.05, max_value=1.0),
+                    min_size=5, max_size=5),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_plan_strategy["lam"], _plan_strategy["mus"], _plan_strategy["ks"],
+       _plan_strategy["scales"],
+       st.floats(min_value=0.0, max_value=5000.0),
+       st.floats(min_value=0.0, max_value=5000.0))
+def test_scale_up_monotone_in_rmax(lam, mus, ks, scales, r1, r2):
+    """Property 1: r1 <= r2  =>  k(r1) <= k(r2), per stage."""
+    n = len(mus)
+    tuner = Tuner(_plan_info(lam, mus, ks[:n], scales[:n]))
+    lo, hi = sorted((r1, r2))
+    t_lo = tuner.scale_up_targets(lo)
+    t_hi = tuner.scale_up_targets(hi)
+    for stage in t_lo:
+        assert t_lo[stage] <= t_hi[stage], (stage, lo, hi)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_plan_strategy["lam"], _plan_strategy["mus"], _plan_strategy["ks"],
+       _plan_strategy["scales"])
+def test_planned_rate_recovers_planned_replicas(lam, mus, ks, scales):
+    """Property 2: the §5 identity k(lambda_plan) == k_plan, exactly —
+    including when the float re-division of rho lands one ulp above the
+    integer (the reason for _replicas_for_rate's epsilon)."""
+    n = len(mus)
+    info = _plan_info(lam, mus, ks[:n], scales[:n])
+    tuner = Tuner(info)
+    assert tuner.scale_up_targets(lam) == info.planned_replicas
+
+
+def _telemetry(epoch, t0, t1, arr, stages, queue_depths, miss, service=0.05):
+    """Synthetic (possibly adversarial) EpochTelemetry record."""
+    prefix = arr[arr <= t1]
+    env = TrafficEnvelope.from_trace(prefix, service)
+    stele = {
+        s: StageTelemetry(stage=s, arrived=0, completed=0, dropped=0,
+                          queue_depth=int(q), in_flight=0, replicas=1)
+        for s, q in zip(stages, queue_depths)
+    }
+    n_win = int(((arr > t0) & (arr <= t1)).sum())
+    return EpochTelemetry(
+        epoch=epoch, t_start=t0, t_end=t1, ingress=n_win,
+        ingress_prefix=prefix, observed_envelope=env, stages=stele,
+        completed=max(n_win, 1), missed=int(miss), overdue=0, drops=0,
+        p99_s=float("nan"))
+
+
+def _drive(tuner, arr, n_epochs, rng, adversarial=True):
+    """Step a ClosedLoopTuner over synthetic telemetry; return events."""
+    stages = list(tuner.current)
+    t0 = 0.0
+    for e in range(1, n_epochs + 1):
+        t1 = float(e)
+        if adversarial:
+            qs = [int(rng.integers(0, 2000)) for _ in stages]
+            miss = int(rng.integers(0, 50))
+        else:
+            qs = [0 for _ in stages]
+            miss = 0
+        tuner.step(_telemetry(e, t0, t1, arr, stages, qs, miss))
+        t0 = t1
+    return tuner.events
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_no_scale_down_within_hysteresis(seed):
+    """Property 3: under arbitrary telemetry (random queue depths and
+    miss counts, bursty random ingress), every scale-down is at least
+    DOWNSCALE_HYSTERESIS_S after the previous replica change."""
+    rng = np.random.default_rng(seed)
+    lam = float(rng.uniform(20, 300))
+    n_st = int(rng.integers(1, 4))
+    info = _plan_info(lam, [float(rng.uniform(5, 80))] * n_st,
+                      [int(rng.integers(1, 12))] * n_st, [1.0] * n_st)
+    tuner = ClosedLoopTuner(info)
+    # bursty ingress: alternating calm / spike segments
+    segs = []
+    t = 0.0
+    while t < 90.0:
+        dur = float(rng.uniform(5, 25))
+        rate = lam * float(rng.choice([0.0, 0.3, 1.0, 1.0, 4.0]))
+        if rate > 0:
+            segs.append(t + gamma_trace(rate, 1.0, dur, seed=seed % 2**16))
+        t += dur
+    arr = np.sort(np.concatenate(segs)) if segs else np.zeros(0)
+    _drive(tuner, arr, 90, rng)
+    replica_events = [(t, kind) for (t, kind, _, _) in tuner.events
+                      if kind in ("up", "down")]
+    last_change = 0.0    # deployment counts as a configuration change
+    for t, kind in replica_events:
+        if kind == "down" and t != last_change:
+            assert t - last_change >= DOWNSCALE_HYSTERESIS_S - 1e-9, \
+                (t, last_change, tuner.events)
+        last_change = t
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_replicas_never_below_one(seed):
+    """Property 4: closed-loop counts stay >= 1, even through dead-air
+    traffic (rate 0) and adversarial telemetry pushing scale-down."""
+    rng = np.random.default_rng(seed)
+    lam = float(rng.uniform(20, 300))
+    info = _plan_info(lam, [float(rng.uniform(5, 80))],
+                      [int(rng.integers(1, 12))], [1.0])
+    tuner = ClosedLoopTuner(info)
+    # mostly-silent trace: drives lam_new to ~0 -> the scale-down floor
+    arr = gamma_trace(2.0, 1.0, 90.0, seed=seed % 2**16)
+    stages = list(tuner.current)
+    t0 = 0.0
+    for e in range(1, 91):
+        t1 = float(e)
+        qs = [0 for _ in stages]
+        tuner.step(_telemetry(e, t0, t1, arr, stages, qs, 0))
+        for s, k in tuner.current.items():
+            assert k >= 1, (e, s, tuner.current, tuner.events)
+        t0 = t1
+    # the schedule's running sums honor the floor too
+    for s in stages:
+        k = info.planned_replicas[s]
+        for _, kind, stage, delta in tuner.events:
+            if stage == s and kind in ("up", "down"):
+                k += delta
+                assert k >= 1
+
+
+# ------------------------------------------------- loop-level equivalence
+
+@pytest.fixture(scope="module")
+def planned_image(image_pipeline):
+    pipe, store = image_pipeline
+    sample = gamma_trace(lam=150.0, cv=1.0, duration_s=60.0, seed=0)
+    res = Planner(pipe, store).plan(sample, SLO)
+    assert res.feasible
+    est = Estimator(pipe, store)
+    info = TunerPlanInfo.from_plan(pipe, res.config, store, sample,
+                                   est.service_time(res.config))
+    return pipe, store, res, info, sample
+
+
+def test_open_loop_controller_matches_precomputed_schedule(planned_image):
+    """The epoch-stepped driver with the open-loop adapter reproduces
+    run_tuner_offline's schedule event for event, and the resulting
+    simulation is bit-identical to the precomputed-schedule path."""
+    pipe, store, res, info, sample = planned_image
+    from repro.serving.cluster import LiveClusterSim
+    ramp = np.concatenate([
+        gamma_trace(150, 1.0, 30, seed=4),
+        30.0 + gamma_trace(320, 1.0, 20, seed=5),
+        50.0 + gamma_trace(150, 1.0, 40, seed=6)])
+    offline = run_tuner_offline(Tuner(info), ramp)
+
+    sess = ControlLoopSession(pipe, store, res.config, SLO,
+                              rpc_delay_s=LiveClusterSim(
+                                  pipe, store, res.config, SLO
+                              ).engine.rpc_delay_s)
+    looped = sess.run(ramp, OpenLoopTunerController(Tuner(info)))
+    assert dict(looped.replica_schedules) == dict(offline)
+
+    live = LiveClusterSim(pipe, store, res.config, SLO).run(
+        ramp, schedule_fn=lambda arr: run_tuner_offline(Tuner(info), arr))
+    np.testing.assert_array_equal(looped.sim.latency, live.sim.latency)
+    # same schedule + shared cost-timeline helper => same cost integral
+    assert looped.total_cost() == pytest.approx(live.total_cost())
+
+
+def test_noop_controller_is_identity(planned_image):
+    """Feedback disabled => no events, and the run IS the static run."""
+    pipe, store, res, info, sample = planned_image
+    from repro.sim import SimEngine
+    trace = gamma_trace(170, 2.0, 40, seed=9)
+    out = ControlLoopSession(pipe, store, res.config, SLO).run(
+        trace, NoOpController())
+    assert out.events == [] and not any(out.replica_schedules.values())
+    static = SimEngine(pipe, store).simulate(res.config, trace, slo_s=SLO)
+    np.testing.assert_array_equal(out.sim.latency, static.latency)
+
+
+def test_closed_loop_reacts_and_recovers(planned_image):
+    """Integration: a spike triggers scale-ups (including a backlog
+    boost sized at the onset epoch), and the fleet returns to the
+    planned neighborhood after the spike leaves the envelope horizon."""
+    pipe, store, res, info, sample = planned_image
+    spike = np.concatenate([
+        sample,
+        60.0 + gamma_trace(500, 0.5, 15, seed=11),
+        75.0 + gamma_trace(150, 1.0, 85, seed=12)])
+    tuner = ClosedLoopTuner(info)
+    out = ControlLoopSession(pipe, store, res.config, SLO).run(spike, tuner)
+    ups = [e for e in out.events if e.kind == "up"]
+    downs = [e for e in out.events if e.kind == "down"]
+    assert ups and downs
+    # first reaction within a few epochs of the spike start
+    assert min(e.t for e in ups) <= 63.0
+    for stage, k in tuner.current.items():
+        planned = res.config[stage].replicas
+        assert 1 <= k <= planned + max(2, planned // 2), (stage, k)
+
+
+def test_telemetry_causally_consistent_with_final_sim(planned_image):
+    """Summing per-epoch miss observations (late completions + newly
+    overdue) over the whole run must reproduce the final simulation's
+    miss count for every query whose deadline fell inside the stepped
+    range — the telemetry a controller saw mid-run is exactly what the
+    final schedule's one-shot simulation shows."""
+    pipe, store, res, info, sample = planned_image
+    spike = np.concatenate([
+        sample, 60.0 + gamma_trace(450, 0.6, 12, seed=21),
+        72.0 + gamma_trace(150, 1.0, 48, seed=22)])
+    out = ControlLoopSession(pipe, store, res.config, SLO).run(
+        spike, ClosedLoopTuner(info))
+    t_last = max(ep.t_end for ep in out.telemetry)
+    misses_seen = sum(ep.misses for ep in out.telemetry)
+    deadline = out.sim.arrival + SLO
+    in_range = deadline <= t_last
+    miss_mask = (out.sim.latency > SLO)
+    if out.sim.dropped is not None:
+        miss_mask |= out.sim.dropped
+    assert misses_seen == int((miss_mask & in_range).sum())
+    # ingress accounting closes too
+    assert sum(ep.ingress for ep in out.telemetry) == \
+        int((spike <= t_last).sum())
+
+
+def test_run_rejects_unsorted_arrivals(planned_image):
+    """Telemetry windows are searchsorted slices: an unsorted trace that
+    the engine itself would tolerate must be refused, not mis-counted."""
+    pipe, store, res, info, sample = planned_image
+    bad = np.concatenate([gamma_trace(50, 1.0, 5, seed=1),
+                          gamma_trace(50, 1.0, 5, seed=2)])
+    with pytest.raises(ValueError, match="sorted"):
+        ControlLoopSession(pipe, store, res.config, SLO).run(
+            bad, NoOpController())
+
+
+def test_arrival_at_time_zero_is_counted(planned_image):
+    """Regression: the first epoch window is closed at both ends, so an
+    arrival at exactly t=0 lands in epoch 1's ingress count and the
+    per-epoch partition of the trace stays exact."""
+    pipe, store, res, info, sample = planned_image
+    trace = np.concatenate([[0.0], gamma_trace(100, 1.0, 10, seed=3)])
+    out = ControlLoopSession(pipe, store, res.config, SLO).run(
+        trace, NoOpController())
+    t_last = max(ep.t_end for ep in out.telemetry)
+    assert sum(ep.ingress for ep in out.telemetry) == \
+        int((trace <= t_last).sum())
+    assert out.telemetry[0].ingress == int((trace <= 1.0).sum())
+
+
+def test_epoch_replica_telemetry_tracks_schedule(planned_image):
+    """StageTelemetry.replicas reflects the events effective by each
+    epoch boundary (activation delay included)."""
+    pipe, store, res, info, sample = planned_image
+    spike = np.concatenate([sample, 60.0 + gamma_trace(500, 0.5, 10,
+                                                       seed=31)])
+    out = ControlLoopSession(pipe, store, res.config, SLO).run(
+        spike, ClosedLoopTuner(info))
+    for ep in out.telemetry:
+        for s, stele in ep.stages.items():
+            # events decided strictly before this boundary and effective
+            # by it (a down decided AT the boundary post-dates the record)
+            want = res.config[s].replicas + sum(
+                int(e.value) for e in out.events
+                if e.kind in ("up", "down") and e.stage == s
+                and e.t_effective <= ep.t_end and e.t < ep.t_end)
+            assert stele.replicas == want
