@@ -17,6 +17,7 @@ import time
 
 from benchmarks import (
     bench_engine,
+    bench_live_loop,
     bench_planner_scale,
     bench_slo_classes,
     bench_tuner_loop,
@@ -47,6 +48,7 @@ BENCHES = {
     "fig14": fig14_ds2,
     "beyond_planner": beyond_planner,
     "engine": bench_engine,
+    "live_loop": bench_live_loop,
     "planner_scale": bench_planner_scale,
     "slo_classes": bench_slo_classes,
     "tuner_loop": bench_tuner_loop,

@@ -1,4 +1,4 @@
-"""End-to-end driver: serve REAL JAX models with batched requests.
+"""End-to-end driver: serve REAL JAX models with a closed-loop Tuner.
 
 The paper's kind is a serving system, so the end-to-end example deploys
 actual jitted models (reduced variants of two assigned architectures) on
@@ -7,8 +7,12 @@ this host with the real thread-pool executor:
   1. measured-profile both models with the Profiler's wall-clock backend,
   2. plan the two-stage cascade with the Planner against the profile,
   3. deploy the planned config to PipelineExecutor (real centralized
-     batched queues + replica threads),
-  4. serve a Poisson trace of batched requests and report latency.
+     policy-aware batched queues + replica threads),
+  4. serve a Poisson trace of batched requests and report latency vs the
+     Estimator's prediction (Fig. 8 fidelity),
+  5. close the loop: a traffic spike hits the running pipeline and the
+     ClosedLoopTuner — the same controller used in co-simulation —
+     scales the real replica fleet through the LiveControlLoop.
 
 Run:  PYTHONPATH=src python examples/serve_real_models.py
 """
@@ -22,8 +26,10 @@ from repro.core.estimator import Estimator
 from repro.core.pipeline import linear_pipeline
 from repro.core.planner import Planner
 from repro.core.profiler import ProfileStore, profile_model_measured
+from repro.core.tuner import ClosedLoopTuner, TunerPlanInfo
 from repro.models import build_model
 from repro.serving.executor import PipelineExecutor
+from repro.serving.loop import LiveControlLoop
 from repro.workload.generator import gamma_trace
 
 SEQ = 32
@@ -102,13 +108,14 @@ def main() -> None:
     warm_b()
 
     print("deploying to the real executor and serving 15 s of traffic...")
+    solo = {s: store.get(pipe.stages[s].model_id).batch_latency("cpu-1", 1)
+            for s in pipe.stages}
     ex = PipelineExecutor(pipe, plan.config, {
         "stage_a": run_a, "stage_b": run_b,
-    })
+    }, solo_latency_s=solo)
     live = gamma_trace(LAMBDA, 1.0, 15, seed=1)
     payload = lambda i: jnp.ones((SEQ,), jnp.int32) * (i % 50)  # noqa: E731
-    lat = ex.serve_trace(live, payload)
-    ex.shutdown()
+    lat = ex.serve_trace(live, payload, slo_s=SLO)
 
     est = Estimator(pipe, store)
     predicted = est.simulate(plan.config, live)
@@ -120,6 +127,34 @@ def main() -> None:
           f"p99={predicted.p99*1e3:7.1f}ms (Fig. 8 fidelity check)")
     print(f"  mean batch sizes: "
           f"{ {k: round(v, 1) for k, v in ex.batch_stats().items()} }")
+
+    # ---- close the loop on the running pipeline -------------------------
+    # the ClosedLoopTuner drives REAL threads through the same
+    # step(EpochTelemetry) interface it uses in co-simulation; a 3x
+    # traffic spike should scale the fleet up, then drain it back down
+    print("\nclosed loop: 3x spike against the live executor ...")
+    service = est.service_time(plan.config)
+    info = TunerPlanInfo.from_plan(pipe, plan.config, store,
+                                   gamma_trace(LAMBDA, 1.0, 60, seed=2),
+                                   service)
+    tuner = ClosedLoopTuner(info, max_replicas=4)
+    loop = LiveControlLoop(ex, SLO, epoch_s=1.0, service_time_s=service)
+    # the tail outlives DOWNSCALE_HYSTERESIS_S so the drain-and-retire
+    # half of the lifecycle shows up too
+    spike = np.concatenate([
+        gamma_trace(LAMBDA, 1.0, 8, seed=3),
+        8.0 + gamma_trace(3 * LAMBDA, 0.7, 5, seed=4),
+        13.0 + gamma_trace(LAMBDA, 1.0, 17, seed=5)])
+    run = loop.run(spike, tuner, payload)
+    print(f"  served {run.latency.size} queries, "
+          f"miss={run.miss_rate:.4f}, released={run.released}")
+    for ev in run.events:
+        print(f"  t={ev.t:5.1f}s  {ev.kind:6s} {ev.stage:16s} "
+              f"value={ev.value:+.0f}")
+    for stage, tl in run.replica_timeline.items():
+        print(f"  {stage} replicas: " +
+              " -> ".join(f"{c}@{t:.0f}s" for t, c in tl))
+    ex.shutdown()
 
 
 if __name__ == "__main__":

@@ -30,10 +30,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.control import ControlEvent
 from repro.core.envelope import TrafficEnvelope
 from repro.core.pipeline import Pipeline, PipelineConfig
 from repro.core.profiler import ProfileStore
-from repro.sim.control import ControlEvent
 from repro.sim.result import EpochTelemetry
 
 REPLICA_ACTIVATION_S = 5.0
@@ -270,7 +270,13 @@ class ClosedLoopTuner(Tuner):
 
     ``step(telemetry) -> [ControlEvent]`` consumes one
     :class:`~repro.sim.result.EpochTelemetry` record per control epoch
-    and layers four feedback behaviors on the ingress-only base rules:
+    and layers four feedback behaviors on the ingress-only base rules.
+    The interface is the runtime-agnostic controller contract
+    (:mod:`repro.control`): the same instance drives the co-simulation
+    loop (:class:`repro.sim.control.ControlLoopSession`) and the real
+    thread-pool executor (:class:`repro.serving.loop.LiveControlLoop`)
+    unchanged — scaling real threads up *and* down is exercised by
+    ``benchmarks/bench_live_loop.py``.
 
     * **corroborated scale-up** — the ingress-only tuner trusts the
       envelope unconditionally; because the envelope carries a 60 s

@@ -1,2 +1,4 @@
 from repro.serving.cluster import LiveClusterSim, LiveRunResult  # noqa: F401
+from repro.serving.executor import PipelineExecutor  # noqa: F401
 from repro.serving.frontends import FRONTENDS, Frontend  # noqa: F401
+from repro.serving.loop import LiveControlLoop, LiveLoopResult  # noqa: F401

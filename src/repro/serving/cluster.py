@@ -23,17 +23,20 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.control import CostAccounting, replica_cost_timeline
 from repro.core.pipeline import Pipeline, PipelineConfig
 from repro.core.profiler import ProfileStore
 from repro.serving.frontends import FRONTENDS, Frontend
-from repro.sim import SimEngine, SimResult, replica_cost_timeline
+from repro.sim import SimEngine, SimResult
 
 
 @dataclasses.dataclass
-class LiveRunResult:
+class LiveRunResult(CostAccounting):
     sim: SimResult
     slo: float
-    # cost timeline: (times, $/hr at that time); integrate for total $.
+    # cost timeline: (times, $/hr at that time); integrate for total $
+    # (total_cost/mean_cost_per_hr come from the shared CostAccounting
+    # mixin; degenerate empty timelines cost 0).
     cost_times: np.ndarray
     cost_per_hr: np.ndarray
     replica_timeline: Dict[str, List[Tuple[float, int]]]
@@ -46,17 +49,8 @@ class LiveRunResult:
     def attainment(self) -> float:
         return 1.0 - self.miss_rate
 
-    def total_cost(self, t_end: Optional[float] = None) -> float:
-        """$ integrated over the run (trapezoid on the step function)."""
-        t_end = t_end if t_end is not None else float(self.sim.arrival.max())
-        ts = np.append(self.cost_times, t_end)
-        cs = np.append(self.cost_per_hr, self.cost_per_hr[-1])
-        dt = np.diff(ts)
-        return float((cs[:-1] * dt).sum() / 3600.0)
-
-    def mean_cost_per_hr(self, t_end: Optional[float] = None) -> float:
-        t_end = t_end if t_end is not None else float(self.sim.arrival.max())
-        return self.total_cost(t_end) * 3600.0 / max(t_end, 1e-9)
+    def _cost_t_end_default(self) -> float:
+        return float(self.sim.arrival.max()) if self.sim.arrival.size else 0.0
 
 
 class LiveClusterSim:

@@ -1,102 +1,93 @@
-"""Real (wall-clock) pipeline executor: centralized batched queues +
-thread-pool model replicas serving actual JAX models on CPU.
+"""Real (wall-clock) pipeline executor: policy-aware centralized batched
+queues + thread-pool model replicas serving actual JAX models on CPU.
 
-This is the runtime-path proof for the serving framework: the same
+This is the runtime half of the serving system: the same
 Pipeline/PipelineConfig the Planner emits is deployed over real queues
-and real jitted models, demonstrating the three properties InferLine
-requires of a serving system (§3): replica scaling at runtime, a
-configurable max batch size, and a centralized batched queue per stage.
+and real jitted models, with the three properties InferLine requires of
+a serving runtime (§3) implemented for real —
+
+* **centralized batched queue per stage**, driven by the SAME policy
+  core as the simulator (:class:`repro.core.policy.LiveQueue`): fifo,
+  edf (per-query deadlines), and slo-drop with a runtime-reprogrammable
+  shed margin, plus mid-run policy switching;
+* **configurable max batch size**, enforced at batch formation;
+* **runtime replica scaling in BOTH directions**: scale-up spawns
+  worker threads (optionally activating only after a modeled activation
+  delay, like the engine's ``(t, +1)`` events), scale-down *drains* —
+  a retiring worker finishes its in-service batch, never abandons it.
+
+Shutdown is condition-variable based: no queue sentinels, so there is
+no sentinel/batch-assembly race — ``shutdown()`` joins every worker.
+
+The executor also exposes the control-plane surface the closed-loop
+Tuner drives in co-simulation: :meth:`PipelineExecutor.apply_control_event`
+accepts the same :class:`repro.control.ControlEvent` s, and
+:meth:`telemetry_counters` feeds the :class:`repro.serving.loop
+.LiveControlLoop` driver that assembles real
+:class:`~repro.sim.result.EpochTelemetry` records.
 
 Scale is CPU-sized (tiny models, tens of QPS); the large-scale behavior
-is covered by the discrete-event cluster (`repro.serving.cluster`) whose
-queueing discipline this executor mirrors exactly.
+is covered by the discrete-event backends (`repro.serving.cluster`,
+`repro.sim.control`), whose queue discipline this executor shares by
+construction — `benchmarks/bench_live_loop.py` measures the residual
+sim<->real gap. ``StageConfig.timeout_s`` (the beyond-paper formation
+hold) is a simulator-only knob: the live queue serves greedily, the
+paper's discipline.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.pipeline import SOURCE, Pipeline, PipelineConfig
+from repro.control import ControlEvent
+from repro.core.pipeline import Pipeline, PipelineConfig
+from repro.core.policy import LiveQueue
+from repro.serving.frontends import Frontend
 
 
 @dataclasses.dataclass
 class _Request:
     rid: int
-    t_arrival: float
+    t_arrival: float                    # executor-clock seconds
     payload: Any
+    deadline: float = float("inf")      # executor-clock seconds
     t_done: Optional[float] = None
+    dropped: bool = False               # shed by an slo-drop stage
+    cancelled: bool = False             # released by a timed-out driver
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    # routing state lives ON the request (object identity), so a stale
+    # request draining after a run reset can never corrupt the
+    # bookkeeping of a new run that reuses its rid
+    visited: set = dataclasses.field(default_factory=set)
+    pending: int = 0                    # branches in flight
 
 
 class _Stage:
-    """Centralized batched queue + replica worker threads for one stage."""
+    """One centralized policy queue + its replica worker threads."""
 
     def __init__(self, name: str, fn: Callable[[List[Any]], List[Any]],
-                 max_batch: int, replicas: int,
-                 on_done: Callable[["_Request", Any], None]):
+                 max_batch: int, policy: str, solo_latency_s: float):
         self.name = name
         self.fn = fn
         self.max_batch = max_batch
-        self.on_done = on_done
-        self.q: "queue.Queue" = queue.Queue()
+        self.solo_latency_s = solo_latency_s
+        self.queue = LiveQueue(policy)
+        self.cond = threading.Condition()
         self.workers: List[threading.Thread] = []
-        self.batch_sizes: List[int] = []
-        self._stop = False
-        self._lock = threading.Lock()
-        for _ in range(replicas):
-            self.add_replica()
-
-    def add_replica(self) -> None:
-        t = threading.Thread(target=self._worker, daemon=True)
-        t.start()
-        self.workers.append(t)
-
-    def _worker(self) -> None:
-        while not self._stop:
-            try:
-                first = self.q.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            if first is None:
-                return
-            # batch everything already queued, up to max_batch (the
-            # paper's centralized batch-at-a-time discipline)
-            batch = [first]
-            while len(batch) < self.max_batch:
-                try:
-                    item = self.q.get_nowait()
-                except queue.Empty:
-                    break
-                if item is None:
-                    self.q.put(None)
-                    break
-                batch.append(item)
-            with self._lock:
-                self.batch_sizes.append(len(batch))
-            try:
-                outs = self.fn([r.payload for r in batch])
-            except Exception as e:  # noqa: BLE001 — a dead worker
-                # deadlocks the pipeline; surface the failure per-request
-                import traceback
-                print(f"[executor] stage {self.name} batch failed: {e!r}")
-                traceback.print_exc()
-                outs = [None] * len(batch)
-            for req, out in zip(batch, outs):
-                self.on_done(req, out)
-
-    def submit(self, req: _Request) -> None:
-        self.q.put(req)
-
-    def stop(self) -> None:
-        self._stop = True
-        for _ in self.workers:
-            self.q.put(None)
+        self.target = 0            # configured replica target
+        self.retire_pending = 0
+        self.stop = False
+        # cumulative counters (run-relative; reset by start_run)
+        self.arrived = 0
+        self.completed = 0
+        self.dropped = 0
+        self.in_flight = 0
+        self.batch_log: List[Tuple[float, int]] = []   # (t_start, size)
 
 
 class PipelineExecutor:
@@ -104,9 +95,20 @@ class PipelineExecutor:
 
     Args:
       pipeline: the DAG; conditional edges are sampled per request.
-      config: per-stage (hardware*, batch, replicas) — hardware is
-        informational on this CPU host; batch/replicas are enforced.
+      config: per-stage (hardware*, batch, replicas, policy) — hardware
+        is informational on this CPU host; batch/replicas/policy are
+        enforced.
       stage_fns: model_id -> callable(List[payload]) -> List[payload].
+      solo_latency_s: per-stage batch-1 service latency (seconds) — the
+        slo-drop viability floor (``deadline < now + solo + margin``).
+        Take it from the measured profile's ``lut[1]``; defaults to 0
+        (shed only queries already past their deadline).
+      frontend: optional :class:`~repro.serving.frontends.Frontend`
+        whose ``hop_delay_s`` is applied to every inter-stage hand-off
+        (a request becomes batchable ``hop_delay_s`` after its parent
+        completes) and to the reply hop — mirroring the simulator's
+        ``rpc_delay_s`` so sim<->real comparisons model the same
+        network.
 
     Join semantics: a request visits a stage at most once (same cap the
     scale-factor computation uses); the first triggering parent routes it.
@@ -114,95 +116,373 @@ class PipelineExecutor:
 
     def __init__(self, pipeline: Pipeline, config: PipelineConfig,
                  stage_fns: Dict[str, Callable[[List[Any]], List[Any]]],
-                 seed: int = 0):
+                 seed: int = 0,
+                 solo_latency_s: Optional[Dict[str, float]] = None,
+                 frontend: Optional[Frontend] = None):
         self.pipeline = pipeline
         self.config = config
         self.rng = np.random.default_rng(seed)
         self._rng_lock = threading.Lock()
-        self._lock = threading.Lock()
-        self._visited: Dict[int, set] = {}
-        self._inflight: Dict[int, int] = {}
-        self._sinks = set(pipeline.sinks())
+        self._lock = threading.Lock()     # guards per-request routing state
         self._children = {s: pipeline.children(s) for s in pipeline.stages}
+        self.hop_delay_s = frontend.hop_delay_s if frontend else 0.0
+        self._t0 = time.perf_counter()
+        self._shutdown = False
+        self.on_request_done: Optional[Callable[[_Request], None]] = None
+        solo = solo_latency_s or {}
         self._stages: Dict[str, _Stage] = {}
+        # (t_effective, +/-delta) per stage; the replica_timeline property
+        # derives the sorted cumulative step function, so a scale-up
+        # recorded at its future activation instant and a later-issued
+        # but earlier-effective scale-down still render in time order
+        self._timeline_deltas: Dict[str, List[Tuple[float, int]]] = {}
+        self._base_replicas: Dict[str, int] = {}
         for name, stage in pipeline.stages.items():
             cfg = config[name]
-            self._stages[name] = _Stage(
-                name, stage_fns[stage.model_id], cfg.batch_size,
-                cfg.replicas,
-                on_done=lambda req, out, s=name: self._on_done(s, req, out))
+            st = _Stage(name, stage_fns[stage.model_id], cfg.batch_size,
+                        getattr(cfg, "policy", "fifo"),
+                        float(solo.get(name, 0.0)))
+            self._stages[name] = st
+            self._timeline_deltas[name] = []
+            self._base_replicas[name] = cfg.replicas
+            for _ in range(cfg.replicas):
+                self._spawn_worker(st, t_active=0.0)
+            st.target = cfg.replicas
 
+    # -- clock -------------------------------------------------------------
+    def now(self) -> float:
+        """Seconds on the executor clock (zeroed by :meth:`start_run`)."""
+        return time.perf_counter() - self._t0
+
+    def start_run(self) -> None:
+        """Re-zero the clock and per-run stats for a fresh serving run.
+
+        Stage queues are purged: requests a previous run left behind
+        (released on timeout) carry pre-reset clock stamps and belong to
+        nobody — they must not be served against the new clock."""
+        with self._lock:
+            self._t0 = time.perf_counter()
+        for st in self._stages.values():
+            with st.cond:
+                st.arrived = st.completed = st.dropped = 0
+                st.batch_log = []
+                st.queue.clear()
+            self._timeline_deltas[st.name] = []
+            self._base_replicas[st.name] = st.target
+
+    # -- replica lifecycle -------------------------------------------------
+    def _spawn_worker(self, st: _Stage, t_active: float) -> None:
+        t = threading.Thread(target=self._worker_loop, args=(st, t_active),
+                             daemon=True)
+        with st.cond:                 # workers list is shared state
+            st.workers.append(t)
+        t.start()
+
+    def _record_delta(self, st: _Stage, t: float, delta: int) -> None:
+        self._timeline_deltas[st.name].append((t, delta))
+
+    @property
+    def replica_timeline(self) -> Dict[str, List[Tuple[float, int]]]:
+        """Per-stage replica-target step function, sorted by effective
+        time — the same (t, count) shape the simulated loops record."""
+        out: Dict[str, List[Tuple[float, int]]] = {}
+        for name, st in self._stages.items():
+            with st.cond:
+                deltas = sorted(self._timeline_deltas[name])
+                count = self._base_replicas[name]
+            tl = [(0.0, count)]
+            for t, d in deltas:
+                count += d
+                tl.append((t, count))
+            out[name] = tl
+        return out
+
+    def add_replicas(self, stage: str, n: int,
+                     t_active: Optional[float] = None) -> None:
+        """Spawn `n` workers; they begin serving at ``t_active`` (executor
+        clock) — the runtime analogue of the engine's ``(t, +1)`` events
+        with activation delay."""
+        st = self._stages[stage]
+        t_act = self.now() if t_active is None else float(t_active)
+        with st.cond:
+            st.target += n
+            self._record_delta(st, t_act, n)
+        for _ in range(n):
+            self._spawn_worker(st, t_act)
+
+    def retire_replicas(self, stage: str, n: int) -> None:
+        """Retire `n` workers by draining: each exits after finishing any
+        batch it is currently serving; queued work is never abandoned."""
+        st = self._stages[stage]
+        with st.cond:
+            n = min(n, st.target)
+            if n <= 0:
+                return
+            st.retire_pending += n
+            st.target -= n
+            self._record_delta(st, self.now(), -n)
+            st.cond.notify_all()
+
+    def scale(self, stage: str, replicas: int) -> None:
+        """Runtime replica scaling to an absolute target — both
+        directions (scale-down drains)."""
+        cur = self._stages[stage].target
+        if replicas > cur:
+            self.add_replicas(stage, replicas - cur)
+        elif replicas < cur:
+            self.retire_replicas(stage, cur - replicas)
+
+    def live_worker_count(self, stage: str) -> int:
+        """Worker threads actually alive (draining included)."""
+        st = self._stages[stage]
+        with st.cond:
+            st.workers = [t for t in st.workers if t.is_alive()]
+            return len(st.workers)
+
+    def replica_target(self, stage: str) -> int:
+        return self._stages[stage].target
+
+    # -- control-plane surface --------------------------------------------
+    def set_shed_margin(self, stage: str, margin_s: float) -> None:
+        st = self._stages[stage]
+        with st.cond:
+            st.queue.shed_margin = float(margin_s)
+            st.cond.notify_all()
+
+    def set_policy(self, stage: str, policy: str) -> None:
+        st = self._stages[stage]
+        with st.cond:
+            st.queue.set_policy(policy)
+            st.cond.notify_all()
+
+    def apply_control_event(self, ev: ControlEvent) -> None:
+        """Land one controller decision on the running pipeline — the
+        same event vocabulary the co-simulation loop folds into engine
+        schedules (:func:`repro.control.fold_control_event`)."""
+        if ev.stage not in self._stages:
+            raise ValueError(f"control event for unknown stage {ev.stage!r}")
+        if ev.kind == "up":
+            self.add_replicas(ev.stage, int(ev.value), ev.t_effective)
+        elif ev.kind == "down":
+            self.retire_replicas(ev.stage, int(-ev.value))
+        elif ev.kind == "shed":
+            self.set_shed_margin(ev.stage, float(ev.value))
+        elif ev.kind == "policy":
+            if not ev.policy:
+                raise ValueError("policy control event carries no policy")
+            self.set_policy(ev.stage, ev.policy)
+        else:
+            raise ValueError(f"unknown control event kind {ev.kind!r}")
+
+    # -- the worker loop ---------------------------------------------------
+    def _worker_loop(self, st: _Stage, t_active: float) -> None:
+        cond = st.cond
+        while True:
+            with cond:
+                batch: List[_Request] = []
+                shed: List[_Request] = []
+                while True:
+                    if st.stop:
+                        return
+                    if st.retire_pending > 0:
+                        # drain: exit between batches, never mid-batch
+                        st.retire_pending -= 1
+                        return
+                    now = self.now()
+                    if now < t_active:
+                        cond.wait(min(t_active - now, 0.1))
+                        continue
+                    batch, shed = st.queue.form_batch(
+                        now, st.max_batch, st.solo_latency_s)
+                    if batch or shed:
+                        break
+                    nxt = st.queue.next_ready_after(now)
+                    cond.wait(0.25 if nxt is None
+                              else min(max(nxt - now, 0.0) + 1e-4, 0.25))
+                cancelled = [r for r in batch if r.cancelled]
+                batch = [r for r in batch if not r.cancelled]
+                if batch:
+                    st.batch_log.append((self.now(), len(batch)))
+                    st.in_flight += len(batch)
+            for req in cancelled:       # released by a timed-out driver
+                self._finish_branch(st, req)
+            for req in shed:
+                self._finish_branch(st, req, shed_here=True)
+            if not batch:
+                continue
+            try:
+                outs = st.fn([r.payload for r in batch])
+            except Exception as e:  # noqa: BLE001 — a dead worker
+                # deadlocks the pipeline; surface the failure per-request
+                import traceback
+                print(f"[executor] stage {st.name} batch failed: {e!r}")
+                traceback.print_exc()
+                outs = [None] * len(batch)
+            for req, out in zip(batch, outs):
+                self._on_done(st, req, out)
+            with cond:
+                st.in_flight -= len(batch)
+                st.completed += len(batch)
+
+    # -- request routing ---------------------------------------------------
     def _coin(self, p: float) -> bool:
         if p >= 1.0:
             return True
         with self._rng_lock:
             return bool(self.rng.random() < p)
 
-    def _enqueue(self, stage: str, req: _Request) -> bool:
+    def _enqueue(self, stage: str, req: _Request, ready: float) -> bool:
         with self._lock:
-            seen = self._visited.setdefault(req.rid, set())
-            if stage in seen:
+            if stage in req.visited:
                 return False
-            seen.add(stage)
-            self._inflight[req.rid] = self._inflight.get(req.rid, 0) + 1
-        self._stages[stage].submit(req)
+            req.visited.add(stage)
+            req.pending += 1
+        st = self._stages[stage]
+        with st.cond:
+            st.arrived += 1
+            st.queue.push(req, ready, req.deadline)
+            st.cond.notify()
         return True
 
-    def _on_done(self, stage: str, req: _Request, out: Any) -> None:
-        req.payload = out
-        for e in self._children[stage]:
-            if self._coin(e.probability):
-                self._enqueue(e.dst, req)
+    def _finish_branch(self, st: _Stage, req: _Request,
+                       shed_here: bool = False) -> None:
+        """One branch of the request resolved without outputs (shed)."""
+        if shed_here:
+            req.dropped = True
+            with st.cond:
+                st.dropped += 1
         with self._lock:
-            self._inflight[req.rid] -= 1
-            finished = self._inflight[req.rid] == 0
+            req.pending -= 1
+            finished = req.pending == 0
         if finished:
-            req.t_done = time.perf_counter()
-            req.done.set()
+            self._finalize(req)
+
+    def _on_done(self, st: _Stage, req: _Request, out: Any) -> None:
+        if not req.dropped:
+            req.payload = out
+        if not req.cancelled:
+            ready = self.now() + self.hop_delay_s
+            for e in self._children[st.name]:
+                if self._coin(e.probability):
+                    self._enqueue(e.dst, req, ready)
+        with self._lock:
+            req.pending -= 1
+            finished = req.pending == 0
+        if finished:
+            self._finalize(req)
+
+    def _finalize(self, req: _Request) -> None:
+        req.t_done = self.now() + self.hop_delay_s   # reply hop
+        req.done.set()
+        cb = self.on_request_done
+        if cb is not None:
+            cb(req)
 
     def inject(self, req: _Request) -> None:
         routed = False
+        ready = req.t_arrival + self.hop_delay_s
         for e in self.pipeline.entry_edges():
             if self._coin(e.probability):
-                routed |= self._enqueue(e.dst, req)
+                routed |= self._enqueue(e.dst, req, ready)
         if not routed:
             req.t_done = req.t_arrival
             req.done.set()
 
+    def release(self, reqs: List[_Request]) -> int:
+        """Cancel every unfinished request in `reqs`: queued occurrences
+        are discarded at the next batch formation, in-service batches
+        complete but route no further. Returns the number released —
+        the timed-out ``serve_trace`` path uses this so stages do not
+        keep grinding through a backlog nobody is waiting for."""
+        n = 0
+        for req in reqs:
+            if not req.done.is_set():
+                req.cancelled = True
+                n += 1
+        for st in self._stages.values():
+            with st.cond:
+                st.cond.notify_all()
+        return n
+
+    # -- serving -----------------------------------------------------------
     def serve_trace(self, arrivals: np.ndarray, payload_fn,
                     time_scale: float = 1.0,
-                    timeout_s: float = 300.0) -> np.ndarray:
+                    timeout_s: float = 300.0,
+                    slo_s: Optional[float] = None) -> np.ndarray:
         """Replay `arrivals` (seconds, scaled by `time_scale`) against the
-        running pipeline; returns per-query latency (unscaled seconds)."""
+        running pipeline; returns per-query latency (unscaled seconds).
+
+        Requests still unfinished ``timeout_s`` after the last injection
+        are *released* (cancelled and reported as ``inf``), not silently
+        abandoned to keep grinding through the stages. ``slo_s`` stamps
+        per-request deadlines (scaled), which the edf/slo-drop queue
+        policies consume; shed requests report ``inf``.
+        """
         arrivals = np.asarray(arrivals, dtype=np.float64) * time_scale
+        self.start_run()
         reqs: List[_Request] = []
-        t0 = time.perf_counter()
         for i, t_arr in enumerate(arrivals):
-            now = time.perf_counter() - t0
+            now = self.now()
             if t_arr > now:
                 time.sleep(t_arr - now)
-            req = _Request(i, time.perf_counter(), payload_fn(i))
+            t_inj = self.now()
+            deadline = (t_inj + slo_s * time_scale if slo_s is not None
+                        else float("inf"))
+            req = _Request(i, t_inj, payload_fn(i), deadline)
             reqs.append(req)
             self.inject(req)
-        deadline = time.perf_counter() + timeout_s
+        deadline_t = time.perf_counter() + timeout_s
         for req in reqs:
-            req.done.wait(max(0.0, deadline - time.perf_counter()))
+            req.done.wait(max(0.0, deadline_t - time.perf_counter()))
+        self.release(reqs)
         return np.array([
-            (r.t_done - r.t_arrival) / time_scale if r.t_done else np.inf
+            np.inf if (r.t_done is None or r.dropped or r.cancelled)
+            else (r.t_done - r.t_arrival) / time_scale
             for r in reqs])
+
+    # -- telemetry ---------------------------------------------------------
+    def telemetry_counters(self) -> Dict[str, Dict[str, float]]:
+        """Instantaneous per-stage counters (cumulative arrived/completed/
+        dropped + live queue depth, in-flight, replica target) — the raw
+        feed the live control loop turns into ``StageTelemetry`` deltas."""
+        out: Dict[str, Dict[str, float]] = {}
+        for name, st in self._stages.items():
+            with st.cond:
+                out[name] = {
+                    "arrived": st.arrived,
+                    "completed": st.completed,
+                    "dropped": st.dropped,
+                    "queue_depth": len(st.queue),
+                    "in_flight": st.in_flight,
+                    "replicas": st.target,
+                }
+        return out
+
+    def batch_sizes(self) -> Dict[str, np.ndarray]:
+        return {s: np.asarray([b for _, b in st.batch_log], dtype=np.int64)
+                for s, st in self._stages.items()}
 
     def batch_stats(self) -> Dict[str, float]:
         return {
-            s: (float(np.mean(st.batch_sizes)) if st.batch_sizes else 0.0)
+            s: (float(np.mean([b for _, b in st.batch_log]))
+                if st.batch_log else 0.0)
             for s, st in self._stages.items()
         }
 
-    def scale(self, stage: str, replicas: int) -> None:
-        """Runtime replica scaling (scale-up only on the CPU executor)."""
-        cur = len(self._stages[stage].workers)
-        for _ in range(replicas - cur):
-            self._stages[stage].add_replica()
-
-    def shutdown(self) -> None:
+    # -- shutdown ----------------------------------------------------------
+    def shutdown(self, join_timeout_s: float = 5.0) -> bool:
+        """Stop every worker and join it. Returns True when all worker
+        threads exited within the timeout. Safe to call twice."""
+        self._shutdown = True
+        to_join: List[threading.Thread] = []
         for st in self._stages.values():
-            st.stop()
+            with st.cond:
+                st.stop = True
+                st.cond.notify_all()
+                to_join.extend(st.workers)
+        ok = True
+        deadline = time.perf_counter() + join_timeout_s
+        for t in to_join:
+            t.join(max(0.0, deadline - time.perf_counter()))
+            ok &= not t.is_alive()
+        return ok

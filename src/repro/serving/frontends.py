@@ -7,7 +7,12 @@ per-hop overhead constants, mirroring the paper's finding that TFS
 carries extra RPC serialization overhead relative to Clipper.
 
 The real (wall-clock, thread-pool) executor in ``repro.serving.executor``
-consumes the same Frontend descriptors.
+consumes the same Frontend descriptors: its inter-stage hand-offs delay
+a request's queue-ready instant by ``hop_delay_s`` (and the reply hop
+adds one more), exactly where the simulation engine charges
+``rpc_delay_s`` — so a sim<->real fidelity comparison
+(``benchmarks/bench_live_loop.py``) models the same network on both
+backends.
 """
 
 from __future__ import annotations

@@ -23,6 +23,7 @@ from repro.sim.control import (  # noqa: F401
     ControlEvent,
     ControlLoopSession,
     NoOpController,
+    ScheduleController,
     replica_cost_timeline,
 )
 from repro.sim.engine import (  # noqa: F401

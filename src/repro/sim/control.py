@@ -31,14 +31,21 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.control import (  # noqa: F401 — re-exported for compatibility
+    ControlEvent,
+    Controller,
+    CostAccounting,
+    NoOpController,
+    ScheduleController,
+    fold_control_event,
+    integrate_cost,
+    replica_cost_timeline,
+)
 from repro.core.envelope import IncrementalEnvelope
-from repro.core.hardware import get_hardware
 from repro.core.pipeline import Pipeline, PipelineConfig
 from repro.core.profiler import ProfileStore
 from repro.sim.engine import (
     DEFAULT_RPC_DELAY_S,
-    Schedules,
-    ShedSchedules,
     SimEngine,
 )
 from repro.sim.result import EpochTelemetry, SimResult, StageTelemetry
@@ -49,75 +56,8 @@ from repro.sim.result import EpochTelemetry, SimResult, StageTelemetry
 DEFAULT_EPOCH_S = 1.0
 
 
-@dataclasses.dataclass(frozen=True)
-class ControlEvent:
-    """One controller decision.
-
-    ``kind``:
-    * ``"up"``   — add ``int(value)`` replicas to ``stage`` (value > 0)
-    * ``"down"`` — retire ``int(-value)`` replicas (value < 0)
-    * ``"shed"`` — set the stage's slo-drop shed margin to ``value``
-      seconds from ``t_effective`` on (see repro.sim.queueing)
-    """
-
-    t: float                 # decision time (the epoch boundary)
-    t_effective: float       # when the event lands in the engine
-    stage: str
-    kind: str                # "up" | "down" | "shed"
-    value: float
-
-    def as_record(self) -> Dict[str, object]:
-        return {"t": self.t, "t_effective": self.t_effective,
-                "stage": self.stage, "kind": self.kind,
-                "value": self.value}
-
-
-class NoOpController:
-    """Feedback disabled: never issues an event (the open-loop guard)."""
-
-    def step(self, tele: EpochTelemetry) -> List[ControlEvent]:
-        del tele
-        return []
-
-
-def replica_cost_timeline(
-    pipeline: Pipeline,
-    config: PipelineConfig,
-    schedules: Optional[Schedules],
-    t_end: float,
-) -> Tuple[np.ndarray, np.ndarray, Dict[str, List[Tuple[float, int]]]]:
-    """(times, $/hr step function, per-stage replica timeline) for a run.
-
-    Shared by the open-loop live-cluster simulation and the closed-loop
-    runner so cost comparisons integrate the same step function.
-    """
-    counts = {s: config[s].replicas for s in pipeline.stages}
-    hw_cost = {
-        s: get_hardware(config[s].hardware).cost_per_hr
-        for s in pipeline.stages
-    }
-    events: List[Tuple[float, str, int]] = []
-    for s, evs in (schedules or {}).items():
-        for t, d in evs:
-            events.append((t, s, d))
-    events.sort()
-    times = [0.0]
-    costs = [sum(counts[s] * hw_cost[s] for s in counts)]
-    timeline: Dict[str, List[Tuple[float, int]]] = {
-        s: [(0.0, counts[s])] for s in counts
-    }
-    for t, s, d in events:
-        if t > t_end:
-            break
-        counts[s] += d
-        times.append(t)
-        costs.append(sum(counts[k] * hw_cost[k] for k in counts))
-        timeline[s].append((t, counts[s]))
-    return np.asarray(times), np.asarray(costs), timeline
-
-
 @dataclasses.dataclass
-class ClosedLoopResult:
+class ClosedLoopResult(CostAccounting):
     """Outcome of one closed-loop run: the per-query simulation under the
     controller's final schedule, plus the control-plane artifacts."""
 
@@ -130,6 +70,8 @@ class ClosedLoopResult:
     cost_times: np.ndarray
     cost_per_hr: np.ndarray
     replica_timeline: Dict[str, List[Tuple[float, int]]]
+    policy_schedules: Dict[str, List[Tuple[float, str]]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def miss_rate(self) -> float:
@@ -139,15 +81,8 @@ class ClosedLoopResult:
     def attainment(self) -> float:
         return 1.0 - self.miss_rate
 
-    def total_cost(self, t_end: Optional[float] = None) -> float:
-        t_end = t_end if t_end is not None else float(self.sim.arrival.max())
-        ts = np.append(self.cost_times, t_end)
-        cs = np.append(self.cost_per_hr, self.cost_per_hr[-1])
-        return float((cs[:-1] * np.diff(ts)).sum() / 3600.0)
-
-    def mean_cost_per_hr(self, t_end: Optional[float] = None) -> float:
-        t_end = t_end if t_end is not None else float(self.sim.arrival.max())
-        return self.total_cost(t_end) * 3600.0 / max(t_end, 1e-9)
+    def _cost_t_end_default(self) -> float:
+        return float(self.sim.arrival.max()) if self.sim.arrival.size else 0.0
 
 
 class ControlLoopSession:
@@ -280,6 +215,7 @@ class ControlLoopSession:
         sched: Dict[str, List[Tuple[float, int]]] = {
             s: [] for s in self.pipeline.stages}
         shed: Dict[str, List[Tuple[float, float]]] = {}
+        pols: Dict[str, List[Tuple[float, str]]] = {}
         telemetry: List[EpochTelemetry] = []
         events: List[ControlEvent] = []
         env = IncrementalEnvelope(
@@ -291,40 +227,27 @@ class ControlLoopSession:
         t = self.epoch_s
         while t <= t_stop + 1e-9:
             epoch += 1
-            res = session.simulate(self.config, sched, shed or None)
-            states = session.stage_states(self.config, sched, shed or None)
+            res = session.simulate(self.config, sched, shed or None,
+                                   pols or None)
+            states = session.stage_states(self.config, sched, shed or None,
+                                          pols or None)
             tele = self._telemetry(epoch, t0, t, arr, res, states, sched,
                                    env)
             telemetry.append(tele)
             for ev in controller.step(tele) or ():
-                if ev.stage not in self.pipeline.stages:
-                    raise ValueError(f"control event for unknown stage "
-                                     f"{ev.stage!r}")
-                if ev.t_effective < t - 1e-9:
-                    raise ValueError(
-                        f"acausal control event: decided at {t}, effective "
-                        f"{ev.t_effective}")
+                # shared validation + schedule folding (repro.control):
+                # the live loop driver enforces the identical contract
+                fold_control_event(ev, self.pipeline.stages, t, sched,
+                                   shed, pols)
                 events.append(ev)
-                if ev.kind in ("up", "down"):
-                    sched[ev.stage].append((ev.t_effective, int(ev.value)))
-                    # ups land at t+activation, downs at t: keep each
-                    # stage's stream time-sorted for the replica pool
-                    sched[ev.stage].sort(key=lambda e: e[0])
-                elif ev.kind == "shed":
-                    shed.setdefault(ev.stage, []).append(
-                        (ev.t_effective, float(ev.value)))
-                    shed[ev.stage].sort(key=lambda e: e[0])
-                else:
-                    raise ValueError(f"unknown control event kind "
-                                     f"{ev.kind!r}")
             t0 = t
             t += self.epoch_s
 
-        res = session.simulate(self.config, sched, shed or None)
+        res = session.simulate(self.config, sched, shed or None, pols or None)
         times, costs, timeline = replica_cost_timeline(
             self.pipeline, self.config, sched, t_stop)
         return ClosedLoopResult(
             sim=res, slo=self.slo, telemetry=telemetry, events=events,
             replica_schedules=sched, shed_schedules=shed,
             cost_times=times, cost_per_hr=costs,
-            replica_timeline=timeline)
+            replica_timeline=timeline, policy_schedules=pols)

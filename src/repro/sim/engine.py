@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.pipeline import SOURCE, Pipeline, PipelineConfig
 from repro.core.profiler import ProfileStore
-from repro.sim.queueing import get_policy
+from repro.sim.queueing import simulate_stage
 from repro.sim.result import SimResult
 
 # Per-hop RPC/serialization delay. The frontend adapters (Fig. 13) override
@@ -46,6 +46,11 @@ Schedules = Dict[str, Schedule]
 # (see repro.sim.queueing module docstring / repro.sim.control)
 ShedSchedule = Sequence[Tuple[float, float]]
 ShedSchedules = Dict[str, ShedSchedule]
+# piecewise queueing-policy switch schedules (repro.core.policy): a stage
+# with a non-empty schedule simulates through the policy-core scalar
+# path (repro.sim.queueing.switched) instead of its dedicated kernel
+PolicySchedule = Sequence[Tuple[float, str]]
+PolicySchedules = Dict[str, PolicySchedule]
 
 
 def _sched_key(sched: Optional[Schedule]) -> Tuple:
@@ -54,6 +59,10 @@ def _sched_key(sched: Optional[Schedule]) -> Tuple:
 
 def _shed_key(sched: Optional[ShedSchedule]) -> Tuple:
     return tuple((float(t), float(m)) for t, m in sched) if sched else ()
+
+
+def _policy_key(sched: Optional[PolicySchedule]) -> Tuple:
+    return tuple((float(t), str(p)) for t, p in sched) if sched else ()
 
 
 class SimEngine:
@@ -164,12 +173,14 @@ class SimEngine:
         class_ids: Optional[np.ndarray] = None,
         class_names: Optional[Sequence[str]] = None,
         shed_schedules: Optional[ShedSchedules] = None,
+        policy_schedules: Optional[PolicySchedules] = None,
     ) -> SimResult:
         """One-shot simulation (fresh session; no cross-call memoization)."""
         return self.session(arrivals, slo_s=slo_s, class_ids=class_ids,
                             class_names=class_names).simulate(
             config, replica_schedules=replica_schedules,
-            shed_schedules=shed_schedules)
+            shed_schedules=shed_schedules,
+            policy_schedules=policy_schedules)
 
     def service_time(self, config: PipelineConfig) -> float:
         """Sum of batch-size-configured latencies along the longest path
@@ -308,28 +319,35 @@ class TraceSession:
     # -- cache keys ---------------------------------------------------------
     def _stage_key(self, stage: str, config: PipelineConfig,
                    schedules: Optional[Schedules],
-                   shed_schedules: Optional[ShedSchedules] = None) -> Tuple:
+                   shed_schedules: Optional[ShedSchedules] = None,
+                   policy_schedules: Optional[PolicySchedules] = None
+                   ) -> Tuple:
         # StageConfig.key() is the single source of truth for config
         # identity — new StageConfig knobs invalidate these caches
         # automatically instead of silently colliding
         sched = schedules or {}
         shed = shed_schedules or {}
+        pols = policy_schedules or {}
         return (stage, tuple(
             (s, config[s].key(), _sched_key(sched.get(s)),
-             _shed_key(shed.get(s)))
+             _shed_key(shed.get(s)), _policy_key(pols.get(s)))
             for s in self.engine._cone[stage]
         ))
 
     @staticmethod
     def config_key(config: PipelineConfig,
                    schedules: Optional[Schedules] = None,
-                   shed_schedules: Optional[ShedSchedules] = None) -> Tuple:
-        if not schedules and not shed_schedules:
+                   shed_schedules: Optional[ShedSchedules] = None,
+                   policy_schedules: Optional[PolicySchedules] = None
+                   ) -> Tuple:
+        if not schedules and not shed_schedules and not policy_schedules:
             return config.cache_key()
         return (config.cache_key(), tuple(sorted(
             (s, _sched_key(sch)) for s, sch in (schedules or {}).items())),
             tuple(sorted((s, _shed_key(sch))
-                         for s, sch in (shed_schedules or {}).items())))
+                         for s, sch in (shed_schedules or {}).items())),
+            tuple(sorted((s, _policy_key(sch))
+                         for s, sch in (policy_schedules or {}).items())))
 
     # -- simulation ---------------------------------------------------------
     def _stage_ready(
@@ -365,6 +383,7 @@ class TraceSession:
         visited: Dict[str, np.ndarray],
         completion: Dict[str, np.ndarray],
         shed_schedules: Optional[ShedSchedules] = None,
+        policy_schedules: Optional[PolicySchedules] = None,
     ) -> _StageEntry:
         engine = self.engine
         n = self.n
@@ -380,12 +399,16 @@ class TraceSession:
         sorted_ready = ready[order]
         sorted_deadline = (self.deadline[order]
                            if self.deadline is not None else None)
-        policy = get_policy(getattr(cfg, "policy", "fifo"))
-        done_sorted, batches, dropped_sorted = policy(
+        # a stage with a policy-switch schedule routes through the
+        # policy-core scalar path; everything else hits its dedicated
+        # (vectorized/hoisted) kernel as before
+        done_sorted, batches, dropped_sorted = simulate_stage(
+            getattr(cfg, "policy", "fifo"),
             sorted_ready, lut, cfg.batch_size, cfg.replicas,
             (schedules or {}).get(stage),
             getattr(cfg, "timeout_s", 0.0), sorted_deadline,
             (shed_schedules or {}).get(stage),
+            (policy_schedules or {}).get(stage),
         )
         comp = np.full(n, -np.inf)
         comp[order] = done_sorted
@@ -400,6 +423,7 @@ class TraceSession:
         config: PipelineConfig,
         replica_schedules: Optional[Schedules] = None,
         shed_schedules: Optional[ShedSchedules] = None,
+        policy_schedules: Optional[PolicySchedules] = None,
     ) -> SimResult:
         """Run the trace through the configured pipeline.
 
@@ -422,12 +446,12 @@ class TraceSession:
 
         for stage in engine._topo:
             skey = self._stage_key(stage, config, replica_schedules,
-                                   shed_schedules)
+                                   shed_schedules, policy_schedules)
             ent = self._stage_cache.get(skey)
             if ent is None:
                 ent = self._simulate_stage_entry(
                     stage, config, replica_schedules, visited, completion,
-                    shed_schedules)
+                    shed_schedules, policy_schedules)
                 self._stage_cache[skey] = ent
                 self._cache_bytes += ent.nbytes
                 self.stats["stage_sims"] += 1
@@ -471,6 +495,7 @@ class TraceSession:
         config: PipelineConfig,
         replica_schedules: Optional[Schedules] = None,
         shed_schedules: Optional[ShedSchedules] = None,
+        policy_schedules: Optional[PolicySchedules] = None,
     ) -> Dict[str, StageState]:
         """Per-stage queue views for the configured simulation — what the
         closed-loop telemetry (:mod:`repro.sim.control`) samples at epoch
@@ -485,12 +510,12 @@ class TraceSession:
         out: Dict[str, StageState] = {}
         for stage in engine._topo:
             skey = self._stage_key(stage, config, replica_schedules,
-                                   shed_schedules)
+                                   shed_schedules, policy_schedules)
             ent = self._stage_cache.get(skey)
             if ent is None:
                 ent = self._simulate_stage_entry(
                     stage, config, replica_schedules, visited, completion,
-                    shed_schedules)
+                    shed_schedules, policy_schedules)
                 self._stage_cache[skey] = ent
                 self._cache_bytes += ent.nbytes
                 self.stats["stage_sims"] += 1

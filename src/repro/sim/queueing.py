@@ -70,15 +70,33 @@ range (``len(lut) - 1``), so a configured ``batch_size`` above the
 profile's largest batch can never silently extrapolate a bogus latency
 (the seed scaled ``lut[-1] * b / (len - 1)``, i.e. linear-through-origin,
 which can be wildly wrong for constant-latency stages).
+
+Policy core (:mod:`repro.core.policy`): the batch-formation *semantics*
+— the scalar selection loops, the shed-margin schedule, the replica
+pool — live in the runtime-agnostic policy core shared with the
+wall-clock executor (:mod:`repro.serving.executor`); this module is the
+simulator's optimized driver over those primitives. The core's scalar
+reference simulator (:func:`repro.core.policy.simulate_stage_ref`) is
+property-tested bit-identical to every policy here
+(``tests/test_policy_core.py``) and carries the piecewise
+policy-switching path (:func:`switched`).
 """
 
 from __future__ import annotations
 
-import bisect
 import heapq
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.policy import (
+    ReplicaPool as _ReplicaPool,
+    ShedMarginSchedule,
+    edf_select,
+    effective_max_batch as _effective_max_batch,
+    simulate_stage_ref,
+    slo_drop_select,
+)
 
 _FAR_FUTURE = 1e18
 _INF = float("inf")
@@ -107,50 +125,6 @@ _BURST_MAX = 8192
 # overhead cannot amortize against the lean scalar loop on short fills
 # (planner probe traces are ~10k queries; hour-scale traces are >100k)
 _BLOCK_THRESHOLD = 32768
-
-
-def _effective_max_batch(latency_lut: np.ndarray, max_batch: int) -> int:
-    lat_len = int(latency_lut.shape[0])
-    if lat_len < 2:
-        raise ValueError(
-            f"latency LUT must cover at least batch=1 (got {lat_len} entries)")
-    return min(int(max_batch), lat_len - 1)
-
-
-class _ReplicaPool:
-    """Heap of replica free-times plus the (t, +/-1) dynamic scale events."""
-
-    def __init__(self, replicas: int,
-                 events: Optional[Sequence[Tuple[float, int]]]):
-        self.free: List[float] = [0.0] * max(replicas, 0)
-        heapq.heapify(self.free)
-        self.events = list(events or [])
-        self.ev_i = 0
-        self.pending_removals: List[float] = []
-
-    def apply_events(self, now: float) -> None:
-        while self.ev_i < len(self.events) and self.events[self.ev_i][0] <= now:
-            t, delta = self.events[self.ev_i]
-            self.ev_i += 1
-            if delta > 0:
-                for _ in range(delta):
-                    heapq.heappush(self.free, t)
-            else:
-                for _ in range(-delta):
-                    self.pending_removals.append(t)
-
-    def has_future_adds(self) -> bool:
-        return self.ev_i < len(self.events)
-
-    def fast_forward(self) -> None:
-        self.apply_events(self.events[self.ev_i][0])
-
-    def retire_if_pending(self, now: float) -> bool:
-        """True if the just-popped replica is retired by a pending removal."""
-        if self.pending_removals and self.pending_removals[0] <= now:
-            self.pending_removals.pop(0)
-            return True
-        return False
 
 
 def fifo(
@@ -625,15 +599,7 @@ def edf(
             while ai < k and ready_l[ai] <= start:
                 heapq.heappush(pending, (key_l[ai], ai))
                 ai += 1
-            deferred: List[Tuple[float, int]] = []
-            while pending and len(take) < eff_batch:
-                item = heapq.heappop(pending)
-                if ready_l[item[1]] <= start:
-                    take.append(item[1])
-                else:
-                    deferred.append(item)
-            for item in deferred:
-                heapq.heappush(pending, item)
+            take = edf_select(pending, ready_l, start, eff_batch)
             if take:
                 break
             # nothing serviceable at `start`: the replica idles until the
@@ -703,13 +669,10 @@ def slo_drop(
     solo_lat = lut_l[1]
     pool = _ReplicaPool(replicas, replica_events)
     batches: List[int] = []
-    # piecewise-constant shed margin: batch starts are not monotone under
-    # dynamic pools (a replica added at an earlier t can pop below the
-    # previous start), so each batch bisects the event times
-    shed = sorted(shed_events) if shed_events else None
-    if shed is not None:
-        shed_ts = [t for t, _ in shed]
-        shed_ms = [m for _, m in shed]
+    # piecewise-constant shed margin (policy core): batch starts are not
+    # monotone under dynamic pools (a replica added at an earlier t can
+    # pop below the previous start), so each batch bisects the schedule
+    shed = ShedMarginSchedule(shed_events)
 
     ptr = 0
     while ptr < k:
@@ -726,21 +689,12 @@ def slo_drop(
         if pool.retire_if_pending(start):
             continue
         # form the batch in arrival order, shedding hopeless queries
-        floor = start + solo_lat
-        if shed is not None:
-            si = bisect.bisect_right(shed_ts, start)
-            if si:
-                floor += shed_ms[si - 1]
-        take: List[int] = []
-        i = ptr
-        while i < k and ready_l[i] <= start and len(take) < eff_batch:
-            if deadline_l[i] < floor:
-                dropped[i] = True
-                done[i] = np.inf
-            else:
-                take.append(i)
-            i += 1
-        ptr = i
+        floor = start + solo_lat + shed.margin(start)
+        take, shed_idx, ptr = slo_drop_select(
+            ready_l, deadline_l, None, ptr, k, start, floor, eff_batch)
+        for i in shed_idx:
+            dropped[i] = True
+            done[i] = np.inf
         if not take:                 # everything scanned was shed
             heapq.heappush(pool.free, f)
             continue
@@ -780,8 +734,45 @@ def simulate_stage(
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
     shed_events: Optional[Sequence[Tuple[float, float]]] = None,
+    policy_events: Optional[Sequence[Tuple[float, str]]] = None,
 ) -> StageOutcome:
-    """Dispatch to a named policy. `ready` must be sorted ascending."""
+    """Dispatch to a named policy. `ready` must be sorted ascending.
+
+    A non-empty ``policy_events`` (sorted ``(t, policy_name)`` switch
+    points) routes through :func:`switched` instead — the policy-core
+    scalar path that re-evaluates the policy at every batch dispatch.
+    """
+    if policy_events:
+        return switched(ready, latency_lut, max_batch, replicas,
+                        replica_events, timeout_s, deadline, shed_events,
+                        policy, policy_events)
     return get_policy(policy)(ready, latency_lut, max_batch, replicas,
                               replica_events, timeout_s, deadline,
                               shed_events)
+
+
+def switched(
+    ready: np.ndarray,
+    latency_lut: np.ndarray,
+    max_batch: int,
+    replicas: int,
+    replica_events: Optional[Sequence[Tuple[float, int]]] = None,
+    timeout_s: float = 0.0,
+    deadline: Optional[np.ndarray] = None,
+    shed_events: Optional[Sequence[Tuple[float, float]]] = None,
+    policy: str = "fifo",
+    policy_events: Optional[Sequence[Tuple[float, str]]] = None,
+) -> StageOutcome:
+    """Piecewise policy schedule: serve with ``policy`` until the first
+    ``(t, name)`` switch event, re-evaluating the in-force policy at each
+    batch's dispatch instant (see :class:`repro.core.policy
+    .PolicySchedule`). With no switch events this is bit-identical to the
+    dedicated policy (property-tested); the scalar policy-core stepping
+    trades the vectorized FIFO fill for full mid-run reprogrammability —
+    the closed-loop Tuner's schedulable fifo->edf control events
+    (:mod:`repro.sim.control`) land here.
+    """
+    get_policy(policy)            # validate the base name eagerly
+    return simulate_stage_ref(ready, latency_lut, max_batch, replicas,
+                              replica_events, timeout_s, deadline,
+                              shed_events, policy, policy_events)

@@ -1,0 +1,325 @@
+"""Live-executor smoke lane (time-budgeted, tier-1).
+
+Exercises the rebuilt wall-clock :class:`~repro.serving.executor
+.PipelineExecutor` with tiny pure-Python stage functions so the whole
+file stays well under a minute: policy-aware queues shared with the
+simulator's policy core, the full replica lifecycle (activation-delayed
+ups, draining downs), race-free shutdown, timed-out request release, and
+the closed-loop driver (:class:`~repro.serving.loop.LiveControlLoop`)
+running the same controllers as the co-simulation. The heavier
+sim<->real fidelity replay on jitted models lives in
+``benchmarks/bench_live_loop.py`` (nightly lane).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.control import ControlEvent
+from repro.core.pipeline import (
+    PipelineConfig,
+    StageConfig,
+    linear_pipeline,
+)
+from repro.serving.cluster import LiveRunResult
+from repro.serving.executor import PipelineExecutor, _Request
+from repro.serving.loop import LiveControlLoop
+from repro.sim import ControlLoopSession, ScheduleController
+from repro.sim.result import EpochTelemetry
+from repro.workload.generator import gamma_trace
+
+
+def _sleep_fn(per_batch_s, counter=None):
+    def fn(payloads):
+        if counter is not None:
+            counter.append(len(payloads))
+        time.sleep(per_batch_s)
+        return list(payloads)
+    return fn
+
+
+def _linear(n_stages=1, batch=4, replicas=1, policy="fifo"):
+    names = [f"m{i}" for i in range(n_stages)]
+    pipe = linear_pipeline("t", names, {n: ["cpu-1"] for n in names})
+    cfg = PipelineConfig({
+        s: StageConfig("cpu-1", batch, replicas, policy=policy)
+        for s in pipe.stages})
+    return pipe, cfg
+
+
+def _threads_alive(prefix=""):
+    return [t for t in threading.enumerate()
+            if t is not threading.main_thread() and t.is_alive()]
+
+
+# -- lifecycle ---------------------------------------------------------------
+
+
+def test_shutdown_joins_all_workers_no_sentinel_race():
+    """The seed executor's sentinel design could leave workers alive
+    after shutdown (a worker that popped the sentinel mid-batch
+    re-queued it and kept serving). The rebuilt executor has no
+    sentinels: shutdown() must join every worker, even called mid-load,
+    twice."""
+    pipe, cfg = _linear(n_stages=2, replicas=3)
+    before = len(_threads_alive())
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.01),
+                                      "m1": _sleep_fn(0.01)})
+    # inject load and shut down while batches are in flight
+    for i in range(40):
+        ex.inject(_Request(i, ex.now(), i))
+    assert ex.shutdown(join_timeout_s=5.0)
+    assert ex.shutdown(join_timeout_s=1.0)      # idempotent
+    time.sleep(0.05)
+    assert len(_threads_alive()) <= before
+
+
+def test_scale_down_drains_in_service_batch():
+    """Retiring a replica must let its in-service batch complete (no
+    request is ever abandoned) and the thread must exit afterwards."""
+    pipe, cfg = _linear(replicas=2, batch=2)
+    sizes = []
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.15, sizes)})
+    reqs = [_Request(i, ex.now(), i) for i in range(6)]
+    for r in reqs:
+        ex.inject(r)
+    time.sleep(0.05)                  # both workers mid-batch
+    ex.retire_replicas("s0_m0", 1)
+    assert ex.replica_target("s0_m0") == 1
+    for r in reqs:
+        assert r.done.wait(5.0), "request lost during scale-down drain"
+    deadline = time.time() + 2.0
+    while ex.live_worker_count("s0_m0") > 1 and time.time() < deadline:
+        time.sleep(0.02)
+    assert ex.live_worker_count("s0_m0") == 1
+    assert ex.shutdown()
+
+
+def test_scale_up_with_activation_delay():
+    """add_replicas(t_active) workers must not serve before t_active —
+    the runtime analogue of the engine's (t, +1) activation events."""
+    pipe, cfg = _linear(replicas=1, batch=1)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.3)})
+    t_act = ex.now() + 0.35
+    ex.add_replicas("s0_m0", 1, t_active=t_act)
+    reqs = [_Request(i, ex.now(), i) for i in range(3)]
+    for r in reqs:
+        ex.inject(r)
+    for r in reqs:
+        assert r.done.wait(5.0)
+    # the original replica can finish exactly one 300 ms batch before
+    # t_act = 0.35; were the new worker serving from t=0 (no activation
+    # gate), a second completion would land by ~0.3 as well
+    done_before_act = sum(1 for r in reqs if r.t_done < t_act)
+    assert done_before_act <= 1
+    timeline = ex.replica_timeline["s0_m0"]
+    assert timeline[0][1] == 1 and timeline[-1][1] == 2
+    assert timeline[-1][0] == pytest.approx(t_act)
+    assert ex.shutdown()
+
+
+def test_serve_trace_releases_timed_out_requests():
+    """A timed-out serve_trace must report inf AND cancel the backlog so
+    stages stop grinding through work nobody waits for."""
+    pipe, cfg = _linear(replicas=1, batch=1)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.25)})
+    trace = np.linspace(0.0, 0.05, 12)      # ~3 s of service, 0.6 s budget
+    lat = ex.serve_trace(trace, lambda i: i, timeout_s=0.6)
+    assert np.isinf(lat).any()
+    assert np.isfinite(lat).any()
+    # released requests drain from the queue promptly (cancelled at the
+    # next batch formation) instead of being served to completion
+    deadline = time.time() + 2.0
+    while time.time() < deadline:
+        if ex.telemetry_counters()["s0_m0"]["queue_depth"] == 0:
+            break
+        time.sleep(0.05)
+    assert ex.telemetry_counters()["s0_m0"]["queue_depth"] == 0
+    assert ex.shutdown()
+
+
+# -- policy-aware queues live ------------------------------------------------
+
+
+def test_live_slo_drop_sheds_and_reports_inf():
+    pipe, cfg = _linear(replicas=1, batch=4, policy="slo-drop")
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.2)},
+                          solo_latency_s={"s0_m0": 0.2})
+    # one long batch occupies the replica; the backlog behind it has
+    # deadlines too tight to survive the wait and must be shed
+    lat = ex.serve_trace(np.zeros(6), lambda i: i, timeout_s=5.0,
+                         slo_s=0.25)
+    assert np.isinf(lat).sum() >= 1, lat
+    assert np.isfinite(lat).sum() >= 1
+    counters = ex.telemetry_counters()["s0_m0"]
+    assert counters["dropped"] >= 1
+    assert ex.shutdown()
+
+
+def test_live_edf_serves_urgent_first():
+    pipe, cfg = _linear(replicas=1, batch=1, policy="edf")
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.2)})
+    ex.start_run()
+    blocker = _Request(0, ex.now(), 0, deadline=99.0)
+    ex.inject(blocker)                 # occupies the replica
+    time.sleep(0.05)
+    relaxed = _Request(1, ex.now(), 1, deadline=50.0)
+    ex.inject(relaxed)
+    urgent = _Request(2, ex.now(), 2, deadline=1.0)   # arrives later
+    ex.inject(urgent)
+    for r in (blocker, relaxed, urgent):
+        assert r.done.wait(5.0)
+    assert urgent.t_done < relaxed.t_done
+    assert ex.shutdown()
+
+
+def test_live_policy_switch_and_shed_margin_events():
+    pipe, cfg = _linear(replicas=1, batch=2)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.02)})
+    ex.apply_control_event(
+        ControlEvent(0.0, 0.0, "s0_m0", "policy", 0.0, policy="edf"))
+    assert ex._stages["s0_m0"].queue.policy == "edf"
+    ex.apply_control_event(ControlEvent(0.0, 0.0, "s0_m0", "shed", 0.1))
+    assert ex._stages["s0_m0"].queue.shed_margin == pytest.approx(0.1)
+    with pytest.raises(ValueError):
+        ex.apply_control_event(ControlEvent(0.0, 0.0, "nope", "up", 1))
+    with pytest.raises(ValueError):
+        ex.apply_control_event(
+            ControlEvent(0.0, 0.0, "s0_m0", "policy", 0.0))
+    assert ex.shutdown()
+
+
+# -- the live control loop ---------------------------------------------------
+
+
+def test_live_loop_schedule_controller_scales_up_and_down():
+    """The LiveControlLoop lands the same ControlEvents the co-sim loop
+    folds — scale up (activation-delayed) then back down (drained) —
+    and records them in the replica timeline."""
+    pipe, cfg = _linear(replicas=1, batch=4)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.01)})
+    loop = LiveControlLoop(ex, slo=0.5, epoch_s=0.5, service_time_s=0.01,
+                           drain_timeout_s=5.0)
+    stage = "s0_m0"
+    sched = ScheduleController([
+        ControlEvent(1.0, 1.5, stage, "up", 2),
+        ControlEvent(3.0, 3.0, stage, "down", -2),
+    ])
+    trace = gamma_trace(40, 1.0, 4, seed=0)
+    res = loop.run(trace, sched, lambda i: i)
+    assert [e.kind for e in res.events] == ["up", "down"]
+    assert res.replica_schedules[stage] == [(1.5, 2), (3.0, -2)]
+    assert res.replica_timeline[stage] == [(0.0, 1), (1.5, 3), (3.0, 1)]
+    assert res.released == 0
+    assert np.isfinite(res.latency).all()
+    assert res.miss_rate < 0.5
+    # telemetry: epochs partition [0, t_stop]; every injection landing
+    # at/before the last boundary is counted in exactly one window
+    assert len(res.telemetry) == int(trace.max() // 0.5)
+    t_last = res.telemetry[-1].t_end
+    in_epochs = int(np.searchsorted(res.arrival, t_last, side="right"))
+    assert sum(t.ingress for t in res.telemetry) == in_epochs
+    assert all(isinstance(t, EpochTelemetry) for t in res.telemetry)
+    # stage replicas reflect the folded schedule at each boundary
+    by_t = {t.t_end: t.stages[stage].replicas for t in res.telemetry}
+    assert by_t[1.0] == 1 and by_t[2.0] == 3 and by_t[3.5] == 1
+    # cost integrates the same step function as the simulated loops
+    assert res.total_cost() > 0.0
+    assert ex.shutdown()
+
+
+def test_live_loop_closed_loop_tuner_scales_real_threads():
+    """ClosedLoopTuner — unchanged from co-simulation — reacts to a real
+    spike on the real executor."""
+    from repro.core.profiler import ProfileStore, profile_model_measured
+    from repro.core.tuner import ClosedLoopTuner, TunerPlanInfo
+
+    fn = _sleep_fn(0.004)
+    pipe, cfg = _linear(replicas=2, batch=4)
+    store = ProfileStore()
+    store.add(profile_model_measured("m0", lambda b: fn([0] * b),
+                                     batch_sizes=(1, 2, 4), repeats=2))
+    lut1 = store.get("m0").batch_latency("cpu-1", 1)
+    sample = gamma_trace(30, 1.0, 4, seed=0)
+    info = TunerPlanInfo.from_plan(pipe, cfg, store, sample, lut1)
+    ex = PipelineExecutor(pipe, cfg, {"m0": fn},
+                          solo_latency_s={"s0_m0": lut1})
+    loop = LiveControlLoop(ex, slo=0.15, epoch_s=0.5, service_time_s=lut1,
+                           drain_timeout_s=5.0)
+    trace = np.concatenate([sample, 4.0 + gamma_trace(250, 0.5, 2, seed=1)])
+    tuner = ClosedLoopTuner(info, activation_delay_s=0.5)
+    res = loop.run(trace, tuner, lambda i: i)
+    ups = [e for e in res.events if e.kind == "up"]
+    assert ups, "closed-loop tuner never scaled the real executor"
+    assert res.replica_timeline["s0_m0"][-1][1] > 2
+    assert np.isfinite(res.latency).mean() > 0.9
+    assert ex.shutdown()
+
+
+def test_executor_reuse_after_timed_out_run():
+    """Request ids restart at 0 every run: a second run on the same
+    executor must not collide with run 1's released backlog (routing is
+    keyed on request identity, and start_run purges stale queues)."""
+    pipe, cfg = _linear(replicas=1, batch=1)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.2)})
+    # run 1: a backlog the 0.3 s budget cannot clear — released
+    lat1 = ex.serve_trace(np.zeros(8), lambda i: i, timeout_s=0.3)
+    assert np.isinf(lat1).any()
+    # run 2 reuses rids 0..: every request must route and finish
+    lat2 = ex.serve_trace(np.linspace(0, 0.2, 4), lambda i: i,
+                          timeout_s=10.0)
+    assert np.isfinite(lat2).all(), lat2
+    assert (lat2 > 0).all()          # actually served, not short-circuited
+    assert ex.shutdown()
+
+
+def test_live_loop_t_end_interrupts_idle_injector():
+    """A t_end before a far-future arrival must end the run promptly —
+    the injector's gap sleep is interruptible and the pending arrival is
+    not injected after the cut."""
+    pipe, cfg = _linear(replicas=1, batch=2)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.005)})
+    loop = LiveControlLoop(ex, slo=0.5, epoch_s=0.5, drain_timeout_s=2.0)
+    trace = np.array([0.1, 0.2, 30.0])
+    t0 = time.time()
+    res = loop.run(trace, ScheduleController([]), lambda i: i, t_end=1.5)
+    assert time.time() - t0 < 10.0
+    assert res.latency.size == 2      # the t=30 arrival never injected
+    assert np.isfinite(res.latency).all()
+    assert ex.shutdown()
+
+
+def test_live_loop_rejects_unsorted_trace():
+    pipe, cfg = _linear()
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.001)})
+    loop = LiveControlLoop(ex, slo=0.5)
+    with pytest.raises(ValueError):
+        loop.run(np.array([1.0, 0.5]), ScheduleController([]), lambda i: i)
+    assert ex.shutdown()
+
+
+# -- cost-timeline degeneracy guards ----------------------------------------
+
+
+def test_live_run_result_empty_cost_timeline_guard():
+    from repro.sim.result import SimResult
+    sim = SimResult(np.zeros(0), np.zeros(0), {})
+    run = LiveRunResult(sim, 0.1, np.zeros(0), np.zeros(0), {})
+    assert run.total_cost() == 0.0
+    assert run.mean_cost_per_hr() == 0.0
+    # non-empty arrivals with an empty timeline must not index [-1]
+    sim2 = SimResult(np.array([1.0, 2.0]), np.array([0.1, 0.1]), {})
+    run2 = LiveRunResult(sim2, 0.1, np.zeros(0), np.zeros(0), {})
+    assert run2.total_cost() == 0.0
+
+
+def test_closed_loop_result_empty_cost_timeline_guard():
+    from repro.sim.control import ClosedLoopResult
+    from repro.sim.result import SimResult
+    sim = SimResult(np.zeros(0), np.zeros(0), {})
+    res = ClosedLoopResult(sim, 0.1, [], [], {}, {}, np.zeros(0),
+                           np.zeros(0), {})
+    assert res.total_cost() == 0.0
+    assert res.mean_cost_per_hr() == 0.0

@@ -1,0 +1,470 @@
+"""Policy-core extraction property suite.
+
+Three layers of bit-identity guard the refactor that moved the
+batch-formation semantics into :mod:`repro.core.policy`:
+
+1. **pre-refactor references** — frozen verbatim copies of the original
+   ``repro.sim.queueing`` ``edf`` / ``slo_drop`` scalar loops (the two
+   policies whose formation loops now delegate to the core primitives)
+   are compared against the refactored policies on random traces — all
+   policies, scalar and classed (per-query) deadlines, dynamic replica
+   schedules, shed-margin schedules;
+2. **reference simulator** — the core's scalar
+   :func:`~repro.core.policy.simulate_stage_ref` (the live executor's
+   semantics and the policy-switching path) is bit-identical to every
+   dedicated policy, including the blocked vectorized FIFO kernel;
+3. **engine threading** — per-stage ``policy_schedules`` route through
+   the switched path: a constant schedule equals the dedicated policy
+   end-to-end, a mid-run fifo->edf switch is causal (pre-switch batches
+   unchanged) and actually changes the discipline, and the control loop
+   folds ``kind="policy"`` events into runs.
+"""
+
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, StageConfig, linear_pipeline
+from repro.core.policy import (
+    LiveQueue,
+    PolicySchedule,
+    ReplicaPool,
+    ShedMarginSchedule,
+    simulate_stage_ref,
+)
+from repro.core.profiler import ModelSpec, ProfileStore, profile_model_analytic
+from repro.sim import ControlEvent, ControlLoopSession, ScheduleController
+from repro.sim.queueing import QUEUE_POLICIES, edf, fifo, simulate_stage, slo_drop, switched
+from repro.workload.generator import gamma_trace
+
+_FAR_FUTURE = 1e18
+
+
+# -- frozen PRE-REFACTOR references (verbatim seed copies) ------------------
+
+
+def _edf_pre_refactor(ready, latency_lut, max_batch, replicas,
+                      replica_events=None, timeout_s=0.0, deadline=None,
+                      shed_events=None):
+    k = ready.shape[0]
+    done = np.full(k, _FAR_FUTURE, dtype=np.float64)
+    dropped = np.zeros(k, dtype=bool)
+    if k == 0:
+        return done, np.zeros(0, dtype=np.int64), dropped
+    eff_batch = min(int(max_batch), latency_lut.shape[0] - 1)
+    pool = ReplicaPool(replicas, replica_events)
+    batches = []
+    ready_l = ready.tolist()
+    lut_l = latency_lut.tolist()
+    key_l = deadline.tolist() if deadline is not None else ready_l
+
+    pending = []
+    ai = 0
+    served = 0
+    while served < k:
+        if not pool.free:
+            if pool.has_future_adds():
+                pool.fast_forward()
+                continue
+            break
+        f = heapq.heappop(pool.free)
+        start = f
+        take = []
+        retired = False
+        while True:
+            if pool.events:
+                pool.apply_events(start)
+                if pool.retire_if_pending(start):
+                    retired = True
+                    break
+            while ai < k and ready_l[ai] <= start:
+                heapq.heappush(pending, (key_l[ai], ai))
+                ai += 1
+            deferred = []
+            while pending and len(take) < eff_batch:
+                item = heapq.heappop(pending)
+                if ready_l[item[1]] <= start:
+                    take.append(item[1])
+                else:
+                    deferred.append(item)
+            for item in deferred:
+                heapq.heappush(pending, item)
+            if take:
+                break
+            t_next = min((ready_l[i] for _, i in pending), default=np.inf)
+            if ai < k and ready_l[ai] < t_next:
+                t_next = ready_l[ai]
+            start = t_next
+        if retired:
+            continue
+        b = len(take)
+        end = start + lut_l[b]
+        for i in take:
+            done[i] = end
+        batches.append(b)
+        served += b
+        heapq.heappush(pool.free, end)
+    return done, np.asarray(batches, dtype=np.int64), dropped
+
+
+def _slo_drop_pre_refactor(ready, latency_lut, max_batch, replicas,
+                           replica_events=None, timeout_s=0.0, deadline=None,
+                           shed_events=None):
+    import bisect
+    if deadline is None:
+        return fifo(ready, latency_lut, max_batch, replicas,
+                    replica_events, timeout_s=0.0)
+    k = ready.shape[0]
+    done = np.empty(k, dtype=np.float64)
+    dropped = np.zeros(k, dtype=bool)
+    if k == 0:
+        return done, np.zeros(0, dtype=np.int64), dropped
+    eff_batch = min(int(max_batch), latency_lut.shape[0] - 1)
+    ready_l = ready.tolist()
+    deadline_l = deadline.tolist()
+    lut_l = latency_lut.tolist()
+    solo_lat = lut_l[1]
+    pool = ReplicaPool(replicas, replica_events)
+    batches = []
+    shed = sorted(shed_events) if shed_events else None
+    if shed is not None:
+        shed_ts = [t for t, _ in shed]
+        shed_ms = [m for _, m in shed]
+
+    ptr = 0
+    while ptr < k:
+        if not pool.free:
+            if pool.has_future_adds():
+                pool.fast_forward()
+                continue
+            done[ptr:] = _FAR_FUTURE
+            break
+        f = heapq.heappop(pool.free)
+        r0 = ready_l[ptr]
+        start = r0 if r0 > f else f
+        pool.apply_events(start)
+        if pool.retire_if_pending(start):
+            continue
+        floor = start + solo_lat
+        if shed is not None:
+            si = bisect.bisect_right(shed_ts, start)
+            if si:
+                floor += shed_ms[si - 1]
+        take = []
+        i = ptr
+        while i < k and ready_l[i] <= start and len(take) < eff_batch:
+            if deadline_l[i] < floor:
+                dropped[i] = True
+                done[i] = np.inf
+            else:
+                take.append(i)
+            i += 1
+        ptr = i
+        if not take:
+            heapq.heappush(pool.free, f)
+            continue
+        b = len(take)
+        end = start + lut_l[b]
+        done[take] = end
+        batches.append(b)
+        heapq.heappush(pool.free, end)
+    return done, np.asarray(batches, dtype=np.int64), dropped
+
+
+# -- random stage-case generator --------------------------------------------
+
+
+def _random_case(rng, n_max=400):
+    n = int(rng.integers(1, n_max))
+    ready = np.sort(rng.uniform(0, 30, n))
+    if rng.random() < 0.3:              # tie runs exercise run-length paths
+        ready = np.round(ready, 1)
+        ready.sort()
+    max_batch = int(rng.integers(1, 9))
+    lut = np.concatenate([[0.0], np.sort(rng.uniform(0.01, 0.3, 8))])
+    replicas = int(rng.integers(0, 4))
+    events = None
+    if rng.random() < 0.5:
+        events = sorted(
+            (float(rng.uniform(0, 30)), int(rng.choice([-1, 1, 2])))
+            for _ in range(int(rng.integers(1, 5))))
+        if replicas == 0:
+            events = [(0.0, 1)] + events
+    if rng.random() < 0.5:              # classed (per-query) deadlines
+        slo = rng.choice([0.1, 0.4, 1.5], size=n)
+        deadline = ready + slo
+    elif rng.random() < 0.7:            # scalar SLO
+        deadline = ready + float(rng.uniform(0.05, 1.0))
+    else:
+        deadline = None
+    shed = None
+    if rng.random() < 0.4:
+        shed = sorted(
+            (float(rng.uniform(0, 30)),
+             float(rng.choice([-np.inf, 0.0, 0.05, 0.2])))
+            for _ in range(2))
+    timeout = float(rng.choice([0.0, 0.0, 0.05]))
+    return ready, lut, max_batch, replicas, events, timeout, deadline, shed
+
+
+def _assert_same(a, b, ctx):
+    for x, y, name in zip(a, b, ("done", "batches", "dropped")):
+        assert np.array_equal(x, y), (ctx, name, x[:8], y[:8])
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_refactored_policies_match_pre_refactor_references(seed):
+    """The extracted-core policies are bit-identical to frozen verbatim
+    copies of the pre-refactor loops (scalar AND classed deadlines,
+    dynamic pools, shed schedules)."""
+    rng = np.random.default_rng(1000 + seed)
+    for trial in range(40):
+        case = _random_case(rng)
+        _assert_same(edf(*case), _edf_pre_refactor(*case),
+                     ("edf", seed, trial))
+        _assert_same(slo_drop(*case), _slo_drop_pre_refactor(*case),
+                     ("slo-drop", seed, trial))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_reference_simulator_bit_identical_to_dedicated_policies(seed):
+    """simulate_stage_ref == fifo/edf/slo-drop on random traces."""
+    rng = np.random.default_rng(2000 + seed)
+    for trial in range(40):
+        case = _random_case(rng)
+        for name, fn in (("fifo", fifo), ("edf", edf),
+                         ("slo-drop", slo_drop)):
+            _assert_same(
+                fn(*case),
+                simulate_stage_ref(*case, policy=name),
+                (name, seed, trial))
+
+
+def test_reference_simulator_matches_blocked_fifo_kernel():
+    """Long steady trace: the vectorized blocked fill and the scalar
+    policy-core stepping agree bit-for-bit."""
+    rng = np.random.default_rng(7)
+    ready = np.sort(rng.uniform(0, 120, 60_000))
+    lut = np.concatenate([[0.0], np.sort(rng.uniform(0.001, 0.01, 16))])
+    _assert_same(fifo(ready, lut, 16, 3),
+                 simulate_stage_ref(ready, lut, 16, 3, policy="fifo"),
+                 ("fifo-block",))
+
+
+def test_switched_constant_schedule_equals_dedicated():
+    """A policy schedule that never switches (or 'switches' to the same
+    policy) is the dedicated policy, bit-for-bit."""
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        case = _random_case(rng)
+        for name in QUEUE_POLICIES:
+            base = QUEUE_POLICIES[name](*case)
+            _assert_same(base, switched(*case, policy=name),
+                         (name, "no-events"))
+            _assert_same(
+                base,
+                switched(*case, policy=name, policy_events=[(5.0, name)]),
+                (name, "self-switch"))
+
+
+def test_switch_is_causal_and_changes_discipline():
+    """fifo->edf at t: batches dispatched before t match the pure-fifo
+    run; after t an urgent late query overtakes the backlog."""
+    # 1 replica, 3 s batch-1 service: a backlog builds behind the burst
+    # at t=5; the urgent straggler arrives last with the tightest
+    # deadline
+    ready = np.array([0.0, 5.0, 5.0, 5.1])
+    deadline = np.array([50., 50., 50., 5.3])
+    lut = np.array([0.0, 3.0])
+    t_switch = 4.0
+    d_fifo, _, _ = fifo(ready, lut, 1, 1)
+    d_sw, _, _ = simulate_stage_ref(
+        ready, lut, 1, 1, deadline=deadline,
+        policy="fifo", policy_events=[(t_switch, "edf")])
+    # pre-switch batches identical (causality)
+    pre = [i for i in range(len(ready)) if d_fifo[i] <= t_switch]
+    assert pre and all(d_sw[i] == d_fifo[i] for i in pre)
+    # post-switch: the urgent query overtakes the older backlog
+    assert d_sw[3] < d_sw[2]
+    # pure fifo serves it last
+    assert d_fifo[3] == d_fifo.max()
+
+
+def test_shed_margin_schedule_matches_inline_bisect():
+    import bisect
+    rng = np.random.default_rng(3)
+    events = sorted((float(rng.uniform(0, 10)), float(rng.uniform(-1, 1)))
+                    for _ in range(6))
+    sched = ShedMarginSchedule(events)
+    ts = [t for t, _ in events]
+    ms = [m for _, m in events]
+    for t in np.concatenate([rng.uniform(-1, 12, 200), np.asarray(ts)]):
+        si = bisect.bisect_right(ts, t)
+        expect = ms[si - 1] if si else 0.0
+        assert sched.margin(float(t)) == expect
+    assert ShedMarginSchedule(None).margin(3.0) == 0.0
+    assert not ShedMarginSchedule([])
+
+
+def test_policy_schedule_lookup_and_validation():
+    ps = PolicySchedule("fifo", [(2.0, "edf"), (5.0, "slo-drop")])
+    assert ps.policy_at(0.0) == "fifo"
+    assert ps.policy_at(2.0) == "edf"
+    assert ps.policy_at(4.999) == "edf"
+    assert ps.policy_at(5.0) == "slo-drop"
+    assert PolicySchedule("edf").constant()
+    with pytest.raises(ValueError):
+        PolicySchedule("nope")
+    with pytest.raises(ValueError):
+        PolicySchedule("fifo", [(1.0, "bogus")])
+
+
+# -- engine threading --------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mini():
+    store = ProfileStore()
+    store.add(profile_model_analytic(ModelSpec("m0", 2e9, 1e6, 1e6)))
+    store.add(profile_model_analytic(ModelSpec("m1", 2.3e10, 1.2e8, 5e7)))
+    pipe = linear_pipeline("mini", ["m0", "m1"])
+    return pipe, store
+
+
+def _cfg(pipe, policy="fifo"):
+    return PipelineConfig({
+        s: StageConfig("tpu-v5e-1", 8, 2, policy=policy)
+        for s in pipe.stages})
+
+
+def test_engine_policy_schedule_from_t0_equals_config_policy(mini):
+    from repro.sim import SimEngine
+    pipe, store = mini
+    arr = gamma_trace(400, 2.0, 20, seed=5)
+    eng = SimEngine(pipe, store)
+    stage = pipe.toposort()[1]
+    res_sched = eng.simulate(_cfg(pipe), arr, slo_s=0.2,
+                             policy_schedules={stage: [(0.0, "edf")]})
+    cfg_edf = _cfg(pipe)
+    cfg_edf[stage].policy = "edf"
+    res_cfg = eng.simulate(cfg_edf, arr, slo_s=0.2)
+    # an arrival at exactly t=0 would dispatch at start=0.0 where the
+    # schedule boundary is inclusive, so the two runs agree exactly
+    assert np.array_equal(res_sched.latency, res_cfg.latency)
+
+
+def test_engine_policy_schedule_cache_keys_distinct(mini):
+    pipe, store = mini
+    from repro.sim import SimEngine
+    arr = gamma_trace(300, 2.0, 10, seed=6)
+    eng = SimEngine(pipe, store)
+    sess = eng.session(arr, slo_s=0.2)
+    stage = pipe.toposort()[0]
+    base = sess.simulate(_cfg(pipe))
+    switched_res = sess.simulate(
+        _cfg(pipe), policy_schedules={stage: [(3.0, "edf")]})
+    again = sess.simulate(_cfg(pipe))
+    assert np.array_equal(base.latency, again.latency)
+    assert sess.stats["stage_hits"] >= 2      # replay, not recompute
+    # distinct schedules must not collide in the cone cache
+    k1 = sess.config_key(_cfg(pipe))
+    k2 = sess.config_key(_cfg(pipe),
+                         policy_schedules={stage: [(3.0, "edf")]})
+    assert k1 != k2
+    del switched_res
+
+
+def test_control_loop_policy_event_lands_and_records(mini):
+    pipe, store = mini
+    cfg = _cfg(pipe)
+    arr = gamma_trace(500, 3.0, 20, seed=8)
+    stage = pipe.toposort()[1]
+    ev = ControlEvent(6.0, 6.0, stage, "policy", 0.0, policy="edf")
+    sess = ControlLoopSession(pipe, store, cfg, 0.15)
+    res = sess.run(arr, ScheduleController([ev]))
+    assert res.policy_schedules == {stage: [(6.0, "edf")]}
+    assert [e.kind for e in res.events] == ["policy"]
+    # final sim replays under the folded schedule
+    direct = ControlLoopSession(pipe, store, cfg, 0.15).engine.simulate(
+        cfg, arr, slo_s=0.15, policy_schedules={stage: [(6.0, "edf")]})
+    assert np.array_equal(res.sim.latency, direct.latency)
+
+
+def test_control_loop_rejects_nameless_policy_event(mini):
+    pipe, store = mini
+    cfg = _cfg(pipe)
+    arr = gamma_trace(100, 1.0, 3, seed=9)
+    stage = pipe.toposort()[0]
+    ev = ControlEvent(1.0, 1.0, stage, "policy", 0.0)
+    with pytest.raises(ValueError, match="policy"):
+        ControlLoopSession(pipe, store, cfg, 0.15).run(
+            arr, ScheduleController([ev]))
+
+
+# -- LiveQueue (the executor's queue) ---------------------------------------
+
+
+def test_live_queue_fifo_and_ready_gating():
+    q = LiveQueue("fifo")
+    q.push("a", ready=0.0)
+    q.push("b", ready=0.1)
+    q.push("c", ready=5.0)            # not ready yet
+    batch, shed = q.form_batch(1.0, max_batch=8)
+    assert batch == ["a", "b"] and shed == []
+    assert len(q) == 1
+    assert q.next_ready_after(1.0) == 5.0
+    batch, _ = q.form_batch(5.0, max_batch=8)
+    assert batch == ["c"] and len(q) == 0
+    assert q.next_ready_after(6.0) is None
+
+
+def test_live_queue_edf_orders_by_deadline():
+    q = LiveQueue("edf")
+    q.push("late", ready=0.0, deadline=9.0)
+    q.push("urgent", ready=0.2, deadline=1.0)
+    q.push("mid", ready=0.1, deadline=5.0)
+    batch, _ = q.form_batch(1.0, max_batch=2)
+    assert batch == ["urgent", "mid"]
+    batch, _ = q.form_batch(1.0, max_batch=2)
+    assert batch == ["late"]
+
+
+def test_live_queue_slo_drop_sheds_hopeless():
+    q = LiveQueue("slo-drop")
+    q.push("dead", ready=0.0, deadline=1.0)
+    q.push("alive", ready=0.0, deadline=10.0)
+    batch, shed = q.form_batch(2.0, max_batch=8, solo_latency_s=0.5)
+    assert batch == ["alive"] and shed == ["dead"]
+    # margin raises the floor
+    q.push("tight", ready=2.0, deadline=3.0)
+    q.shed_margin = 2.0
+    batch, shed = q.form_batch(2.5, max_batch=8, solo_latency_s=0.1)
+    assert shed == ["tight"] and batch == []
+
+
+def test_live_queue_bookkeeping_stays_bounded():
+    """Leak regression: a long-running fifo queue must not accumulate
+    tombstones — consumed entries leave the item table immediately and
+    both internal heaps are pruned, including the deadline heap a
+    fifo-only queue never selects from."""
+    q = LiveQueue("fifo")
+    for i in range(5000):
+        q.push(i, ready=float(i), deadline=float(i) + 1.0)
+        if i % 7 == 3:
+            q.form_batch(float(i), max_batch=8)
+    q.form_batch(1e9, max_batch=10**9)
+    assert len(q) == 0
+    assert len(q._items) == 0 and len(q._ready) == 0
+    assert len(q._arr) == 0 and len(q._edf) == 0
+
+
+def test_live_queue_policy_switch_midstream():
+    q = LiveQueue("fifo")
+    q.push("old", ready=0.0, deadline=50.0)
+    q.push("urgent", ready=0.5, deadline=1.0)
+    q.set_policy("edf")
+    batch, _ = q.form_batch(1.0, max_batch=1)
+    assert batch == ["urgent"]
+    with pytest.raises(ValueError):
+        q.set_policy("wat")
