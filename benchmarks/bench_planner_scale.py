@@ -16,6 +16,24 @@ the vectorized-fill / batched-scoring / beam-search stack:
   across >= 3 pipelines x >= 2 SLOs. The beam must never cost more than
   greedy (acceptance bar), and any strict win is the §7.2 local-optimum
   escape paid for by the cheap batched probes.
+
+Invoked with ``--backend jax`` (the nightly device lane), the module
+instead benchmarks the accelerator-resident planner sweep
+(:mod:`repro.sim.jax_backend`) and writes ``BENCH_device_planner.json``:
+
+* **device_grid** — ``TraceSession.percentile_many`` over a >= 1000
+  candidate (hw, batch, replica, timeout) grid on an hour-long bursty
+  trace: segmented vmapped ``lax.scan`` fills vs the per-candidate
+  numpy loop, outputs asserted bit-identical while timing (acceptance
+  bar: >= 5x).
+* **plan_identity** — Planner and BeamPlanner decisions on every motif
+  in ``repro.configs.pipelines``, both backends: identical configs at
+  identical cost.
+* **single_fill_crossover** — numpy vs forced-jax wall clock for ONE
+  fill at increasing trace lengths. On CPU hosts numpy wins at every
+  size (the scan pays dispatch + transfer per call), which is why
+  ``_JAX_FILL_THRESHOLD`` defaults to "off" and the device backend earns
+  its keep on grid *width*, not single-fill depth.
 """
 
 from __future__ import annotations
@@ -216,7 +234,153 @@ def _bench_beam_vs_greedy() -> dict:
     return out
 
 
-def run() -> dict:
+def _bench_device_grid() -> dict:
+    """>= 1000-candidate sink-stage sweep on an hour trace, jax vs numpy.
+
+    The grid is planner-shaped: replica counts bracket the feasibility
+    boundary per (hw, batch) point — where the downgrade search probes —
+    and the batch-formation timeout is swept alongside. Bursty
+    near-critical fills are the regime where the numpy kernel's blocked
+    fast paths degenerate to short scalar bursts while the device scan's
+    per-step cost stays load-invariant.
+    """
+    bound = get_motif("image-processing")
+    pipe, store = bound.pipeline, bound.profiles
+    arr = gamma_trace(30.0, 4.0, 3600.0, seed=11)     # bursty, ~108k q/hr
+    stage = pipe.toposort()[-1]
+    base = PipelineConfig({
+        s: StageConfig(pipe.stages[s].hardware_options[0], 4, 4)
+        for s in pipe.stages
+    })
+    grid = []
+    for hw in ("tpu-v5e-16", "tpu-v5e-8", "tpu-v5e-4"):
+        for batch in (1, 2, 4, 8, 16):
+            for replicas in range(1, 17):
+                for tmo in (0.0, 0.005, 0.01, 0.025, 0.05):
+                    cand = base.copy()
+                    cand.stage_configs[stage] = StageConfig(
+                        hw, batch, replicas, timeout_s=tmo)
+                    grid.append(cand)
+    engine = SimEngine(pipe, store)
+
+    t0 = time.perf_counter()
+    host = engine.session(arr).percentile_many(grid, 99.0)
+    t_np = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    dev = engine.session(arr, backend="jax").percentile_many(grid, 99.0)
+    t_jax_cold = time.perf_counter() - t0             # includes jit compile
+    t0 = time.perf_counter()
+    dev2 = engine.session(arr, backend="jax").percentile_many(grid, 99.0)
+    t_jax_warm = time.perf_counter() - t0
+
+    identical = host == dev and host == dev2
+    out = {
+        "pipeline": "image-processing",
+        "stage": stage,
+        "candidates": len(grid),
+        "queries": int(arr.size),
+        "numpy_s": t_np,
+        "jax_cold_s": t_jax_cold,
+        "jax_warm_s": t_jax_warm,
+        "speedup_cold": t_np / t_jax_cold,
+        "speedup_warm": t_np / t_jax_warm,
+        "bit_identical": bool(identical),
+    }
+    print(table(
+        [[len(grid), arr.size, f"{t_np:.1f}s", f"{t_jax_cold:.1f}s",
+          f"{t_jax_warm:.1f}s", f"{t_np/t_jax_warm:.1f}x", identical]],
+        ["cands", "queries", "numpy", "jax cold", "jax warm",
+         "speedup", "identical"]))
+    assert identical, "device grid diverged from the numpy reference"
+    return out
+
+
+def _bench_plan_identity() -> dict:
+    """Same plan, same cost, on every motif, both planners, both backends."""
+    from repro.configs.pipelines import MOTIFS
+    sample = gamma_trace(200.0, 4.0, 60.0, seed=10)
+    out, rows = {}, []
+    for motif in MOTIFS:
+        bound = get_motif(motif)
+        pipe, store = bound.pipeline, bound.profiles
+        slo = 0.25 if motif != "video-monitoring" else 0.3
+        for label, mk in (
+            ("greedy", lambda be: Planner(pipe, store, backend=be)),
+            ("beam", lambda be: BeamPlanner(pipe, store, beam_width=4,
+                                            backend=be)),
+        ):
+            res = {}
+            for be in ("numpy", "jax"):
+                t0 = time.perf_counter()
+                res[be] = (mk(be).plan(sample, slo), time.perf_counter() - t0)
+            a, b = res["numpy"][0], res["jax"][0]
+            same = (a.feasible == b.feasible and (
+                not a.feasible
+                or (a.config.cache_key() == b.config.cache_key()
+                    and a.cost_per_hr == b.cost_per_hr)))
+            out[f"{motif}|{label}"] = {
+                "slo": slo,
+                "identical": bool(same),
+                "cost_per_hr": a.cost_per_hr,
+                "numpy_plan_s": res["numpy"][1],
+                "jax_plan_s": res["jax"][1],
+            }
+            rows.append([motif, label, same, f"${a.cost_per_hr:.2f}",
+                         f"{res['numpy'][1]:.2f}s", f"{res['jax'][1]:.2f}s"])
+    print(table(rows, ["pipeline", "planner", "identical", "cost",
+                       "numpy t", "jax t"]))
+    out["all_identical"] = all(
+        v["identical"] for v in out.values() if isinstance(v, dict))
+    assert out["all_identical"], "plan decisions diverged across backends"
+    return out
+
+
+def _bench_fill_crossover() -> dict:
+    """Single-fill numpy vs forced-jax: records the auto-selection default."""
+    from repro.sim import jax_backend
+    lut = np.array([0.0] + [0.004 + 0.0005 * b for b in range(1, 9)])
+    rng = np.random.default_rng(13)
+    out, rows = {}, []
+    crossover = None
+    for k in (4096, 32768, 262144):
+        ready = np.cumsum(rng.exponential(1 / 140.0, k))
+        t_np = t_jx = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            simulate_stage("fifo", ready, lut, 8, 4)
+            t_np = min(t_np, time.perf_counter() - t0)
+        old = jax_backend._JAX_FILL_THRESHOLD
+        jax_backend._JAX_FILL_THRESHOLD = 0
+        try:
+            simulate_stage("fifo", ready, lut, 8, 4, backend="jax")  # compile
+            for _ in range(3):
+                t0 = time.perf_counter()
+                simulate_stage("fifo", ready, lut, 8, 4, backend="jax")
+                t_jx = min(t_jx, time.perf_counter() - t0)
+        finally:
+            jax_backend._JAX_FILL_THRESHOLD = old
+        if crossover is None and t_jx < t_np:
+            crossover = k
+        out[str(k)] = {"numpy_s": t_np, "jax_s": t_jx,
+                       "jax_over_numpy": t_jx / t_np}
+        rows.append([k, f"{t_np*1e3:.2f}ms", f"{t_jx*1e3:.2f}ms",
+                     f"{t_jx/t_np:.1f}x"])
+    print(table(rows, ["queries", "numpy", "jax (warm)", "jax/numpy"]))
+    out["crossover_queries"] = crossover          # None => numpy always wins
+    out["threshold_default_off"] = crossover is None
+    return out
+
+
+def run(backend: str = "numpy") -> dict:
+    if backend == "jax":
+        payload = {
+            "device_grid": _bench_device_grid(),
+            "plan_identity": _bench_plan_identity(),
+            "single_fill_crossover": _bench_fill_crossover(),
+        }
+        save("BENCH_device_planner", payload)
+        return payload
     payload = {
         "fill_kernel": _bench_fill_kernel(),
         "simulate_many": _bench_simulate_many(),
@@ -224,3 +388,11 @@ def run() -> dict:
     }
     save("BENCH_planner_scale", payload)
     return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy")
+    run(backend=ap.parse_args().backend)

@@ -72,11 +72,17 @@ class Estimator:
     def session(self, arrivals: np.ndarray,
                 slo_s: Optional[Union[float, np.ndarray]] = None,
                 class_ids: Optional[np.ndarray] = None,
-                class_names: Optional[Sequence[str]] = None) -> TraceSession:
-        """Bind to one trace for incremental re-simulation across configs."""
+                class_names: Optional[Sequence[str]] = None,
+                backend: str = "numpy") -> TraceSession:
+        """Bind to one trace for incremental re-simulation across configs.
+
+        ``backend="jax"`` routes eligible candidate grids through the
+        device kernels (:mod:`repro.sim.jax_backend`); bit-identical to
+        the default numpy path."""
         return self.engine.session(arrivals, slo_s=slo_s,
                                    class_ids=class_ids,
-                                   class_names=class_names)
+                                   class_names=class_names,
+                                   backend=backend)
 
     def simulate(
         self,

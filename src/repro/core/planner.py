@@ -111,7 +111,8 @@ class PlannerResult:
 class Planner:
     def __init__(self, pipeline: Pipeline, profiles: ProfileStore,
                  estimator: Optional[Estimator] = None,
-                 percentile: float = 99.0, policy: str = "fifo"):
+                 percentile: float = 99.0, policy: str = "fifo",
+                 backend: str = "numpy"):
         self.pipeline = pipeline
         self.profiles = profiles
         self.estimator = estimator or Estimator(pipeline, profiles)
@@ -120,6 +121,11 @@ class Planner:
         # "edf" lets a multi-class plan serve tight-deadline traffic from
         # fewer replicas (deadline scheduling instead of overprovisioning)
         self.policy = policy
+        # simulation backend for the session's candidate scoring:
+        # "jax" routes the downgrade/beam probe grids through the
+        # vmapped device kernel (repro.sim.jax_backend) — same plan
+        # decisions, bit-identical feasibility values
+        self.backend = backend
         self._session = None
         self._session_token = None
         # scale factors are a pure function of the (immutable) pipeline:
@@ -145,13 +151,16 @@ class Planner:
         """One incremental session per plan() call: all candidate
         evaluations share the per-stage memoization."""
         if hasattr(self.estimator, "session"):
+            # pass the backend only when non-default: other session()
+            # implementers (adapters, test doubles) need not know the kwarg
+            kw = {} if self.backend == "numpy" else {"backend": self.backend}
             if self._classed is not None:
                 t = self._classed
                 self._session = self.estimator.session(
                     arrivals, slo_s=t.slo_per_query,
-                    class_ids=t.class_ids, class_names=t.class_names)
+                    class_ids=t.class_ids, class_names=t.class_names, **kw)
             else:
-                self._session = self.estimator.session(arrivals)
+                self._session = self.estimator.session(arrivals, **kw)
         else:  # estimator-like object without an engine (golden oracle)
             if self._classed is not None:
                 raise ValueError(
@@ -262,20 +271,14 @@ class Planner:
         new[stage].replicas -= 1
         return new
 
-    def _action_downgrade_hw(self, config: PipelineConfig, stage: str,
-                             arrivals: np.ndarray, slo: float
-                             ) -> Optional[PipelineConfig]:
-        """Localized re-init + cost minimization on cheaper hardware (§4.3).
-
-        The whole (hw, batch) probe grid is scored through the session's
-        ``percentile_many`` surface: one call decides every grid point's
-        feasibility at its cost cap, then the surviving probes
-        binary-search their minimal replica counts in lockstep — one
-        scoring call per halving round. Each probe still simulates once
-        on a miss; the win is that the whole grid shares the session's
-        stage-entry, assembly-prefix, and percentile caches. Selection
-        order and predicate values match the sequential formulation
-        exactly (same returned candidate)."""
+    def _downgrade_grid(self, config: PipelineConfig, stage: str,
+                        arrivals: np.ndarray, slo: float):
+        """One (config, stage) downgrade job: the statically-prefiltered
+        (hw, batch, k0, k_cap) probe grid plus its candidate constructor,
+        or None when no cheaper option survives the prefilters (cost cap
+        + bare service time + required throughput). Split from the
+        search so :class:`BeamPlanner` can concatenate every frontier
+        member's grids into ONE lockstep search per round."""
         cfg = config[stage]
         options = [h for h in cheaper_hardware(cfg.hardware)
                    if h in self._stage_hw_options(stage)]
@@ -285,7 +288,6 @@ class Planner:
         scale = self._scale_factors()[stage]
         duration = float(arrivals.max() - arrivals.min()) if arrivals.size > 1 else 1.0
         lam_m = arrivals.size * scale / max(duration, 1e-9)
-        current_cost = config.cost_per_hr()
         old_stage_cost = get_hardware(cfg.hardware).cost_per_hr * cfg.replicas
 
         def with_k(hw: str, batch: int, k: int) -> PipelineConfig:
@@ -294,8 +296,6 @@ class Planner:
                 cfg, hardware=hw, batch_size=batch, replicas=k)
             return cand
 
-        # the probe grid, after the static prefilters (cost cap + bare
-        # service time + required throughput), in scan order
         grid: List[Tuple[str, int, int, int]] = []   # (hw, batch, k0, k_cap)
         for hw in options:
             hw_cost = get_hardware(hw).cost_per_hr
@@ -314,38 +314,67 @@ class Planner:
                 grid.append((hw, batch, k0, k_cap))
         if not grid:
             return None
+        return (with_k, grid, config.cost_per_hr())
 
-        # batched feasibility of every grid point at its cost cap
+    def _downgrade_search_many(self, jobs: List, slo: float
+                               ) -> List[Optional[PipelineConfig]]:
+        """Lockstep replica search over the union of downgrade jobs.
+
+        One ``percentile_many`` call decides every grid point's
+        feasibility at its cost cap, then the survivors binary-search
+        their minimal replica counts in lockstep — one batched call per
+        halving round, across ALL jobs at once. Feasibility is monotone
+        in replicas, so predicate values (and hence each job's returned
+        candidate) match the sequential per-job formulation exactly."""
+        flat: List[Tuple[int, str, int, int, int]] = []
+        for j, (with_k, grid, _) in enumerate(jobs):
+            flat.extend((j, hw, b, k0, k_cap) for hw, b, k0, k_cap in grid)
         feas = self._feasible_many(
-            [with_k(hw, b, k_cap) for hw, b, _, k_cap in grid], slo)
-        # feasibility is monotone in replicas: binary-search the smallest
-        # feasible k in [k0, k_cap] — all survivors halve in lockstep, one
-        # batched call per round
-        search = [[hw, b, k0, k_cap]
-                  for (hw, b, k0, k_cap), ok in zip(grid, feas) if ok]
+            [jobs[j][0](hw, b, k_cap) for j, hw, b, _, k_cap in flat], slo)
+        search = [[j, hw, b, k0, k_cap]
+                  for (j, hw, b, k0, k_cap), ok in zip(flat, feas) if ok]
         while True:
-            open_i = [i for i, (_, _, lo, hi) in enumerate(search)
+            open_i = [i for i, (_, _, _, lo, hi) in enumerate(search)
                       if lo < hi]
             if not open_i:
                 break
-            mids = [(search[i][2] + search[i][3]) // 2 for i in open_i]
+            mids = [(search[i][3] + search[i][4]) // 2 for i in open_i]
             ok_mid = self._feasible_many(
-                [with_k(search[i][0], search[i][1], m)
+                [jobs[search[i][0]][0](search[i][1], search[i][2], m)
                  for i, m in zip(open_i, mids)], slo)
             for i, m, ok in zip(open_i, mids, ok_mid):
                 if ok:
-                    search[i][3] = m
+                    search[i][4] = m
                 else:
-                    search[i][2] = m + 1
+                    search[i][3] = m + 1
 
-        best: Optional[PipelineConfig] = None
-        for hw, b, lo, _ in search:
-            cand = with_k(hw, b, lo)
-            if cand.cost_per_hr() < current_cost - 1e-12 and (
-                    best is None
-                    or cand.cost_per_hr() < best.cost_per_hr()):
-                best = cand
+        best: List[Optional[PipelineConfig]] = [None] * len(jobs)
+        for j, hw, b, lo, _ in search:
+            cand = jobs[j][0](hw, b, lo)
+            if cand.cost_per_hr() < jobs[j][2] - 1e-12 and (
+                    best[j] is None
+                    or cand.cost_per_hr() < best[j].cost_per_hr()):
+                best[j] = cand
         return best
+
+    def _action_downgrade_hw(self, config: PipelineConfig, stage: str,
+                             arrivals: np.ndarray, slo: float
+                             ) -> Optional[PipelineConfig]:
+        """Localized re-init + cost minimization on cheaper hardware (§4.3).
+
+        The whole (hw, batch) probe grid is scored through the session's
+        ``percentile_many`` surface (one feasibility call at the cost
+        caps, then lockstep replica halving — see
+        :meth:`_downgrade_search_many`). Each probe still simulates once
+        on a miss; the win is that the whole grid shares the session's
+        stage-entry, assembly-prefix, and percentile caches — and, on the
+        jax backend, scores as one vmapped device program. Selection
+        order and predicate values match the sequential formulation
+        exactly (same returned candidate)."""
+        job = self._downgrade_grid(config, stage, arrivals, slo)
+        if job is None:
+            return None
+        return self._downgrade_search_many([job], slo)[0]
 
     # ------------------------------------------------------------ Algorithm 2
     def plan(self, arrivals: np.ndarray, slo: float) -> PlannerResult:
@@ -454,9 +483,16 @@ class BeamPlanner(Planner):
     def __init__(self, pipeline: Pipeline, profiles: ProfileStore,
                  estimator: Optional[Estimator] = None,
                  percentile: float = 99.0, policy: str = "fifo",
-                 beam_width: int = 4, max_rounds: int = 64):
+                 beam_width: Optional[int] = None, max_rounds: int = 64,
+                 backend: str = "numpy"):
         super().__init__(pipeline, profiles, estimator=estimator,
-                         percentile=percentile, policy=policy)
+                         percentile=percentile, policy=policy,
+                         backend=backend)
+        if beam_width is None:
+            # device-backed scoring makes candidates near-free: default
+            # to a wider frontier on the jax backend (EXPERIMENTS.md
+            # §Device-planner)
+            beam_width = 8 if backend == "jax" else 4
         if beam_width < 1:
             raise ValueError(f"beam_width must be >= 1, got {beam_width}")
         self.beam_width = beam_width
@@ -484,9 +520,12 @@ class BeamPlanner(Planner):
         while frontier and rounds < self.max_rounds:
             rounds += 1
             # expand every frontier member's full action set; feasibility
-            # for the flat moves is decided by ONE batched scoring call
+            # for the flat moves is decided by ONE batched scoring call,
+            # and every (member, stage) downgrade grid joins ONE union
+            # lockstep search instead of a search per pair
             flat: List[PipelineConfig] = []
             kept: List[PipelineConfig] = []   # pre-verified (downgrades)
+            jobs: List = []
             for cfg in frontier:
                 for stage in stages:
                     for cand in (self._action_increase_batch(cfg, stage),
@@ -497,12 +536,15 @@ class BeamPlanner(Planner):
                         if key not in visited:
                             visited.add(key)
                             flat.append(cand)
-                    dg = self._action_downgrade_hw(cfg, stage, arrivals, slo)
-                    if dg is not None:
-                        key = dg.cache_key()
-                        if key not in visited:
-                            visited.add(key)
-                            kept.append(dg)
+                    job = self._downgrade_grid(cfg, stage, arrivals, slo)
+                    if job is not None:
+                        jobs.append(job)
+            for dg in self._downgrade_search_many(jobs, slo):
+                if dg is not None:
+                    key = dg.cache_key()
+                    if key not in visited:
+                        visited.add(key)
+                        kept.append(dg)
             feas = self._feasible_many(flat, slo)
             kept.extend(c for c, ok in zip(flat, feas) if ok)
             if not kept:

@@ -402,9 +402,15 @@ class LiveQueue:
     stage lock.
     """
 
-    def __init__(self, policy: str = "fifo"):
+    def __init__(self, policy: str = "fifo", timeout_s: float = 0.0):
         self.policy = check_policy_name(policy)
         self.shed_margin = 0.0
+        # batch-formation hold (StageConfig.timeout_s): a partial fifo
+        # batch is held open until `timeout_s` past the head-of-line
+        # ready instant — the simulator's beyond-paper timeout semantics
+        # (repro.sim.queueing.fifo). edf/slo-drop ignore it, as in the
+        # simulator.
+        self.timeout_s = float(timeout_s)
         self._seq = itertools.count()
         # arrival order: (ready, seq) heap; deadline order: (deadline, seq)
         self._arr: List[Tuple[float, int]] = []
@@ -448,13 +454,28 @@ class LiveQueue:
         while heap and heap[0][1] not in items:
             heapq.heappop(heap)
 
-    def next_ready_after(self, now: float) -> Optional[float]:
-        """Earliest pending ready instant beyond `now` (None if empty) —
-        what a worker's timed wait should sleep until."""
+    def next_ready_after(self, now: float,
+                         max_batch: Optional[int] = None) -> Optional[float]:
+        """Earliest instant a dispatch could produce work after `now`
+        (None if empty) — what a worker's timed wait should sleep until.
+
+        With a fifo formation hold active (``timeout_s > 0``) and
+        ``max_batch`` supplied, a head-of-line item inside its hold
+        window reports the hold's *release* instant unless enough items
+        are already ready to fill the batch — so workers sleep through
+        the hold instead of busy-polling empty ``form_batch`` calls."""
         self._prune(self._arr)
         if not self._arr:
             return None
-        return max(self._arr[0][0], now)
+        head = self._arr[0][0]
+        if (self.policy == "fifo" and self.timeout_s > 0.0
+                and max_batch is not None and head <= now):
+            release = head + self.timeout_s
+            if release > now:
+                n_ready = sum(1 for r in self._ready.values() if r <= now)
+                if n_ready < max_batch:
+                    return release
+        return max(head, now)
 
     def _pop_seq(self, seq: int):
         item = self._items.pop(seq)
@@ -481,6 +502,7 @@ class LiveQueue:
         else:
             shed_floor = (now + solo_latency_s + self.shed_margin
                           if self.policy == "slo-drop" else None)
+            popped: List[Tuple[float, int]] = []
             while self._arr and len(take_seqs) < max_batch:
                 ready, seq = self._arr[0]
                 if seq not in self._items:
@@ -489,11 +511,24 @@ class LiveQueue:
                 if ready > now:
                     break
                 heapq.heappop(self._arr)
+                popped.append((ready, seq))
                 if (shed_floor is not None
                         and self._deadline[seq] < shed_floor):
                     shed_seqs.append(seq)
                 else:
                     take_seqs.append(seq)
+            # fifo formation hold (StageConfig.timeout_s): a partial
+            # batch stays queued until max_batch items are ready or the
+            # hold expires `timeout_s` past the head-of-line ready
+            # instant — mirrors the simulator's timeout batching
+            # (repro.sim.queueing.fifo); slo-drop ignores the hold there
+            # and here alike
+            if (self.policy == "fifo" and self.timeout_s > 0.0
+                    and take_seqs and len(take_seqs) < max_batch
+                    and now < popped[0][0] + self.timeout_s):
+                for entry in popped:
+                    heapq.heappush(self._arr, entry)
+                return [], []
         out = ([self._pop_seq(s) for s in take_seqs],
                [self._pop_seq(s) for s in shed_seqs])
         self._prune(self._arr)

@@ -31,8 +31,10 @@ is covered by the discrete-event backends (`repro.serving.cluster`,
 `repro.sim.control`), whose queue discipline this executor shares by
 construction — `benchmarks/bench_live_loop.py` measures the residual
 sim<->real gap. ``StageConfig.timeout_s`` (the beyond-paper formation
-hold) is a simulator-only knob: the live queue serves greedily, the
-paper's discipline.
+hold) is honored by the live queue exactly as in the simulator: a
+partial fifo batch is held open until ``timeout_s`` past the head-of-
+line arrival or the batch fills, whichever comes first (workers sleep
+through the hold rather than polling).
 """
 
 from __future__ import annotations
@@ -71,12 +73,13 @@ class _Stage:
     """One centralized policy queue + its replica worker threads."""
 
     def __init__(self, name: str, fn: Callable[[List[Any]], List[Any]],
-                 max_batch: int, policy: str, solo_latency_s: float):
+                 max_batch: int, policy: str, solo_latency_s: float,
+                 timeout_s: float = 0.0):
         self.name = name
         self.fn = fn
         self.max_batch = max_batch
         self.solo_latency_s = solo_latency_s
-        self.queue = LiveQueue(policy)
+        self.queue = LiveQueue(policy, timeout_s=timeout_s)
         self.cond = threading.Condition()
         self.workers: List[threading.Thread] = []
         self.target = 0            # configured replica target
@@ -141,7 +144,8 @@ class PipelineExecutor:
             cfg = config[name]
             st = _Stage(name, stage_fns[stage.model_id], cfg.batch_size,
                         getattr(cfg, "policy", "fifo"),
-                        float(solo.get(name, 0.0)))
+                        float(solo.get(name, 0.0)),
+                        timeout_s=float(getattr(cfg, "timeout_s", 0.0)))
             self._stages[name] = st
             self._timeline_deltas[name] = []
             self._base_replicas[name] = cfg.replicas
@@ -296,7 +300,7 @@ class PipelineExecutor:
                         now, st.max_batch, st.solo_latency_s)
                     if batch or shed:
                         break
-                    nxt = st.queue.next_ready_after(now)
+                    nxt = st.queue.next_ready_after(now, st.max_batch)
                     cond.wait(0.25 if nxt is None
                               else min(max(nxt - now, 0.0) + 1e-4, 0.25))
                 cancelled = [r for r in batch if r.cancelled]

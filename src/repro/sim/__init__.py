@@ -10,6 +10,12 @@ coarse-grained and DS2 baselines, and the benchmark drivers.
 * :mod:`repro.sim.queueing` — pluggable per-stage policies: ``fifo``
   (paper + timeout batching), ``edf`` (deadline scheduling),
   ``slo-drop`` (SLO-aware load shedding w/ reprogrammable shed margin)
+* :mod:`repro.sim.jax_backend` — accelerator-resident planner sweeps:
+  a ``lax.scan`` port of the FIFO fill and a vmapped (hw, batch,
+  replica) candidate grid, bit-identical to the numpy kernels. Opt in
+  per session via ``SimEngine.session(..., backend="jax")`` (default
+  ``"numpy"``); eligible ``percentile_many`` grids then score in one
+  device launch, everything else falls back to numpy transparently.
 * :mod:`repro.sim.result`   — per-query SimResult (+ dropped mask),
   per-epoch EpochTelemetry / StageTelemetry control records
 * :mod:`repro.sim.control`  — closed-loop Tuner co-simulation: epoch

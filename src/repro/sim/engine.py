@@ -32,6 +32,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.pipeline import SOURCE, Pipeline, PipelineConfig
+from repro.core.policy import effective_max_batch as _effective_max_batch
 from repro.core.profiler import ProfileStore
 from repro.sim.queueing import simulate_stage
 from repro.sim.result import SimResult
@@ -147,7 +148,8 @@ class SimEngine:
                 class_names: Optional[Sequence[str]] = None,
                 max_cache_entries: int = 512,
                 max_cache_bytes: Optional[int] = None,
-                max_accum_bytes: Optional[int] = None) -> "TraceSession":
+                max_accum_bytes: Optional[int] = None,
+                backend: str = "numpy") -> "TraceSession":
         """Bind the engine to one trace for incremental re-simulation.
 
         ``slo_s`` may be a scalar (uniform SLO, the paper's setting) or a
@@ -157,12 +159,21 @@ class SimEngine:
         ``max_accum_bytes=0`` disables the prefix-accumulator cache
         (the pre-batching assembly behavior; benchmarks use it as the
         honest "loop path" baseline).
+
+        ``backend="jax"`` selects the device fill kernel
+        (:mod:`repro.sim.jax_backend`): single-stage simulations fall
+        back to numpy below the kernel's crossover, and
+        :meth:`TraceSession.percentile_many` additionally routes
+        eligible single-stage candidate grids through one vmapped
+        device program. Bit-identical either way; degrades to numpy
+        when jax is not importable.
         """
         return TraceSession(self, arrivals, slo_s=slo_s,
                             class_ids=class_ids, class_names=class_names,
                             max_cache_entries=max_cache_entries,
                             max_cache_bytes=max_cache_bytes,
-                            max_accum_bytes=max_accum_bytes)
+                            max_accum_bytes=max_accum_bytes,
+                            backend=backend)
 
     def simulate(
         self,
@@ -260,7 +271,12 @@ class TraceSession:
                  class_names: Optional[Sequence[str]] = None,
                  max_cache_entries: int = 512,
                  max_cache_bytes: Optional[int] = None,
-                 max_accum_bytes: Optional[int] = None):
+                 max_accum_bytes: Optional[int] = None,
+                 backend: str = "numpy"):
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"have ('numpy', 'jax')")
+        self.backend = backend
         self.engine = engine
         self.arrivals = np.asarray(arrivals, dtype=np.float64)
         self.n = int(self.arrivals.shape[0])
@@ -324,11 +340,14 @@ class TraceSession:
                    ) -> Tuple:
         # StageConfig.key() is the single source of truth for config
         # identity — new StageConfig knobs invalidate these caches
-        # automatically instead of silently colliding
+        # automatically instead of silently colliding. The backend token
+        # keeps device- and host-computed entries apart (they are
+        # bit-identical by contract, but a parity regression must not be
+        # maskable by a cache hit from the other backend).
         sched = schedules or {}
         shed = shed_schedules or {}
         pols = policy_schedules or {}
-        return (stage, tuple(
+        return (stage, self.backend, tuple(
             (s, config[s].key(), _sched_key(sched.get(s)),
              _shed_key(shed.get(s)), _policy_key(pols.get(s)))
             for s in self.engine._cone[stage]
@@ -409,6 +428,7 @@ class TraceSession:
             getattr(cfg, "timeout_s", 0.0), sorted_deadline,
             (shed_schedules or {}).get(stage),
             (policy_schedules or {}).get(stage),
+            backend=self.backend,
         )
         comp = np.full(n, -np.inf)
         comp[order] = done_sorted
@@ -595,9 +615,124 @@ class TraceSession:
         candidate; each miss simulates through the same shared machinery
         as ``simulate_many`` (stage entries computed once per distinct
         cone, assembly shared across common prefixes, results memoized
-        in the percentile cache) — the batching lives in those shared
-        caches, not in a vectorized multi-config evaluation."""
+        in the percentile cache).
+
+        With ``backend="jax"`` a candidate set that varies exactly one
+        *sink* FIFO stage — the shape of every planner probe grid and
+        lockstep replica search — is additionally scored as ONE vmapped
+        device program (:func:`repro.sim.jax_backend
+        .grid_stage_percentiles`): the fixed stages simulate once on
+        host, the varied stage's (lut, batch, replicas, timeout) grid
+        fills and reduces to percentiles on device. Bit-identical to the
+        host loop (property-tested); ineligible sets fall through to it.
+        """
+        configs = list(configs)
+        if self.backend == "jax" and not replica_schedules:
+            out = self._grid_percentile_many(configs, p)
+            if out is not None:
+                return out
         return [self.percentile(c, p, replica_schedules) for c in configs]
+
+    def _grid_percentile_many(self, configs: List[PipelineConfig],
+                              p: float) -> Optional[List[float]]:
+        """Device-grid scoring of an eligible candidate set, or None.
+
+        Eligible: jax importable; enough uncached distinct candidates
+        and a long enough trace to beat per-shape compile + dispatch;
+        the candidates differ in exactly one stage; that stage is a sink
+        (no descendants), so every other stage's entry is candidate-
+        invariant and the accumulated completion maximum over the rest
+        of the pipeline is a single shared array; the varied stage runs
+        plain FIFO with a static pool and non-negative profiled
+        latencies (the sorted-buffer scan's contract).
+        """
+        from repro.sim import jax_backend
+
+        if not jax_backend.available():
+            return None
+        uncached: Dict[Tuple, PipelineConfig] = {}
+        for c in configs:
+            ck = self.config_key(c)
+            if (self.backend, ck, p) not in self._pctl_cache:
+                uncached.setdefault(ck, c)
+        if len(uncached) < jax_backend._GRID_MIN_CANDIDATES:
+            return None
+        cands = list(uncached.values())
+        pivot = cands[0]
+        engine = self.engine
+        varied = [s for s in engine._topo
+                  if any(c[s].key() != pivot[s].key() for c in cands[1:])]
+        if len(varied) != 1:
+            return None
+        s = varied[0]
+        if engine._descendants[s] != (s,):
+            return None
+        luts: List[np.ndarray] = []
+        effs: List[int] = []
+        reps: List[int] = []
+        touts: List[float] = []
+        for c in cands:
+            cfg = c[s]
+            if (getattr(cfg, "policy", "fifo") != "fifo"
+                    or cfg.replicas < 1):
+                return None
+            lut = engine.latency_lut(s, cfg.hardware, cfg.batch_size)
+            eff = _effective_max_batch(lut, cfg.batch_size)
+            if float(np.min(lut[1:eff + 1])) < 0.0:
+                return None
+            luts.append(lut)
+            effs.append(eff)
+            reps.append(int(cfg.replicas))
+            touts.append(float(getattr(cfg, "timeout_s", 0.0)))
+        # host pass over the candidate-invariant stages: populate/reuse
+        # their cache entries and accumulate the completion maximum.
+        # Skipping the sink is exact — `last_done` is an element-wise
+        # max, so folding the sink's completions in on device commutes.
+        n = self.n
+        visited: Dict[str, np.ndarray] = {SOURCE: np.ones(n, dtype=bool)}
+        completion: Dict[str, np.ndarray] = {SOURCE: self.arrivals}
+        base_last = self.arrivals
+        for stage in engine._topo:
+            if stage == s:
+                continue
+            skey = self._stage_key(stage, pivot, None)
+            ent = self._stage_cache.get(skey)
+            if ent is None:
+                ent = self._simulate_stage_entry(stage, pivot, None,
+                                                 visited, completion)
+                self._stage_cache[skey] = ent
+                self._cache_bytes += ent.nbytes
+                self.stats["stage_sims"] += 1
+                while self._stage_cache and (
+                        len(self._stage_cache) > self.max_cache_entries
+                        or self._cache_bytes > self.max_cache_bytes):
+                    _, old = self._stage_cache.popitem(last=False)
+                    self._cache_bytes -= old.nbytes
+            else:
+                self._stage_cache.move_to_end(skey)
+                self.stats["stage_hits"] += 1
+            visited[stage] = ent.visited
+            completion[stage] = ent.completion
+            if ent.visited.any():
+                base_last = np.where(
+                    ent.visited, np.maximum(base_last, ent.completion),
+                    base_last)
+        vis, ready = self._stage_ready(s, visited, completion)
+        k = int(vis.sum())
+        if k < jax_backend._GRID_MIN_QUERIES:
+            return None
+        idx = np.nonzero(vis)[0]
+        order = idx[np.argsort(ready[idx], kind="stable")]
+        vals = jax_backend.grid_stage_percentiles(
+            ready[order], order, base_last, self.arrivals,
+            engine.rpc_delay_s, luts, effs, reps, touts, p)
+        self.stats["full_sims"] += len(cands)
+        self.stats["stage_sims"] += len(cands)
+        for ck, v in zip(uncached, vals):
+            self._pctl_cache[(self.backend, ck, p)] = float(v)
+        while len(self._pctl_cache) > self._max_pctl_entries:
+            self._pctl_cache.popitem(last=False)
+        return [self.percentile(c, p) for c in configs]
 
     def percentile(self, config: PipelineConfig, p: float,
                    replica_schedules: Optional[Schedules] = None,
@@ -605,7 +740,8 @@ class TraceSession:
         """Memoized latency percentile per full configuration (the scalar
         the planner's feasibility checks consume — subsumes the seed
         planner's whole-config ``_cache``)."""
-        key = (self.config_key(config, replica_schedules, shed_schedules), p)
+        key = (self.backend,
+               self.config_key(config, replica_schedules, shed_schedules), p)
         val = self._pctl_cache.get(key)
         if val is None:
             val = self.simulate(config, replica_schedules,
@@ -630,7 +766,7 @@ class TraceSession:
         if self.class_ids is None:
             raise ValueError("session has no class_ids; open the session "
                              "with class tags for per-class percentiles")
-        cfg_key = self.config_key(config, replica_schedules)
+        cfg_key = (self.backend, self.config_key(config, replica_schedules))
         key = (cfg_key, p, ("class", int(class_id)))
         val = self._pctl_cache.get(key)
         if val is None:

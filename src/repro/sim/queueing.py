@@ -85,6 +85,7 @@ policy-switching path (:func:`switched`).
 from __future__ import annotations
 
 import heapq
+import os
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -123,8 +124,10 @@ _BURST_MIN = 64
 _BURST_MAX = 8192
 # below this many queries a fill never attempts blocks: numpy call
 # overhead cannot amortize against the lean scalar loop on short fills
-# (planner probe traces are ~10k queries; hour-scale traces are >100k)
-_BLOCK_THRESHOLD = 32768
+# (planner probe traces are ~10k queries; hour-scale traces are >100k).
+# Tunable via env for machines whose crossover differs (the default is
+# the measured crossover on the benchmark host, see EXPERIMENTS.md §Perf)
+_BLOCK_THRESHOLD = int(os.environ.get("REPRO_BLOCK_FILL_THRESHOLD", 32768))
 
 
 def fifo(
@@ -136,12 +139,16 @@ def fifo(
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
     shed_events: Optional[Sequence[Tuple[float, float]]] = None,
+    backend: str = "numpy",
 ) -> StageOutcome:
     """Arrival-order batching (the paper's policy). `deadline` and
     `shed_events` are ignored.
 
     Bit-identical to the seed estimator's ``_simulate_stage``; the fill
-    runs through the blocked vectorized kernel (module docstring).
+    runs through the blocked vectorized kernel (module docstring), or —
+    with ``backend="jax"`` — through the ``lax.scan`` device kernel
+    (:mod:`repro.sim.jax_backend`), which auto-falls-back to numpy for
+    fills below its crossover threshold.
     """
     k = ready.shape[0]
     dropped = np.zeros(k, dtype=bool)
@@ -149,6 +156,13 @@ def fifo(
         return np.empty(0, dtype=np.float64), np.zeros(0, dtype=np.int64), \
             dropped
     eff_batch = _effective_max_batch(latency_lut, max_batch)
+    if backend == "jax":
+        from repro.sim import jax_backend
+        out = jax_backend.fifo_fill(ready, latency_lut, eff_batch,
+                                    replicas, replica_events, timeout_s)
+        if out is not None:
+            done, batches = out
+            return done, batches, dropped
     if not replica_events:
         if replicas <= 0:
             return (np.full(k, _FAR_FUTURE), np.zeros(0, dtype=np.int64),
@@ -550,8 +564,10 @@ def edf(
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
     shed_events: Optional[Sequence[Tuple[float, float]]] = None,
+    backend: str = "numpy",
 ) -> StageOutcome:
-    """Earliest-deadline-first batching. ``shed_events`` is ignored.
+    """Earliest-deadline-first batching. ``shed_events`` and ``backend``
+    are ignored (the scalar deadline-heap loop has no device analogue).
 
     At each dispatch, the batch is the (up to) ``max_batch`` queries with
     the earliest deadlines among those ready. Without deadlines this
@@ -629,6 +645,7 @@ def slo_drop(
     timeout_s: float = 0.0,
     deadline: Optional[np.ndarray] = None,
     shed_events: Optional[Sequence[Tuple[float, float]]] = None,
+    backend: str = "numpy",
 ) -> StageOutcome:
     """FIFO with SLO-aware shedding at dequeue (admission control).
 
@@ -656,7 +673,7 @@ def slo_drop(
     """
     if deadline is None:
         return fifo(ready, latency_lut, max_batch, replicas,
-                    replica_events, timeout_s=0.0)
+                    replica_events, timeout_s=0.0, backend=backend)
     k = ready.shape[0]
     done = np.empty(k, dtype=np.float64)
     dropped = np.zeros(k, dtype=bool)
@@ -735,20 +752,30 @@ def simulate_stage(
     deadline: Optional[np.ndarray] = None,
     shed_events: Optional[Sequence[Tuple[float, float]]] = None,
     policy_events: Optional[Sequence[Tuple[float, str]]] = None,
+    backend: str = "numpy",
 ) -> StageOutcome:
     """Dispatch to a named policy. `ready` must be sorted ascending.
 
     A non-empty ``policy_events`` (sorted ``(t, policy_name)`` switch
     points) routes through :func:`switched` instead — the policy-core
     scalar path that re-evaluates the policy at every batch dispatch.
+
+    ``backend`` selects the fill kernel implementation for policies that
+    have one (currently ``fifo``): ``"numpy"`` (default) or ``"jax"``
+    (:mod:`repro.sim.jax_backend`). Both are bit-identical; jax pays a
+    per-shape compile, so it only wins on batched candidate grids — the
+    engine routes those through ``grid_stage_percentiles`` directly.
     """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"have ('numpy', 'jax')")
     if policy_events:
         return switched(ready, latency_lut, max_batch, replicas,
                         replica_events, timeout_s, deadline, shed_events,
                         policy, policy_events)
     return get_policy(policy)(ready, latency_lut, max_batch, replicas,
                               replica_events, timeout_s, deadline,
-                              shed_events)
+                              shed_events, backend=backend)
 
 
 def switched(

@@ -69,15 +69,20 @@ except ModuleNotFoundError:
             return fn
         return deco
 
-    def given(*strategies):
+    def given(*strategies, **kw_strategies):
         def deco(fn):
-            n = min(getattr(fn, "_hyp_max_examples", _FALLBACK_EXAMPLES_CAP),
-                    _FALLBACK_EXAMPLES_CAP)
-
             def wrapper():
+                # resolve max_examples at call time so @settings works in
+                # either decorator order (hypothesis accepts both)
+                n = min(getattr(wrapper, "_hyp_max_examples",
+                                getattr(fn, "_hyp_max_examples",
+                                        _FALLBACK_EXAMPLES_CAP)),
+                        _FALLBACK_EXAMPLES_CAP)
                 rng = np.random.default_rng(_FALLBACK_SEED)
                 for _ in range(n):
-                    fn(*(s.example(rng) for s in strategies))
+                    fn(*(s.example(rng) for s in strategies),
+                       **{k: s.example(rng)
+                          for k, s in kw_strategies.items()})
             # no functools.wraps: pytest must see a zero-arg signature,
             # not the strategy parameters (it would demand fixtures)
             wrapper.__name__ = fn.__name__

@@ -191,6 +191,93 @@ def test_live_policy_switch_and_shed_margin_events():
     assert ex.shutdown()
 
 
+# -- batch-formation hold (StageConfig.timeout_s) ----------------------------
+
+
+def test_live_queue_timeout_holds_partial_batch():
+    """A partial fifo batch stays queued until the hold expires — the
+    simulator's timeout batching, previously ignored by the live queue
+    (sim and live diverged on sparse arrivals)."""
+    from repro.core.policy import LiveQueue
+    q = LiveQueue("fifo", timeout_s=0.5)
+    q.push("a", ready=0.0)
+    q.push("b", ready=0.1)
+    # inside the hold window: nothing is released, nothing is lost
+    batch, shed = q.form_batch(0.2, max_batch=4)
+    assert batch == [] and shed == []
+    assert len(q) == 2
+    # hold expired (0.0 + 0.5): both items serve as one batch
+    batch, shed = q.form_batch(0.5, max_batch=4)
+    assert batch == ["a", "b"] and shed == []
+    assert len(q) == 0
+
+
+def test_live_queue_timeout_full_batch_bypasses_hold():
+    from repro.core.policy import LiveQueue
+    q = LiveQueue("fifo", timeout_s=5.0)
+    for i in range(4):
+        q.push(i, ready=0.0)
+    batch, _ = q.form_batch(0.0, max_batch=4)
+    assert batch == [0, 1, 2, 3]      # batch is full: no hold
+    # a zero timeout serves partial batches greedily (paper discipline)
+    q0 = LiveQueue("fifo", timeout_s=0.0)
+    q0.push("x", ready=0.0)
+    assert q0.form_batch(0.0, max_batch=4)[0] == ["x"]
+
+
+def test_live_queue_timeout_ignored_by_slo_drop():
+    """slo-drop ignores timeout_s, like the simulator (holding a batch
+    open is at odds with shedding already-late work)."""
+    from repro.core.policy import LiveQueue
+    q = LiveQueue("slo-drop", timeout_s=5.0)
+    q.push("x", ready=0.0, deadline=100.0)
+    batch, shed = q.form_batch(0.0, max_batch=4)
+    assert batch == ["x"] and shed == []
+
+
+def test_live_queue_timeout_next_ready_reports_release_instant():
+    """Workers must sleep until the hold releases, not busy-poll: with a
+    head-of-line item inside its hold window and an unfillable batch,
+    next_ready_after reports head + timeout_s."""
+    from repro.core.policy import LiveQueue
+    q = LiveQueue("fifo", timeout_s=0.5)
+    q.push("a", ready=0.0)
+    assert q.next_ready_after(0.1, max_batch=4) == pytest.approx(0.5)
+    # enough ready items to fill the batch: dispatch now
+    q.push("b", ready=0.0)
+    assert q.next_ready_after(0.1, max_batch=2) == pytest.approx(0.1)
+    # legacy call without max_batch keeps the greedy sleep target
+    assert q.next_ready_after(0.1) == pytest.approx(0.1)
+    # after the hold expires the dispatch instant is `now`
+    assert q.next_ready_after(0.7, max_batch=4) == pytest.approx(0.7)
+
+
+def test_executor_timeout_hold_batches_sparse_arrivals():
+    """Two sparse arrivals within one hold window must serve as ONE
+    batch on the live executor — the sim<->live divergence this
+    satellite closes."""
+    names = ["m0"]
+    pipe = linear_pipeline("t", names, {n: ["cpu-1"] for n in names})
+    cfg = PipelineConfig({
+        s: StageConfig("cpu-1", 2, 1, timeout_s=0.4)
+        for s in pipe.stages})
+    sizes = []
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.01, sizes)})
+    ex.start_run()
+    r0 = _Request(0, ex.now(), 0)
+    ex.inject(r0)
+    time.sleep(0.15)                  # well inside the 0.4 s hold
+    r1 = _Request(1, ex.now(), 1)
+    ex.inject(r1)
+    for r in (r0, r1):
+        assert r.done.wait(5.0)
+    assert sizes and sizes[0] == 2, sizes   # held and served together
+    # the head request waited for the straggler: it cannot have finished
+    # before the second arrival landed
+    assert r0.t_done >= r1.t_arrival
+    assert ex.shutdown()
+
+
 # -- the live control loop ---------------------------------------------------
 
 
