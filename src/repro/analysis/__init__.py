@@ -1,0 +1,27 @@
+"""Invariant-enforcing static analysis for the InferLine repro.
+
+Pure-stdlib AST rules that pin the repo's standing invariants — each
+one backed by a bug class that previously shipped:
+
+* DET01 — no wall-clock / unseeded RNG in the simulation core
+* KEY01 — cache-key completeness for the cone caches (PR 6)
+* LOCK01 — guarded-by lock discipline in repro.serving (PR 5)
+* EVT01 — control-event streams provably sorted (PR 2)
+* JAX01 — pure lax.scan bodies and Pallas kernels
+
+Run ``python -m repro.analysis`` (see ``--help``); suppress a finding
+inline with ``# analysis: allow RULE — justification`` or in
+``analysis_baseline.txt``.
+"""
+
+from repro.analysis.baseline import Baseline, BaselineEntry, BaselineError
+from repro.analysis.core import (AnalysisReport, Rule, SuppressedFinding,
+                                 collect_modules, run_analysis)
+from repro.analysis.findings import Finding
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+__all__ = [
+    "ALL_RULES", "RULES_BY_ID", "AnalysisReport", "Baseline",
+    "BaselineEntry", "BaselineError", "Finding", "Rule",
+    "SuppressedFinding", "collect_modules", "run_analysis",
+]

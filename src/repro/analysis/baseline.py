@@ -1,0 +1,84 @@
+"""Baseline (accepted-findings) file for the analysis pass.
+
+Format — one entry per line, tab-separated, ``#`` comments allowed:
+
+    RULE<TAB>path<TAB>scope<TAB>justification
+
+e.g.::
+
+    DET01\trepro/core/profiler.py\tprofile_model_measured\tprofiler \
+measures real wall-clock by design
+
+An entry matches every finding with the same ``(rule, path, scope)``
+identity — line numbers are deliberately not part of the identity so a
+baseline survives unrelated edits. The justification is mandatory: an
+entry without one is a malformed-baseline error, not a suppression (the
+same contract as inline ``# analysis: allow`` comments).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    scope: str
+    justification: str
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.scope)
+
+    def render(self) -> str:
+        return (f"{self.rule}\t{self.path}\t{self.scope}\t"
+                f"{self.justification}")
+
+
+class BaselineError(ValueError):
+    """Malformed baseline file (missing fields / justification)."""
+
+
+class Baseline:
+    """Parsed baseline file; tracks which entries matched a finding so
+    stale entries can be reported (a deleted violation should take its
+    baseline line with it)."""
+
+    def __init__(self, entries: Optional[List[BaselineEntry]] = None):
+        self.entries: Dict[Tuple[str, str, str], BaselineEntry] = {
+            e.key: e for e in (entries or [])}
+        self._used: set = set()
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        entries: List[BaselineEntry] = []
+        for i, raw in enumerate(path.read_text(encoding="utf-8")
+                                .splitlines(), start=1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = [p.strip() for p in line.split("\t")]
+            if len(parts) < 4 or not all(parts[:4]):
+                raise BaselineError(
+                    f"{path}:{i}: baseline entries are "
+                    f"RULE<TAB>path<TAB>scope<TAB>justification "
+                    f"(justification mandatory); got {raw!r}")
+            entries.append(BaselineEntry(parts[0], parts[1], parts[2],
+                                         "\t".join(parts[3:])))
+        return cls(entries)
+
+    def match(self, finding: Finding) -> Optional[BaselineEntry]:
+        entry = self.entries.get(finding.key)
+        if entry is not None:
+            self._used.add(entry.key)
+        return entry
+
+    def unused(self) -> List[BaselineEntry]:
+        return [e for k, e in sorted(self.entries.items())
+                if k not in self._used]

@@ -1,0 +1,129 @@
+"""``python -m repro.analysis`` — run the invariant rules over a tree.
+
+Exit codes: 0 clean, 1 findings, 2 usage/baseline errors. ``--json``
+emits the full machine-readable report (findings, suppressions, stale
+baseline entries) for CI.
+
+The analyzer is pure stdlib (ast/tokenize) on purpose: the CI analysis
+job runs it without installing numpy/jax, and it can lint a tree that
+does not even import.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.baseline import Baseline, BaselineError
+from repro.analysis.core import AnalysisReport, run_analysis
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+
+def _default_root() -> Path:
+    # repo layout: analyzer lives in src/repro/analysis; scanning `src`
+    # makes relpaths start at `repro/` (the package the rules scope on)
+    here = Path.cwd()
+    return here / "src" if (here / "src" / "repro").is_dir() else here
+
+
+def _default_baseline(root: Path) -> Optional[Path]:
+    for cand in (root.parent / "analysis_baseline.txt",
+                 root / "analysis_baseline.txt"):
+        if cand.is_file():
+            return cand
+    return None
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Invariant-enforcing static analysis for the "
+                    "InferLine repro (determinism, cache-key "
+                    "completeness, lock discipline, event sorting, "
+                    "JAX purity).")
+    p.add_argument("paths", nargs="*", type=Path,
+                   help="files or directories to scan "
+                        "(default: the whole root)")
+    p.add_argument("--root", type=Path, default=None,
+                   help="package root used for relative paths and "
+                        "package scoping (default: ./src when it holds "
+                        "a repro package, else .)")
+    p.add_argument("--baseline", type=Path, default=None,
+                   help="baseline file of accepted findings (default: "
+                        "<root>/../analysis_baseline.txt when present; "
+                        "pass a nonexistent path to run without one)")
+    p.add_argument("--rules", default=None, metavar="ID[,ID...]",
+                   help="comma-separated rule ids to run "
+                        "(default: all)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the machine-readable report")
+    p.add_argument("--list-rules", action="store_true",
+                   help="list rule ids and exit")
+    return p
+
+
+def render_text(report: AnalysisReport) -> str:
+    lines: List[str] = [f.render() for f in report.findings]
+    if report.findings:
+        lines.append("")
+    lines.append(
+        f"{len(report.findings)} finding(s), "
+        f"{len(report.suppressed)} suppressed, "
+        f"{report.files_scanned} file(s) scanned, "
+        f"rules: {', '.join(report.rules_run)}")
+    for e in report.unused_baseline:
+        lines.append(f"warning: stale baseline entry {e.rule} "
+                     f"{e.path} [{e.scope}] — violation is gone, "
+                     f"delete the line")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for r in ALL_RULES:
+            print(f"{r.id}  {r.title}")
+        return 0
+
+    root = (args.root or _default_root()).resolve()
+    if not root.is_dir():
+        print(f"error: root {root} is not a directory", file=sys.stderr)
+        return 2
+
+    if args.rules:
+        try:
+            rules = [RULES_BY_ID[rid.strip()]()
+                     for rid in args.rules.split(",") if rid.strip()]
+        except KeyError as e:
+            print(f"error: unknown rule {e.args[0]!r} "
+                  f"(known: {', '.join(RULES_BY_ID)})", file=sys.stderr)
+            return 2
+    else:
+        rules = [r() for r in ALL_RULES]
+
+    baseline_path = (args.baseline if args.baseline is not None
+                     else _default_baseline(root))
+    baseline = None
+    if baseline_path is not None and Path(baseline_path).is_file():
+        try:
+            baseline = Baseline.load(Path(baseline_path))
+        except BaselineError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+
+    paths = [p if p.is_absolute() else Path.cwd() / p
+             for p in args.paths] or None
+    report = run_analysis(root, rules, paths=paths, baseline=baseline)
+
+    if args.as_json:
+        print(json.dumps(report.as_json(), indent=2))
+    else:
+        print(render_text(report))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,144 @@
+"""Checker framework: rule base class, the runner, and the report.
+
+The pass is a custom AST analyzer for THIS repo's invariants — the bug
+classes that previously shipped and were fixed after the fact:
+
+* unsorted control-event streams (PR 2)  -> EVT01
+* executor shared-state races (PR 5)     -> LOCK01
+* stale cone-cache keys (PR 6)           -> KEY01
+
+plus the two standing determinism contracts the planner's trust rests
+on: no wall-clock / unseeded RNG in the simulation core (DET01) and
+pure ``lax.scan`` bodies / Pallas kernels (JAX01).
+
+Rules receive EVERY parsed module at once (several rules cross-check
+definitions in one file against usage in another) and yield
+:class:`~repro.analysis.findings.Finding` objects. The runner applies
+inline suppressions and the repo baseline, and packages the result.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.baseline import Baseline, BaselineEntry
+from repro.analysis.findings import Finding
+from repro.analysis.source import ModuleSource, load_module
+
+
+class Rule:
+    """One invariant checker. Subclasses set ``id``/``title`` and
+    implement :meth:`check` over the full module set."""
+
+    id: str = "RULE00"
+    title: str = ""
+
+    def check(self, modules: Sequence[ModuleSource]) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    # convenience for subclasses
+    def finding(self, mod: ModuleSource, node: ast.AST, message: str
+                ) -> Finding:
+        return Finding(self.id, mod.relpath, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0) + 1,
+                       mod.scope_of(node), message)
+
+
+@dataclasses.dataclass
+class SuppressedFinding:
+    finding: Finding
+    justification: str
+    via: str                      # "inline" | "baseline"
+
+    def as_json(self) -> Dict[str, object]:
+        out = self.finding.as_json()
+        out["justification"] = self.justification
+        out["via"] = self.via
+        return out
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    findings: List[Finding]
+    suppressed: List[SuppressedFinding]
+    unused_baseline: List[BaselineEntry]
+    files_scanned: int
+    rules_run: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def as_json(self) -> Dict[str, object]:
+        return {
+            "version": 1,
+            "ok": self.ok,
+            "files_scanned": self.files_scanned,
+            "rules_run": self.rules_run,
+            "findings": [f.as_json() for f in self.findings],
+            "suppressed": [s.as_json() for s in self.suppressed],
+            "unused_baseline": [
+                {"rule": e.rule, "path": e.path, "scope": e.scope,
+                 "justification": e.justification}
+                for e in self.unused_baseline
+            ],
+        }
+
+
+def collect_modules(root: Path,
+                    paths: Optional[Sequence[Path]] = None
+                    ) -> Tuple[List[ModuleSource], List[str]]:
+    """Parse every ``.py`` file under `paths` (default: all of `root`).
+
+    Returns (modules, parse_errors) — a syntax error in one file must
+    not hide findings in the rest of the tree.
+    """
+    files: List[Path] = []
+    for p in (paths or [root]):
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    modules: List[ModuleSource] = []
+    errors: List[str] = []
+    for f in files:
+        if "__pycache__" in f.parts:
+            continue
+        try:
+            modules.append(load_module(f, root))
+        except (SyntaxError, UnicodeDecodeError, ValueError) as e:
+            errors.append(f"{f}: {e}")
+    return modules, errors
+
+
+def run_analysis(root: Path,
+                 rules: Sequence[Rule],
+                 paths: Optional[Sequence[Path]] = None,
+                 baseline: Optional[Baseline] = None) -> AnalysisReport:
+    modules, errors = collect_modules(root, paths)
+    baseline = baseline or Baseline()
+    findings: List[Finding] = []
+    suppressed: List[SuppressedFinding] = []
+    by_rel = {m.relpath: m for m in modules}
+    for rule in rules:
+        for f in rule.check(modules):
+            mod = by_rel.get(f.path)
+            just = mod.suppression(f.rule, f.line) if mod else None
+            if just is not None:
+                suppressed.append(SuppressedFinding(f, just, "inline"))
+                continue
+            entry = baseline.match(f)
+            if entry is not None:
+                suppressed.append(
+                    SuppressedFinding(f, entry.justification, "baseline"))
+                continue
+            findings.append(f)
+    for err in errors:
+        findings.append(Finding("PARSE", "<errors>", 1, 1, "<module>", err))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return AnalysisReport(findings, suppressed, baseline.unused(),
+                          len(modules), [r.id for r in rules])

@@ -1,0 +1,49 @@
+"""Finding objects for the invariant-enforcing static-analysis pass.
+
+A :class:`Finding` is one rule violation anchored to a ``file:line``
+span. Findings are plain data — the CLI renders them as text or JSON,
+and the suppression machinery (inline ``# analysis: allow`` comments and
+the repo baseline file) matches on their identity fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``scope`` is the dotted qualname of the enclosing class/function
+    (``<module>`` at module level) — together with ``rule`` and ``path``
+    it forms the line-number-stable identity the baseline file matches
+    on, so baselined findings survive unrelated edits to the same file.
+    """
+
+    rule: str          # e.g. "DET01"
+    path: str          # root-relative posix path, e.g. "repro/sim/engine.py"
+    line: int
+    col: int
+    scope: str         # dotted qualname of the enclosing def/class
+    message: str
+
+    @property
+    def key(self):
+        """Baseline identity (line numbers deliberately excluded)."""
+        return (self.rule, self.path, self.scope)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.scope}] {self.message}")
+
+    def as_json(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "scope": self.scope,
+            "message": self.message,
+        }

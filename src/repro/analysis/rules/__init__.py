@@ -1,0 +1,19 @@
+"""Rule registry for the repro invariant analyzer."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Type
+
+from repro.analysis.core import Rule
+from repro.analysis.rules.det import Det01
+from repro.analysis.rules.evt import Evt01
+from repro.analysis.rules.jax_purity import Jax01
+from repro.analysis.rules.key import Key01
+from repro.analysis.rules.lock import Lock01
+
+ALL_RULES: List[Type[Rule]] = [Det01, Key01, Lock01, Evt01, Jax01]
+
+RULES_BY_ID: Dict[str, Type[Rule]] = {r.id: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_ID",
+           "Det01", "Key01", "Lock01", "Evt01", "Jax01"]

@@ -1,0 +1,106 @@
+"""DET01 — determinism of the simulation core.
+
+The planner is only trustworthy because a ``TraceSession`` is a pure
+function of (trace, configuration): cone-memoized re-simulation must be
+bit-identical to a fresh run. Wall-clock reads and global-state RNG
+break that silently, so inside ``repro.sim``, ``repro.core`` and
+``repro.workload`` this rule bans:
+
+* wall-clock calls — ``time.time``/``perf_counter``/``monotonic`` (and
+  ``_ns`` variants), ``datetime.now``/``utcnow``/``today``;
+* legacy global-RNG numpy calls — any ``np.random.<fn>()`` other than
+  ``default_rng`` (module-level numpy RNG state is shared and
+  call-order dependent);
+* unseeded generators — ``np.random.default_rng()`` with no arguments;
+* stdlib ``random.<fn>()`` module-level calls (same global-state
+  problem) when the module imports ``random``.
+
+Passing an explicit seed (``default_rng(seed)``) is the blessed idiom —
+exactly what ``SimEngine.edge_draws`` does so routing draws are frozen
+across the whole candidate search.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Sequence
+
+from repro.analysis.core import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.source import ModuleSource, dotted_name
+
+DETERMINISTIC_PACKAGES = ("repro/sim/", "repro/core/", "repro/workload/")
+
+WALL_CLOCK = {
+    "time.time", "time.time_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today", "date.today",
+}
+
+# stdlib `random` module-level functions (all share one hidden Random())
+STDLIB_RANDOM = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "normalvariate", "expovariate",
+    "betavariate", "seed", "getrandbits", "triangular", "vonmisesvariate",
+    "paretovariate", "weibullvariate", "lognormvariate", "random_bytes",
+}
+
+_NUMPY_ROOTS = ("np.random.", "numpy.random.")
+
+
+class Det01(Rule):
+    id = "DET01"
+    title = ("no wall-clock or unseeded/global-state RNG in the "
+             "simulation core (repro.sim / repro.core / repro.workload)")
+
+    def check(self, modules: Sequence[ModuleSource]) -> Iterable[Finding]:
+        for mod in modules:
+            if not mod.in_package(*DETERMINISTIC_PACKAGES):
+                continue
+            imports_random = any(
+                isinstance(n, ast.Import)
+                and any(a.name == "random" for a in n.names)
+                for n in ast.walk(mod.tree))
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                if name in WALL_CLOCK:
+                    yield self.finding(
+                        mod, node,
+                        f"wall-clock call {name}() in the deterministic "
+                        f"simulation core — results must be a pure "
+                        f"function of (trace, config); take times from "
+                        f"the trace or a parameter")
+                    continue
+                for root in _NUMPY_ROOTS:
+                    if name.startswith(root):
+                        tail = name[len(root):]
+                        if tail == "default_rng":
+                            if not node.args and not node.keywords:
+                                yield self.finding(
+                                    mod, node,
+                                    "np.random.default_rng() without an "
+                                    "explicit seed — pass a seed so "
+                                    "repeat simulations are bit-"
+                                    "identical")
+                        elif "." not in tail and tail[:1].islower():
+                            yield self.finding(
+                                mod, node,
+                                f"global-state RNG call np.random.{tail}"
+                                f"() — use a seeded np.random."
+                                f"default_rng(seed) generator instead")
+                        break
+                else:
+                    if (imports_random and name.startswith("random.")
+                            and name.count(".") == 1
+                            and name.split(".")[1] in STDLIB_RANDOM):
+                        yield self.finding(
+                            mod, node,
+                            f"stdlib global-state RNG call {name}() — "
+                            f"use a seeded np.random.default_rng(seed)")

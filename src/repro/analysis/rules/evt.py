@@ -1,0 +1,183 @@
+"""EVT01 — control-event streams must be sorted by time (PR 2 class).
+
+``ReplicaPool.apply_events`` and the schedule folds walk their event
+list with a monotone cursor: an out-of-order event is silently never
+applied, which is exactly the unsorted control-event bug PR 2 fixed.
+Whole-program dataflow ("is this list sorted here?") is infeasible, so
+the rule pins the burden of proof at the consumer boundaries instead:
+
+1. every schedule class whose ``__init__`` takes an ``events`` stream
+   (``ReplicaPool``, ``ShedMarginSchedule``, ``PolicySchedule``, and
+   anything shaped like them in the deterministic core) must sort it
+   before storing — a ``sorted(events...)`` call or an
+   ``<alias>.sort(...)`` statement in ``__init__``;
+2. ``fold_control_event`` (the incremental event folder) must re-sort
+   after appending — an ``.append``/``.insert`` without any
+   ``.sort``/``sorted`` in the same function is a finding;
+3. call sites handing a LITERAL event list to a consumer
+   (``fold_control_event``, ``apply_events``, or a schedule
+   constructor) with statically decreasing timestamps are flagged
+   directly — the one case sortedness is decidable at the call site.
+
+Sorting must be time-stable: ``sorted(ev, key=lambda e: e[0])`` keeps
+same-timestamp events (e.g. a ``(t,+1),(t,-1)`` churn pair) in arrival
+order, where a full-tuple sort would reorder them and change drain
+semantics. The rule accepts either spelling but the repo idiom is the
+stable one.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.core import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.source import ModuleSource, dotted_name
+
+CORE_PACKAGES = ("repro/core/", "repro/sim/", "repro/workload/", "repro/")
+
+EVENT_PARAM = "events"
+CONSUMERS = {"fold_control_event", "apply_events",
+             "ReplicaPool", "ShedMarginSchedule", "PolicySchedule"}
+
+
+def _calls_sorted_on(fn: ast.FunctionDef, param: str) -> bool:
+    """True iff `fn` passes `param` (or an alias of it) through
+    ``sorted(...)`` or calls ``.sort()`` on it."""
+    aliases = {param}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            names = {n.id for n in ast.walk(node.value)
+                     if isinstance(n, ast.Name)}
+            if names & aliases:
+                aliases.add(node.targets[0].id)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Name) and node.func.id == "sorted":
+            names = {n.id for a in node.args for n in ast.walk(a)
+                     if isinstance(n, ast.Name)}
+            if names & aliases:
+                return True
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "sort"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in aliases):
+            return True
+    return False
+
+
+def _has_call(fn: ast.FunctionDef, attr_names: Sequence[str]) -> bool:
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in attr_names):
+            return True
+    return False
+
+
+def _has_sort(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Name) and node.func.id == "sorted":
+            return True
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "sort":
+            return True
+    return False
+
+
+def _literal_timestamps(node: ast.AST) -> Optional[List[float]]:
+    """First components of a literal list/tuple of event tuples, or
+    None when the argument is not statically analyzable."""
+    if not isinstance(node, (ast.List, ast.Tuple)):
+        return None
+    ts: List[float] = []
+    for elt in node.elts:
+        if not isinstance(elt, (ast.Tuple, ast.List)) or not elt.elts:
+            return None
+        first = elt.elts[0]
+        if isinstance(first, ast.UnaryOp) and isinstance(first.op, ast.USub):
+            first = first.operand
+            sign = -1.0
+        else:
+            sign = 1.0
+        if (isinstance(first, ast.Constant)
+                and isinstance(first.value, (int, float))):
+            ts.append(sign * float(first.value))
+        else:
+            return None
+    return ts
+
+
+class Evt01(Rule):
+    id = "EVT01"
+    title = ("event streams reaching apply_events/fold_control_event "
+             "must be provably sorted by time")
+
+    def check(self, modules: Sequence[ModuleSource]) -> Iterable[Finding]:
+        for mod in modules:
+            if not mod.in_package(*CORE_PACKAGES):
+                continue
+            yield from self._check_constructors(mod)
+            yield from self._check_folders(mod)
+            yield from self._check_literal_sites(mod)
+
+    # -- 1. schedule constructors must sort ---------------------------------
+    def _check_constructors(self, mod: ModuleSource) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            init = next((n for n in node.body
+                         if isinstance(n, ast.FunctionDef)
+                         and n.name == "__init__"), None)
+            if init is None:
+                continue
+            params = {a.arg for a in init.args.args}
+            params |= {a.arg for a in init.args.kwonlyargs}
+            if EVENT_PARAM not in params:
+                continue
+            if not _calls_sorted_on(init, EVENT_PARAM):
+                yield self.finding(
+                    mod, init,
+                    f"{node.name}.__init__ stores its `{EVENT_PARAM}` "
+                    f"stream without sorting it — apply/fold cursors "
+                    f"silently skip out-of-order events (the PR 2 bug "
+                    f"class); use sorted({EVENT_PARAM}, key=lambda e: "
+                    f"e[0]) to stay stable for same-t pairs")
+
+    # -- 2. incremental folders must re-sort after append -------------------
+    def _check_folders(self, mod: ModuleSource) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name == "fold_control_event"):
+                continue
+            if (_has_call(node, ("append", "insert"))
+                    and not _has_sort(node)):
+                yield self.finding(
+                    mod, node,
+                    "fold_control_event appends to a schedule without "
+                    "re-sorting — a late control event lands after "
+                    "earlier-times and is skipped by the replay cursor")
+
+    # -- 3. statically decreasing literal event lists -----------------------
+    def _check_literal_sites(self, mod: ModuleSource) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None or name.split(".")[-1] not in CONSUMERS:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                ts = _literal_timestamps(arg)
+                if ts is None:
+                    continue
+                if any(b < a for a, b in zip(ts, ts[1:])):
+                    yield self.finding(
+                        mod, node,
+                        f"literal event list passed to "
+                        f"{name.split('.')[-1]} has decreasing "
+                        f"timestamps {ts} — sort the stream by time "
+                        f"before handing it to the consumer")

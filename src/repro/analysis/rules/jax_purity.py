@@ -1,0 +1,240 @@
+"""JAX01 — purity of traced bodies (lax.scan steps, Pallas kernels).
+
+JAX traces a body function ONCE and replays the captured computation;
+anything the body does on the host side happens at trace time, not at
+run time. Closure mutation runs once instead of per-step, Python
+``if``/``while`` on a traced value raises ``TracerBoolConversionError``
+at best and silently bakes in one branch at worst, and float64
+literals upcast against the repo's float32 kernel contract (TPU has no
+f64 vector unit; x64 is disabled by default).
+
+The rule finds traced bodies structurally — the function reference in:
+
+* ``lax.scan(body, ...)`` / ``jax.lax.scan`` (arg 0)
+* ``lax.while_loop(cond, body, ...)`` (args 0 and 1)
+* ``lax.fori_loop(lo, hi, body, ...)`` (arg 2)
+* ``lax.map(body, ...)`` (arg 0)
+* ``jax.jit(fn)`` / ``jax.vmap(fn)`` (arg 0) and as decorators
+* ``pl.pallas_call(kernel, ...)`` (arg 0)
+
+resolving ``functools.partial(fn, ...)`` and plain ``Name`` references
+to function defs in the same module. Inside each traced body it flags:
+
+* ``global`` / ``nonlocal`` declarations (closure mutation);
+* mutating calls (``.append``/``.extend``/``pop``/…) or subscript
+  stores on FREE variables (host-state writes from inside the trace);
+* ``print(...)`` (host side effect; use ``jax.debug.print``);
+* float64 literals — ``jnp.float64``/``np.float64`` references or
+  ``"float64"`` dtype strings;
+* Python ``if``/``while`` whose test references a local or parameter
+  of a traced function. Free variables of the OUTER factory (compile-
+  time flags like ``with_timeout``) stay legal — branching on them
+  specializes the trace, which is the intended idiom.
+
+Scope: ``repro/sim/`` and ``repro/kernels/`` — the two places traced
+code lives.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.source import ModuleSource, dotted_name
+
+JAX_PACKAGES = ("repro/sim/", "repro/kernels/")
+
+# terminal callable name -> indices of traced-function arguments
+TRACED_ARGS = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "map": (0,),
+    "jit": (0,),
+    "vmap": (0,),
+    "pallas_call": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+}
+
+# only treat `map` as traced when it is an attribute call (lax.map),
+# never the Python builtin
+_ATTR_ONLY = {"map", "scan"}
+
+MUTATING_METHODS = {"append", "extend", "insert", "pop", "remove",
+                    "clear", "update", "add", "setdefault", "popitem",
+                    "write", "setattr"}
+
+FnDef = ast.FunctionDef
+
+
+def _resolve_fn(node: ast.AST, local_fns: Dict[str, FnDef]
+                ) -> Optional[FnDef]:
+    """Resolve an argument expression to a function def in this module:
+    a bare Name, a lambda, or functools.partial(fn, ...)."""
+    if isinstance(node, ast.Name):
+        return local_fns.get(node.id)
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name and name.split(".")[-1] == "partial" and node.args:
+            return _resolve_fn(node.args[0], local_fns)
+    return None
+
+
+def _assigned_names(fn: FnDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and node is not fn:
+            out.add(node.name)
+    return out
+
+
+def _param_names(fn: FnDef) -> Set[str]:
+    a = fn.args
+    names = {p.arg for p in a.args + a.kwonlyargs + a.posonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+class Jax01(Rule):
+    id = "JAX01"
+    title = ("lax.scan bodies and Pallas kernels must be pure: no "
+             "closure mutation, host writes, float64 literals, or "
+             "Python branching on traced values")
+
+    def check(self, modules: Sequence[ModuleSource]) -> Iterable[Finding]:
+        for mod in modules:
+            if not mod.in_package(*JAX_PACKAGES):
+                continue
+            yield from self._check_module(mod)
+
+    def _traced_fns(self, mod: ModuleSource) -> List[FnDef]:
+        local_fns: Dict[str, FnDef] = {
+            n.name: n for n in ast.walk(mod.tree)
+            if isinstance(n, ast.FunctionDef)}
+        traced: List[FnDef] = []
+        seen: Set[int] = set()
+
+        def mark(fn: Optional[FnDef]) -> None:
+            if fn is not None and id(fn) not in seen:
+                seen.add(id(fn))
+                traced.append(fn)
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                tail = name.split(".")[-1]
+                idxs = TRACED_ARGS.get(tail)
+                if idxs is None:
+                    continue
+                if tail in _ATTR_ONLY and "." not in name:
+                    continue
+                for i in idxs:
+                    if i < len(node.args):
+                        mark(_resolve_fn(node.args[i], local_fns))
+            elif isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    dname = dotted_name(
+                        dec.func if isinstance(dec, ast.Call) else dec)
+                    if dname and dname.split(".")[-1] in ("jit", "vmap",
+                                                          "checkpoint",
+                                                          "remat"):
+                        mark(node)
+        return traced
+
+    def _check_module(self, mod: ModuleSource) -> Iterable[Finding]:
+        traced = self._traced_fns(mod)
+        if not traced:
+            return
+        # locals/params of every traced fn, for the branching check;
+        # a nested traced fn also counts its enclosing traced fns
+        bound: Dict[int, Set[str]] = {
+            id(fn): _param_names(fn) | _assigned_names(fn)
+            for fn in traced}
+        for fn in traced:
+            yield from self._check_body(mod, fn, bound)
+
+    def _check_body(self, mod: ModuleSource, fn: FnDef,
+                    bound: Dict[int, Set[str]]) -> Iterable[Finding]:
+        own = bound[id(fn)]
+        label = f"traced body {fn.name}()"
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                yield self.finding(
+                    mod, node,
+                    f"{label} declares "
+                    f"{'global' if isinstance(node, ast.Global) else 'nonlocal'}"
+                    f" {', '.join(node.names)} — closure mutation runs "
+                    f"at trace time, once, not per step")
+            elif isinstance(node, ast.Call):
+                cname = dotted_name(node.func)
+                if cname == "print":
+                    yield self.finding(
+                        mod, node,
+                        f"{label} calls print() — host side effect at "
+                        f"trace time; use jax.debug.print for runtime "
+                        f"values")
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in MUTATING_METHODS
+                      and isinstance(node.func.value, ast.Name)
+                      and node.func.value.id not in own):
+                    yield self.finding(
+                        mod, node,
+                        f"{label} mutates free variable "
+                        f"{node.func.value.id!r} via ."
+                        f"{node.func.attr}() — host-state write from "
+                        f"inside the trace happens once, at trace time")
+            elif isinstance(node, ast.Subscript) and isinstance(
+                    node.ctx, (ast.Store, ast.Del)):
+                base = node.value
+                if isinstance(base, ast.Name) and base.id not in own:
+                    yield self.finding(
+                        mod, node,
+                        f"{label} writes {base.id}[...] on a free "
+                        f"variable — host-state write from inside the "
+                        f"trace; carry state through the scan carry "
+                        f"instead")
+            elif isinstance(node, ast.Attribute):
+                if node.attr == "float64":
+                    yield self.finding(
+                        mod, node,
+                        f"{label} references float64 — x64 is disabled "
+                        f"and the kernel contract is float32; this "
+                        f"either upcasts or silently truncates")
+            elif (isinstance(node, ast.Constant)
+                  and node.value == "float64"):
+                yield self.finding(
+                    mod, node,
+                    f"{label} uses a \"float64\" dtype string — the "
+                    f"kernel contract is float32")
+            elif isinstance(node, (ast.If, ast.While)):
+                # `x is None` / `x is not None` is static under tracing
+                # (array-vs-None structure is fixed at trace time) —
+                # the standard optional-mask idiom stays legal
+                if (isinstance(node.test, ast.Compare)
+                        and all(isinstance(op, (ast.Is, ast.IsNot))
+                                for op in node.test.ops)):
+                    continue
+                test_names = {n.id for n in ast.walk(node.test)
+                              if isinstance(n, ast.Name)}
+                traced_refs = sorted(test_names & own)
+                if traced_refs:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        mod, node,
+                        f"{label} branches with Python `{kind}` on "
+                        f"{', '.join(traced_refs)} — traced values "
+                        f"cannot drive host control flow; use "
+                        f"lax.cond/lax.select (compile-time flags from "
+                        f"the enclosing factory are fine)")

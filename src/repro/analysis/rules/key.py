@@ -1,0 +1,257 @@
+"""KEY01 — cache-key completeness (the PR 6 stale-cone bug class).
+
+``TraceSession`` memoizes per-stage outcomes on the stage's
+configuration cone; if any configuration knob is missing from the cone
+key, two different configurations collide on one cache entry and the
+planner silently scores stale results (exactly the backend-missing-
+from-cache-keys bug PR 6 fixed). This rule walks the defining ASTs and
+the key-function ASTs and cross-checks them:
+
+1. every dataclass field of ``StageConfig`` (repro/core/pipeline.py)
+   must be read (``self.<field>``) inside ``StageConfig.key()``;
+2. the schedule key helpers in repro/sim/engine.py (``_sched_key``,
+   ``_shed_key``, ``_policy_key``) must fold EVERY component of the
+   event tuples they iterate: a comprehension binding ``(t, d)`` must
+   use both names in the emitted element, and the unpack arity must
+   match the event arity of the corresponding schedule class in
+   repro/core/policy.py (``ReplicaPool`` events, ``ShedMarginSchedule``,
+   ``PolicySchedule``);
+3. ``TraceSession._stage_key`` must token the backend
+   (``self.backend``), call ``StageConfig.key()`` and all three
+   schedule-key helpers; the percentile caches (``percentile``,
+   ``class_percentile``) must also carry ``self.backend``.
+
+The rule is silent when a registry file is absent from the scanned set
+(fixture trees check one file at a time), but a present file missing
+its registered definitions is a finding — deleting ``key()`` must not
+pass the checker.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.core import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.source import ModuleSource
+
+PIPELINE_FILE = "repro/core/pipeline.py"
+ENGINE_FILE = "repro/sim/engine.py"
+POLICY_FILE = "repro/core/policy.py"
+
+# engine schedule-key helper -> (policy.py class carrying the event
+# stream, fallback event arity when policy.py is absent)
+SCHEDULE_KEYS = {
+    "_sched_key": ("ReplicaPool", 2),
+    "_shed_key": ("ShedMarginSchedule", 2),
+    "_policy_key": ("PolicySchedule", 2),
+}
+
+# TraceSession methods whose cache keys must carry the backend token
+BACKEND_KEYED = ("_stage_key", "percentile", "class_percentile")
+
+
+def _find_class(mod: ModuleSource, name: str) -> Optional[ast.ClassDef]:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_method(cls: ast.ClassDef, name: str) -> Optional[ast.FunctionDef]:
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _self_attrs_read(fn: ast.FunctionDef) -> Set[str]:
+    """Attribute names read off the first parameter (``self.<x>``)."""
+    if not fn.args.args:
+        return set()
+    self_name = fn.args.args[0].arg
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == self_name):
+            out.add(node.attr)
+    return out
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> List[ast.AnnAssign]:
+    out = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                          ast.Name):
+            ann = ast.unparse(node.annotation)
+            if "ClassVar" not in ann:
+                out.append(node)
+    return out
+
+
+def _tuple_unpack_names(target: ast.AST) -> Optional[List[str]]:
+    if isinstance(target, (ast.Tuple, ast.List)):
+        names = []
+        for elt in target.elts:
+            if isinstance(elt, ast.Name):
+                names.append(elt.id)
+            else:
+                return None
+        return names
+    return None
+
+
+def _event_arity(policy_mod: ModuleSource, cls_name: str) -> Optional[int]:
+    """Widest event-tuple unpack arity used by a schedule class — the
+    number of components a corresponding key function must fold."""
+    cls = _find_class(policy_mod, cls_name)
+    if cls is None:
+        return None
+    arity: Optional[int] = None
+    for node in ast.walk(cls):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.comprehension):
+            targets.append(node.target)
+        elif isinstance(node, ast.Assign):
+            targets.extend(node.targets)
+        elif isinstance(node, ast.For):
+            targets.append(node.target)
+        for t in targets:
+            names = _tuple_unpack_names(t)
+            if names:
+                arity = max(arity or 0, len(names))
+    return arity
+
+
+class Key01(Rule):
+    id = "KEY01"
+    title = ("cache-key completeness: every StageConfig field and every "
+             "schedule-event component must reach the cone cache keys")
+
+    def check(self, modules: Sequence[ModuleSource]) -> Iterable[Finding]:
+        by_suffix: Dict[str, ModuleSource] = {}
+        for m in modules:
+            for suffix in (PIPELINE_FILE, ENGINE_FILE, POLICY_FILE):
+                if m.relpath.endswith(suffix):
+                    by_suffix[suffix] = m
+        pipeline = by_suffix.get(PIPELINE_FILE)
+        engine = by_suffix.get(ENGINE_FILE)
+        policy = by_suffix.get(POLICY_FILE)
+        if pipeline is not None:
+            yield from self._check_stage_config(pipeline)
+        if engine is not None:
+            yield from self._check_engine(engine, policy)
+
+    # -- StageConfig.key() covers every field -------------------------------
+    def _check_stage_config(self, mod: ModuleSource) -> Iterable[Finding]:
+        cls = _find_class(mod, "StageConfig")
+        if cls is None:
+            return
+        fields = _dataclass_fields(cls)
+        key_fn = _find_method(cls, "key")
+        if key_fn is None:
+            yield self.finding(
+                mod, cls,
+                "StageConfig has no key() method — simulation caches "
+                "have no config identity to key on")
+            return
+        read = _self_attrs_read(key_fn)
+        for field in fields:
+            fname = field.target.id  # type: ignore[union-attr]
+            if fname not in read:
+                yield self.finding(
+                    mod, key_fn,
+                    f"StageConfig field {fname!r} is not folded into "
+                    f"key() — two configs differing only in {fname!r} "
+                    f"collide on one stage-cache entry (the PR 6 "
+                    f"stale-cone bug class)")
+
+    # -- engine key helpers + TraceSession backend token --------------------
+    def _check_engine(self, engine: ModuleSource,
+                      policy: Optional[ModuleSource]) -> Iterable[Finding]:
+        fns: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in engine.tree.body
+            if isinstance(n, ast.FunctionDef)}
+        for kname, (cls_name, fallback) in SCHEDULE_KEYS.items():
+            fn = fns.get(kname)
+            if fn is None:
+                yield Finding(
+                    self.id, engine.relpath, 1, 1, "<module>",
+                    f"schedule key helper {kname}() is missing — "
+                    f"schedules cannot reach the cone cache keys")
+                continue
+            expected = fallback
+            if policy is not None:
+                expected = _event_arity(policy, cls_name) or fallback
+            yield from self._check_key_fn(engine, fn, expected, cls_name)
+
+        session = _find_class(engine, "TraceSession")
+        if session is None:
+            return
+        for mname in BACKEND_KEYED:
+            fn = _find_method(session, mname)
+            if fn is None:
+                continue
+            if "backend" not in _self_attrs_read(fn):
+                yield self.finding(
+                    engine, fn,
+                    f"TraceSession.{mname} builds a cache key without "
+                    f"the backend token (self.backend) — a parity "
+                    f"regression between backends becomes maskable by "
+                    f"a cache hit (the PR 6 bug)")
+        stage_key = _find_method(session, "_stage_key")
+        if stage_key is not None:
+            called = set()
+            for node in ast.walk(stage_key):
+                if isinstance(node, ast.Call):
+                    # terminal name, so `config[s].key()` counts too
+                    if isinstance(node.func, ast.Attribute):
+                        called.add(node.func.attr)
+                    elif isinstance(node.func, ast.Name):
+                        called.add(node.func.id)
+            for required in ("key", *SCHEDULE_KEYS):
+                if required not in called:
+                    yield self.finding(
+                        engine, stage_key,
+                        f"TraceSession._stage_key does not call "
+                        f"{required}() — that configuration dimension "
+                        f"never reaches the cone cache key")
+
+    def _check_key_fn(self, mod: ModuleSource, fn: ast.FunctionDef,
+                      expected_arity: int, cls_name: str
+                      ) -> Iterable[Finding]:
+        comps = [n for n in ast.walk(fn) if isinstance(n, ast.comprehension)]
+        if not comps:
+            yield self.finding(
+                mod, fn,
+                f"{fn.name}() has no per-event fold (comprehension) — "
+                f"cannot verify every event component reaches the key")
+            return
+        for comp in comps:
+            names = _tuple_unpack_names(comp.target)
+            if names is None:
+                continue
+            if len(names) != expected_arity:
+                yield self.finding(
+                    mod, fn,
+                    f"{fn.name}() unpacks {len(names)} event "
+                    f"component(s) but {cls_name} events carry "
+                    f"{expected_arity} — a schedule component is "
+                    f"invisible to the cache key")
+            # the emitted element must use every bound component
+            parent = mod.parent.get(comp)
+            elt = getattr(parent, "elt", None)
+            if elt is None:
+                continue
+            used = {n.id for n in ast.walk(elt)
+                    if isinstance(n, ast.Name)}
+            for bound in names:
+                if bound != "_" and bound not in used:
+                    yield self.finding(
+                        mod, fn,
+                        f"{fn.name}() binds event component {bound!r} "
+                        f"but drops it from the emitted key — two "
+                        f"schedules differing only in {bound!r} "
+                        f"collide on one cache entry")

@@ -1,0 +1,220 @@
+"""LOCK01 — lock discipline in the wall-clock serving layer (PR 5 class).
+
+The executor's shutdown race shipped because nothing tied shared
+attributes to the lock that guards them. This rule makes the tie
+explicit and machine-checked via two comment annotations:
+
+* ``# guarded-by: <lock>`` on an attribute's initializing assignment
+  (``self.attr = ...  # guarded-by: cond``) registers the attribute as
+  guarded by the lock attribute named ``<lock>`` (the terminal name of
+  a ``threading.Lock``/``Condition``-holding attribute, e.g. ``cond``
+  or ``_lock``);
+* ``# holds-lock: <lock>[, <lock>...]`` on a ``def`` line declares that
+  the function is only ever called with those locks held (the
+  Clang-thread-safety ``REQUIRES()`` idiom for private helpers).
+
+Every read/write of a registered attribute (``<base>.<attr>``) must
+then occur lexically inside a ``with <expr>:`` whose resolved terminal
+attribute name equals the guarding lock (simple aliases like
+``cond = st.cond`` are resolved), inside a function annotated
+``holds-lock``, or inside the ``__init__`` of the class that declared
+the attribute (construction precedes sharing). Everything else is a
+finding.
+
+Matching is by terminal lock NAME, not full object path — the registry
+cannot type-infer which instance ``st`` refers to. That approximation
+admits holding the wrong instance's ``cond``, but catches the real
+shipped bug class: accesses with NO lock held at all.
+
+Scope: modules under ``repro/serving/`` plus any module that carries
+``guarded-by`` annotations (so fixtures and future packages opt in by
+annotating).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Rule
+from repro.analysis.findings import Finding
+from repro.analysis.source import ModuleSource, dotted_name
+
+SERVING_PACKAGE = "repro/serving/"
+
+GUARD_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w.]*)")
+HOLDS_RE = re.compile(
+    r"#\s*holds-lock:\s*([A-Za-z_][\w.]*(?:\s*,\s*[A-Za-z_][\w.]*)*)")
+
+
+def _terminal(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+class _Registry:
+    """attr name -> {declaring class (terminal name) -> lock name}."""
+
+    def __init__(self):
+        self.guards: Dict[str, Dict[str, str]] = {}
+
+    def declare(self, attr: str, lock: str, cls_qual: str) -> None:
+        self.guards.setdefault(attr, {})[_terminal(cls_qual)] = \
+            _terminal(lock)
+
+
+def _collect_registry(mod: ModuleSource, reg: _Registry) -> None:
+    for node in ast.walk(mod.tree):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, ast.AnnAssign):
+            targets = [node.target]
+        else:
+            continue
+        comment = mod.comments.get(node.lineno, "")
+        m = GUARD_RE.search(comment)
+        if not m:
+            continue
+        for t in targets:
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)):
+                # `self.attr = ...` inside a method
+                scope = mod.scope_of(node)          # e.g. _Stage.__init__
+                cls_qual = scope.rsplit(".", 1)[0] if "." in scope else scope
+                reg.declare(t.attr, m.group(1), cls_qual)
+            elif (isinstance(t, ast.Name)
+                  and isinstance(mod.parent.get(node), ast.ClassDef)):
+                # dataclass-style class-body field annotation
+                reg.declare(t.id, m.group(1), mod.scope_of(node))
+
+
+def _receiver_class(mod: ModuleSource, node: ast.Attribute) -> Optional[str]:
+    """Best-effort terminal class name of the access's base object:
+    ``self`` resolves to the enclosing class; a plain name resolves via
+    the enclosing functions' parameter annotations. None = unknown
+    (checked conservatively against every declaring class)."""
+    if not isinstance(node.value, ast.Name):
+        return None
+    base = node.value.id
+    fns = list(mod.enclosing_functions(node))
+    if base in ("self", "cls"):
+        for fn in fns:
+            if fn.args.args and fn.args.args[0].arg == base:
+                cls = mod.parent.get(fn)
+                if isinstance(cls, ast.ClassDef):
+                    return cls.name
+    for fn in fns:
+        for p in fn.args.args + fn.args.kwonlyargs + fn.args.posonlyargs:
+            if p.arg != base or p.annotation is None:
+                continue
+            ann = p.annotation
+            if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+                return _terminal(ann.value.strip("'\""))
+            name = dotted_name(ann)
+            if name is not None:
+                return _terminal(name)
+    return None
+
+
+def _local_aliases(fn: ast.FunctionDef) -> Dict[str, str]:
+    """name -> dotted value for simple `name = a.b.c` assignments."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            val = dotted_name(node.value)
+            if val is not None:
+                out[node.targets[0].id] = val
+    return out
+
+
+def _held_locks(mod: ModuleSource, node: ast.AST) -> Set[str]:
+    """Terminal names of every lock held at `node` (lexical `with`
+    blocks, alias-resolved, plus enclosing holds-lock annotations)."""
+    held: Set[str] = set()
+    fn_chain = list(mod.enclosing_functions(node))
+    aliases: Dict[str, str] = {}
+    for fn in fn_chain:
+        aliases.update(_local_aliases(fn))
+        m = HOLDS_RE.search(mod.comments.get(fn.lineno, ""))
+        if m:
+            for lock in m.group(1).split(","):
+                held.add(_terminal(lock.strip()))
+    cur: Optional[ast.AST] = mod.parent.get(node)
+    while cur is not None:
+        if isinstance(cur, ast.With):
+            for item in cur.items:
+                name = dotted_name(item.context_expr)
+                if name is None:
+                    continue
+                resolved = aliases.get(name, name)
+                held.add(_terminal(resolved))
+        cur = mod.parent.get(cur)
+    return held
+
+
+class Lock01(Rule):
+    id = "LOCK01"
+    title = ("guarded-by lock discipline on shared executor/loop "
+             "attributes (repro.serving)")
+
+    def check(self, modules: Sequence[ModuleSource]) -> Iterable[Finding]:
+        reg = _Registry()
+        checked: List[ModuleSource] = []
+        for mod in modules:
+            has_annotations = any(GUARD_RE.search(c)
+                                  for c in mod.comments.values())
+            if has_annotations:
+                _collect_registry(mod, reg)
+            if has_annotations or mod.in_package(SERVING_PACKAGE):
+                checked.append(mod)
+        if not reg.guards:
+            return
+        for mod in checked:
+            yield from self._check_module(mod, reg)
+
+    def _check_module(self, mod: ModuleSource,
+                      reg: _Registry) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            by_cls = reg.guards.get(node.attr)
+            if by_cls is None:
+                continue
+            recv = _receiver_class(mod, node)
+            if recv is not None:
+                lock = by_cls.get(recv)
+                if lock is None:      # same attr name on another class
+                    continue
+                declaring = recv
+            elif len(by_cls) == 1:
+                declaring, lock = next(iter(by_cls.items()))
+            else:
+                # ambiguous receiver over several guarded classes:
+                # holding ANY of the candidate locks satisfies the rule
+                declaring = "/".join(sorted(by_cls))
+                lock = None
+            # construction in the declaring class's own __init__
+            # precedes sharing
+            scope = mod.scope_of(node)
+            if any(scope == f"{c}.__init__"
+                   or scope.endswith(f".{c}.__init__") for c in by_cls):
+                continue
+            held = _held_locks(mod, node)
+            if lock is not None:
+                if lock in held:
+                    continue
+                locks_msg = lock
+            else:
+                if set(by_cls.values()) & held:
+                    continue
+                locks_msg = "/".join(sorted(set(by_cls.values())))
+            access = "write of" if isinstance(
+                node.ctx, (ast.Store, ast.Del)) else "read of"
+            base = dotted_name(node.value) or "<expr>"
+            yield self.finding(
+                mod, node,
+                f"{access} guarded attribute {base}.{node.attr} outside "
+                f"`with {locks_msg}` (declared guarded-by {locks_msg} "
+                f"in {declaring}) — the PR 5 executor race class")

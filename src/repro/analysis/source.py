@@ -1,0 +1,139 @@
+"""Parsed-module model shared by every analysis rule.
+
+One :class:`ModuleSource` per file: the AST (with a parent map and
+precomputed qualnames), the raw comment table from ``tokenize`` (rules
+parse their own annotations out of it, e.g. LOCK01's ``# guarded-by:``),
+and the inline-suppression table (``# analysis: allow RULE — why``).
+
+Everything here is pure stdlib — the analyzer must be runnable in a CI
+job with no third-party installs.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+# Inline suppression: `# analysis: allow DET01 — justification`.
+# The justification is MANDATORY: a bare allow does not suppress (the
+# finding stands, annotated), so every silenced invariant carries its
+# why next to the code.
+ALLOW_RE = re.compile(
+    r"#\s*analysis:\s*allow\s+([A-Z]+\d+)\s*(?:[-—:]\s*(\S.*))?")
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def names_in(node: ast.AST) -> set:
+    """All bare Name identifiers referenced under `node`."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+class ModuleSource:
+    """One parsed source file plus the lookup tables rules need."""
+
+    def __init__(self, path: Path, relpath: str, text: str):
+        self.path = path
+        self.relpath = relpath      # posix, relative to the scan root
+        self.text = text
+        self.tree = ast.parse(text, filename=str(path))
+        # parent links + enclosing-scope qualnames, one walk
+        self.parent: Dict[ast.AST, ast.AST] = {}
+        self.qualname: Dict[ast.AST, str] = {self.tree: "<module>"}
+        stack: List[Tuple[ast.AST, str]] = [(self.tree, "")]
+        while stack:
+            node, prefix = stack.pop()
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)):
+                    q = f"{prefix}.{child.name}" if prefix else child.name
+                    self.qualname[child] = q
+                    stack.append((child, q))
+                else:
+                    stack.append((child, prefix))
+        # comment table: line -> comment text (incl. leading '#')
+        self.comments: Dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenizeError:  # pragma: no cover - ast parsed OK
+            pass
+        # inline suppressions: line -> {rule: justification}
+        self.allow: Dict[int, Dict[str, str]] = {}
+        for line, comment in self.comments.items():
+            m = ALLOW_RE.search(comment)
+            if m and m.group(2):
+                self.allow.setdefault(line, {})[m.group(1)] = m.group(2)
+        # line -> first line of the innermost statement covering it, so a
+        # suppression on a multi-line statement's first line covers the
+        # whole span
+        self.stmt_start: Dict[int, int] = {}
+        spans: Dict[int, int] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.stmt) and node.end_lineno is not None:
+                size = node.end_lineno - node.lineno
+                for ln in range(node.lineno, node.end_lineno + 1):
+                    if ln not in spans or size < spans[ln]:
+                        spans[ln] = size
+                        self.stmt_start[ln] = node.lineno
+
+    # -- scope helpers ------------------------------------------------------
+    def scope_of(self, node: ast.AST) -> str:
+        """Dotted qualname of the nearest enclosing def/class."""
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            q = self.qualname.get(cur)
+            if q is not None:
+                return q
+            cur = self.parent.get(cur)
+        return "<module>"
+
+    def enclosing_functions(self, node: ast.AST
+                            ) -> Iterator[ast.FunctionDef]:
+        """Innermost-first chain of enclosing function definitions."""
+        cur = self.parent.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield cur
+            cur = self.parent.get(cur)
+
+    def suppression(self, rule: str, line: int) -> Optional[str]:
+        """Justification of an inline allow covering (rule, line) —
+        trailing on the line, on the statement's first line, or in the
+        comment block immediately above the statement."""
+        start = self.stmt_start.get(line, line)
+        candidates = [line, start]
+        ln = start - 1
+        while ln in self.comments:      # comment block above the stmt
+            candidates.append(ln)
+            ln -= 1
+        for ln in candidates:
+            just = self.allow.get(ln, {}).get(rule)
+            if just:
+                return just
+        return None
+
+    def in_package(self, *prefixes: str) -> bool:
+        return any(self.relpath.startswith(p) for p in prefixes)
+
+
+def load_module(path: Path, root: Path) -> ModuleSource:
+    text = path.read_text(encoding="utf-8")
+    rel = path.relative_to(root).as_posix()
+    return ModuleSource(path, rel, text)

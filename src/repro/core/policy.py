@@ -143,7 +143,10 @@ class ReplicaPool:
                  events: Optional[Sequence[Tuple[float, int]]]):
         self.free: List[float] = [0.0] * max(replicas, 0)
         heapq.heapify(self.free)
-        self.events = list(events or [])
+        # sort by t only (stable): a same-t (+1,-1) churn pair must keep
+        # arrival order — a full-tuple sort would drain before adding
+        self.events = (sorted(events, key=lambda e: e[0])
+                       if events else [])
         self.ev_i = 0
         self.pending_removals: List[float] = []
 

@@ -42,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -59,14 +60,14 @@ class _Request:
     payload: Any
     deadline: float = float("inf")      # executor-clock seconds
     t_done: Optional[float] = None
-    dropped: bool = False               # shed by an slo-drop stage
+    shed: bool = False                  # shed by an slo-drop stage
     cancelled: bool = False             # released by a timed-out driver
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     # routing state lives ON the request (object identity), so a stale
     # request draining after a run reset can never corrupt the
     # bookkeeping of a new run that reuses its rid
-    visited: set = dataclasses.field(default_factory=set)
-    pending: int = 0                    # branches in flight
+    visited: set = dataclasses.field(default_factory=set)  # guarded-by: _lock
+    pending: int = 0                    # guarded-by: _lock (branches in flight)
 
 
 class _Stage:
@@ -79,18 +80,47 @@ class _Stage:
         self.fn = fn
         self.max_batch = max_batch
         self.solo_latency_s = solo_latency_s
-        self.queue = LiveQueue(policy, timeout_s=timeout_s)
+        self.queue = LiveQueue(policy, timeout_s=timeout_s)  # guarded-by: cond
         self.cond = threading.Condition()
-        self.workers: List[threading.Thread] = []
-        self.target = 0            # configured replica target
-        self.retire_pending = 0
-        self.stop = False
+        self.workers: List[threading.Thread] = []      # guarded-by: cond
+        self.target = 0                 # guarded-by: cond (replica target)
+        self.retire_pending = 0         # guarded-by: cond
+        self.stop = False               # guarded-by: cond
         # cumulative counters (run-relative; reset by start_run)
-        self.arrived = 0
-        self.completed = 0
-        self.dropped = 0
-        self.in_flight = 0
-        self.batch_log: List[Tuple[float, int]] = []   # (t_start, size)
+        self.arrived = 0                # guarded-by: cond
+        self.completed = 0              # guarded-by: cond
+        self.dropped = 0                # guarded-by: cond
+        self.in_flight = 0              # guarded-by: cond
+        self.batch_log: List[Tuple[float, int]] = []   # guarded-by: cond
+
+
+# -- worker-thread crash surfacing ------------------------------------------
+# `_worker_loop` catches model-fn exceptions per batch, but an exception
+# anywhere ELSE in a worker (batch formation, routing, a checker bug)
+# would previously just kill the thread: the pipeline deadlocks quietly
+# and the run times out 300 s later with no cause in sight. A chained
+# `threading.excepthook` routes any uncaught worker exception back to
+# its owning executor, which fails the run loudly.
+_WORKER_OWNERS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_PREV_EXCEPTHOOK: Optional[Callable] = None
+
+
+def _worker_excepthook(hook_args) -> None:
+    owner = _WORKER_OWNERS.get(hook_args.thread)
+    if owner is not None and hook_args.exc_type is not SystemExit:
+        ex, stage = owner[0](), owner[1]
+        if ex is not None:
+            ex._note_worker_failure(stage, hook_args.exc_value)
+    if _PREV_EXCEPTHOOK is not None:    # keep the loud stderr traceback
+        _PREV_EXCEPTHOOK(hook_args)
+
+
+def _install_worker_excepthook() -> None:
+    global _PREV_EXCEPTHOOK
+    if threading.excepthook is _worker_excepthook:
+        return
+    _PREV_EXCEPTHOOK = threading.excepthook
+    threading.excepthook = _worker_excepthook
 
 
 class PipelineExecutor:
@@ -129,17 +159,21 @@ class PipelineExecutor:
         self._lock = threading.Lock()     # guards per-request routing state
         self._children = {s: pipeline.children(s) for s in pipeline.stages}
         self.hop_delay_s = frontend.hop_delay_s if frontend else 0.0
-        self._t0 = time.perf_counter()
+        self._t0 = time.perf_counter()             # guarded-by: _lock
         self._shutdown = False
         self.on_request_done: Optional[Callable[[_Request], None]] = None
+        # (stage, exception) per uncaught worker crash — failing loudly
+        # beats a silent replica loss that deadlocks the run
+        self.worker_failures: List[Tuple[str, BaseException]] = []  # guarded-by: _lock
+        _install_worker_excepthook()
         solo = solo_latency_s or {}
         self._stages: Dict[str, _Stage] = {}
         # (t_effective, +/-delta) per stage; the replica_timeline property
         # derives the sorted cumulative step function, so a scale-up
         # recorded at its future activation instant and a later-issued
         # but earlier-effective scale-down still render in time order
-        self._timeline_deltas: Dict[str, List[Tuple[float, int]]] = {}
-        self._base_replicas: Dict[str, int] = {}
+        self._timeline_deltas: Dict[str, List[Tuple[float, int]]] = {}  # guarded-by: cond
+        self._base_replicas: Dict[str, int] = {}   # guarded-by: cond
         for name, stage in pipeline.stages.items():
             cfg = config[name]
             st = _Stage(name, stage_fns[stage.model_id], cfg.batch_size,
@@ -151,11 +185,15 @@ class PipelineExecutor:
             self._base_replicas[name] = cfg.replicas
             for _ in range(cfg.replicas):
                 self._spawn_worker(st, t_active=0.0)
-            st.target = cfg.replicas
+            with st.cond:       # workers are already running and racing
+                st.target = cfg.replicas
 
     # -- clock -------------------------------------------------------------
     def now(self) -> float:
         """Seconds on the executor clock (zeroed by :meth:`start_run`)."""
+        # analysis: allow LOCK01 — lock-free hot path: a float read is
+        # GIL-atomic and a torn run-boundary timestamp only skews one
+        # wait interval, never correctness
         return time.perf_counter() - self._t0
 
     def start_run(self) -> None:
@@ -166,23 +204,29 @@ class PipelineExecutor:
         nobody — they must not be served against the new clock."""
         with self._lock:
             self._t0 = time.perf_counter()
+            self.worker_failures = []
         for st in self._stages.values():
             with st.cond:
                 st.arrived = st.completed = st.dropped = 0
                 st.batch_log = []
                 st.queue.clear()
-            self._timeline_deltas[st.name] = []
-            self._base_replicas[st.name] = st.target
+                self._timeline_deltas[st.name] = []
+                self._base_replicas[st.name] = st.target
 
     # -- replica lifecycle -------------------------------------------------
     def _spawn_worker(self, st: _Stage, t_active: float) -> None:
         t = threading.Thread(target=self._worker_loop, args=(st, t_active),
                              daemon=True)
+        _WORKER_OWNERS[t] = (weakref.ref(self), st.name)
         with st.cond:                 # workers list is shared state
             st.workers.append(t)
         t.start()
 
-    def _record_delta(self, st: _Stage, t: float, delta: int) -> None:
+    def _note_worker_failure(self, stage: str, exc: BaseException) -> None:
+        with self._lock:
+            self.worker_failures.append((stage, exc))
+
+    def _record_delta(self, st: _Stage, t: float, delta: int) -> None:  # holds-lock: cond
         self._timeline_deltas[st.name].append((t, delta))
 
     @property
@@ -230,7 +274,7 @@ class PipelineExecutor:
     def scale(self, stage: str, replicas: int) -> None:
         """Runtime replica scaling to an absolute target — both
         directions (scale-down drains)."""
-        cur = self._stages[stage].target
+        cur = self.replica_target(stage)
         if replicas > cur:
             self.add_replicas(stage, replicas - cur)
         elif replicas < cur:
@@ -244,7 +288,9 @@ class PipelineExecutor:
             return len(st.workers)
 
     def replica_target(self, stage: str) -> int:
-        return self._stages[stage].target
+        st = self._stages[stage]
+        with st.cond:
+            return st.target
 
     # -- control-plane surface --------------------------------------------
     def set_shed_margin(self, stage: str, margin_s: float) -> None:
@@ -352,7 +398,7 @@ class PipelineExecutor:
                        shed_here: bool = False) -> None:
         """One branch of the request resolved without outputs (shed)."""
         if shed_here:
-            req.dropped = True
+            req.shed = True
             with st.cond:
                 st.dropped += 1
         with self._lock:
@@ -362,7 +408,7 @@ class PipelineExecutor:
             self._finalize(req)
 
     def _on_done(self, st: _Stage, req: _Request, out: Any) -> None:
-        if not req.dropped:
+        if not req.shed:
             req.payload = out
         if not req.cancelled:
             ready = self.now() + self.hop_delay_s
@@ -439,8 +485,15 @@ class PipelineExecutor:
         for req in reqs:
             req.done.wait(max(0.0, deadline_t - time.perf_counter()))
         self.release(reqs)
+        with self._lock:
+            failures = list(self.worker_failures)
+        if failures:
+            stages = ", ".join(f"{s}: {e!r}" for s, e in failures)
+            raise RuntimeError(
+                f"{len(failures)} worker thread(s) crashed during the "
+                f"run ({stages}) — results would silently under-serve")
         return np.array([
-            np.inf if (r.t_done is None or r.dropped or r.cancelled)
+            np.inf if (r.t_done is None or r.shed or r.cancelled)
             else (r.t_done - r.t_arrival) / time_scale
             for r in reqs])
 
@@ -463,15 +516,20 @@ class PipelineExecutor:
         return out
 
     def batch_sizes(self) -> Dict[str, np.ndarray]:
-        return {s: np.asarray([b for _, b in st.batch_log], dtype=np.int64)
-                for s, st in self._stages.items()}
+        out: Dict[str, np.ndarray] = {}
+        for s, st in self._stages.items():
+            with st.cond:
+                sizes = [b for _, b in st.batch_log]
+            out[s] = np.asarray(sizes, dtype=np.int64)
+        return out
 
     def batch_stats(self) -> Dict[str, float]:
-        return {
-            s: (float(np.mean([b for _, b in st.batch_log]))
-                if st.batch_log else 0.0)
-            for s, st in self._stages.items()
-        }
+        out: Dict[str, float] = {}
+        for s, st in self._stages.items():
+            with st.cond:
+                sizes = [b for _, b in st.batch_log]
+            out[s] = float(np.mean(sizes)) if sizes else 0.0
+        return out
 
     # -- shutdown ----------------------------------------------------------
     def shutdown(self, join_timeout_s: float = 5.0) -> bool:

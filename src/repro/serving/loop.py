@@ -175,7 +175,7 @@ class LiveControlLoop:
         completed = missed = overdue = drops = 0
         lats: List[float] = []
         for r in snap:
-            finished = r.done.is_set() and not (r.dropped or r.cancelled)
+            finished = r.done.is_set() and not (r.shed or r.cancelled)
             comp = r.t_done if (finished and r.t_done is not None) \
                 else np.inf
             ddl_in_win = t_lo < r.deadline <= t1
@@ -187,7 +187,7 @@ class LiveControlLoop:
                     missed += 1
             if ddl_in_win and (not np.isfinite(comp) or comp > t1):
                 overdue += 1
-            if r.dropped and ddl_in_win:
+            if r.shed and ddl_in_win:
                 drops += 1
         p99 = float(np.percentile(np.asarray(lats), 99.0)) if lats \
             else float("nan")
@@ -271,12 +271,19 @@ class LiveControlLoop:
         for req in reqs:
             req.done.wait(max(0.0, deadline - time.perf_counter()))
         released = ex.release(reqs)
+        with ex._lock:
+            failures = list(ex.worker_failures)
+        if failures:
+            stages_msg = ", ".join(f"{s}: {e!r}" for s, e in failures)
+            raise RuntimeError(
+                f"{len(failures)} worker thread(s) crashed during the "
+                f"closed-loop run ({stages_msg})")
 
         lat = np.array([
-            np.inf if (r.t_done is None or r.dropped or r.cancelled)
+            np.inf if (r.t_done is None or r.shed or r.cancelled)
             else r.t_done - r.t_arrival
             for r in reqs])
-        dropped = np.array([r.dropped for r in reqs], dtype=bool)
+        dropped = np.array([r.shed for r in reqs], dtype=bool)
         times, costs, timeline = replica_cost_timeline(
             self.pipeline, run_config, sched, t_stop)
         return LiveLoopResult(

@@ -1,0 +1,583 @@
+"""Tier-1 lane for the invariant analyzer (``repro.analysis``).
+
+Three layers:
+
+* per-rule fixture trees (positive AND negative snippets) — each rule
+  must fire on its seeded violation and stay silent on the compliant
+  twin;
+* the shipped tree — ``run_analysis`` over ``src/`` with the repo
+  baseline must be clean (this doubles as the tier-1 analyzer smoke),
+  and seeding the two acceptance violations into a copy of the real
+  sources (a field deleted from ``StageConfig.key()``, an unlocked
+  write to a guarded executor attribute) must flip the exit to 1;
+* the dynamic twin of KEY01 — a property test that mutating any single
+  ``StageConfig``/schedule component changes ``TraceSession``'s stage
+  cache key, so the static rule and the runtime object can never drift
+  apart silently.
+"""
+
+import dataclasses
+import json
+import shutil
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import Baseline, BaselineError, run_analysis
+from repro.analysis.cli import main as analysis_main
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+from repro.core.pipeline import PipelineConfig, StageConfig, linear_pipeline
+from repro.core.profiler import ModelSpec, ProfileStore, profile_model_analytic
+from repro.serving.executor import PipelineExecutor
+from repro.sim.engine import SimEngine
+
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC = REPO_ROOT / "src"
+BASELINE = REPO_ROOT / "analysis_baseline.txt"
+
+
+def _write_tree(base: Path, files) -> Path:
+    for rel, text in files.items():
+        p = base / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return base
+
+
+def _findings(base: Path, *rule_ids):
+    rules = [RULES_BY_ID[r]() for r in (rule_ids or RULES_BY_ID)]
+    return run_analysis(base, rules).findings
+
+
+# -- DET01 -------------------------------------------------------------------
+
+def test_det01_flags_wall_clock_and_unseeded_rng(tmp_path):
+    _write_tree(tmp_path, {"repro/sim/bad.py": """
+        import time
+        import numpy as np
+
+        def f():
+            t = time.time()
+            rng = np.random.default_rng()
+            x = np.random.normal(0.0, 1.0)
+            return t, rng, x
+    """})
+    found = _findings(tmp_path, "DET01")
+    assert len(found) == 3
+    msgs = "\n".join(f.message for f in found)
+    assert "time.time" in msgs
+    assert "without an explicit seed" in msgs
+    assert "np.random.normal" in msgs
+
+
+def test_det01_allows_seeded_rng_and_out_of_scope_wall_clock(tmp_path):
+    _write_tree(tmp_path, {
+        "repro/sim/good.py": """
+            import numpy as np
+
+            def f(seed):
+                return np.random.default_rng(seed).random()
+        """,
+        # repro.serving is wall-clock BY DESIGN — out of DET01 scope
+        "repro/serving/clock.py": """
+            import time
+
+            def now():
+                return time.time()
+        """,
+    })
+    assert _findings(tmp_path, "DET01") == []
+
+
+def test_det01_inline_allow_requires_justification(tmp_path):
+    _write_tree(tmp_path, {"repro/sim/bad.py": """
+        import time
+
+        def f():
+            return time.time()  # analysis: allow DET01
+    """})
+    # a bare allow (no justification) does NOT suppress
+    assert len(_findings(tmp_path, "DET01")) == 1
+    _write_tree(tmp_path, {"repro/sim/bad.py": """
+        import time
+
+        def f():
+            return time.time()  # analysis: allow DET01 — test harness clock
+    """})
+    assert _findings(tmp_path, "DET01") == []
+
+
+# -- KEY01 -------------------------------------------------------------------
+
+_STAGECONFIG_OK = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class StageConfig:
+        hardware: str
+        batch_size: int
+        replicas: int
+
+        def key(self):
+            return (self.hardware, self.batch_size, self.replicas)
+"""
+
+_STAGECONFIG_BAD = """
+    import dataclasses
+
+    @dataclasses.dataclass
+    class StageConfig:
+        hardware: str
+        batch_size: int
+        replicas: int
+
+        def key(self):
+            return (self.hardware, self.batch_size)
+"""
+
+
+def test_key01_flags_field_missing_from_key(tmp_path):
+    _write_tree(tmp_path, {"repro/core/pipeline.py": _STAGECONFIG_BAD})
+    found = _findings(tmp_path, "KEY01")
+    assert len(found) == 1 and "replicas" in found[0].message
+
+
+def test_key01_flags_missing_key_method(tmp_path):
+    _write_tree(tmp_path, {"repro/core/pipeline.py": """
+        import dataclasses
+
+        @dataclasses.dataclass
+        class StageConfig:
+            hardware: str
+    """})
+    found = _findings(tmp_path, "KEY01")
+    assert len(found) == 1 and "no key() method" in found[0].message
+
+
+def test_key01_clean_on_complete_key(tmp_path):
+    _write_tree(tmp_path, {"repro/core/pipeline.py": _STAGECONFIG_OK})
+    assert _findings(tmp_path, "KEY01") == []
+
+
+def test_key01_flags_dropped_schedule_component(tmp_path):
+    _write_tree(tmp_path, {"repro/sim/engine.py": """
+        def _sched_key(sched):
+            return tuple(float(t) for t, d in sched) if sched else ()
+
+        def _shed_key(sched):
+            return tuple((float(t), float(m)) for t, m in sched) if sched else ()
+
+        def _policy_key(sched):
+            return tuple((float(t), str(p)) for t, p in sched) if sched else ()
+    """})
+    found = _findings(tmp_path, "KEY01")
+    assert len(found) == 1
+    assert "'d'" in found[0].message and "_sched_key" in found[0].message
+
+
+def test_key01_flags_missing_schedule_helper(tmp_path):
+    _write_tree(tmp_path, {"repro/sim/engine.py": """
+        def _sched_key(sched):
+            return tuple((float(t), int(d)) for t, d in sched) if sched else ()
+
+        def _shed_key(sched):
+            return tuple((float(t), float(m)) for t, m in sched) if sched else ()
+    """})
+    found = _findings(tmp_path, "KEY01")
+    assert len(found) == 1 and "_policy_key" in found[0].message
+
+
+# -- LOCK01 ------------------------------------------------------------------
+
+_LOCK_FIXTURE = """
+    import threading
+
+
+    class Obj:
+        def __init__(self):
+            self.cond = threading.Condition()
+            self.depth = 0          # guarded-by: cond
+
+        def locked(self):
+            with self.cond:
+                self.depth += 1
+
+        def aliased(self):
+            c = self.cond
+            with c:
+                return self.depth
+
+        def helper(self):       # holds-lock: cond
+            return self.depth
+
+        def unlocked(self):
+            return self.depth
+"""
+
+
+def test_lock01_flags_only_the_unlocked_access(tmp_path):
+    _write_tree(tmp_path, {"repro/serving/obj.py": _LOCK_FIXTURE})
+    found = _findings(tmp_path, "LOCK01")
+    assert len(found) == 1
+    assert found[0].scope == "Obj.unlocked"
+    assert "guarded attribute self.depth" in found[0].message
+
+
+def test_lock01_receiver_type_disambiguates_attr_names(tmp_path):
+    # `Other.depth` shares the attribute NAME but not the guard —
+    # a resolvable receiver type must not cross-fire
+    _write_tree(tmp_path, {"repro/serving/obj.py": _LOCK_FIXTURE + """
+
+    class Other:
+        def __init__(self):
+            self.depth = 7
+
+        def read(self):
+            return self.depth
+    """})
+    found = _findings(tmp_path, "LOCK01")
+    assert [f.scope for f in found] == ["Obj.unlocked"]
+
+
+def test_lock01_silent_without_annotations(tmp_path):
+    _write_tree(tmp_path, {"repro/serving/obj.py": """
+        class Obj:
+            def __init__(self):
+                self.depth = 0
+
+            def unlocked(self):
+                return self.depth
+    """})
+    assert _findings(tmp_path, "LOCK01") == []
+
+
+# -- EVT01 -------------------------------------------------------------------
+
+def test_evt01_flags_unsorted_constructor_and_fold(tmp_path):
+    _write_tree(tmp_path, {"repro/core/sched.py": """
+        class ReplicaPool:
+            def __init__(self, replicas, events):
+                self.events = list(events or [])
+
+        def fold_control_event(ev, sched):
+            sched.append((ev.t, ev.delta))
+    """})
+    found = _findings(tmp_path, "EVT01")
+    scopes = sorted(f.scope for f in found)
+    assert scopes == ["ReplicaPool.__init__", "fold_control_event"]
+
+
+def test_evt01_clean_when_sorted(tmp_path):
+    _write_tree(tmp_path, {"repro/core/sched.py": """
+        class ReplicaPool:
+            def __init__(self, replicas, events):
+                self.events = (sorted(events, key=lambda e: e[0])
+                               if events else [])
+
+        def fold_control_event(ev, sched):
+            sched.append((ev.t, ev.delta))
+            sched.sort(key=lambda e: e[0])
+    """})
+    assert _findings(tmp_path, "EVT01") == []
+
+
+def test_evt01_flags_statically_decreasing_literal(tmp_path):
+    _write_tree(tmp_path, {"repro/sim/use.py": """
+        def drive(pool):
+            pool2 = ReplicaPool(2, [(2.0, 1), (1.0, -1)])
+            pool3 = ReplicaPool(2, [(1.0, 1), (2.0, -1)])
+            return pool2, pool3
+    """})
+    found = _findings(tmp_path, "EVT01")
+    assert len(found) == 1 and "decreasing timestamps" in found[0].message
+
+
+# -- JAX01 -------------------------------------------------------------------
+
+def test_jax01_flags_impure_scan_body(tmp_path):
+    _write_tree(tmp_path, {"repro/sim/bad_jax.py": """
+        from jax import lax
+
+
+        def outer(xs):
+            acc = []
+
+            def step(carry, x):
+                acc.append(x)
+                if carry > 0:
+                    carry = carry - 1
+                return carry, x
+
+            return lax.scan(step, 0, xs)
+    """})
+    found = _findings(tmp_path, "JAX01")
+    msgs = "\n".join(f.message for f in found)
+    assert len(found) == 2
+    assert "mutates free variable 'acc'" in msgs
+    assert "branches with Python `if` on carry" in msgs
+
+
+def test_jax01_allows_compile_time_flags_and_is_none(tmp_path):
+    _write_tree(tmp_path, {"repro/sim/good_jax.py": """
+        from jax import lax
+        import jax.numpy as jnp
+
+
+        def make_run(with_timeout, mask):
+            def step(carry, x):
+                y = carry + x
+                if with_timeout:
+                    y = jnp.minimum(y, 10.0)
+                if mask is not None:
+                    y = jnp.where(mask, y, 0.0)
+                return y, y
+
+            def run(xs):
+                return lax.scan(step, 0.0, xs)
+
+            return run
+    """})
+    assert _findings(tmp_path, "JAX01") == []
+
+
+def test_jax01_flags_float64_and_partial_resolved_kernel(tmp_path):
+    _write_tree(tmp_path, {"repro/kernels/bad_kernel.py": """
+        import functools
+
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+
+        def _kernel(scale, x_ref, o_ref):
+            o_ref[...] = x_ref[...].astype(jnp.float64) * scale
+
+
+        def run(x):
+            return pl.pallas_call(
+                functools.partial(_kernel, 2.0),
+                out_shape=None)(x)
+    """})
+    found = _findings(tmp_path, "JAX01")
+    assert len(found) == 1 and "float64" in found[0].message
+
+
+def test_jax01_out_of_scope_module_ignored(tmp_path):
+    _write_tree(tmp_path, {"repro/core/notjax.py": """
+        from jax import lax
+
+
+        def outer(xs):
+            acc = []
+
+            def step(carry, x):
+                acc.append(x)
+                return carry, x
+
+            return lax.scan(step, 0, xs)
+    """})
+    assert _findings(tmp_path, "JAX01") == []
+
+
+# -- the shipped tree --------------------------------------------------------
+
+def test_shipped_tree_is_clean_with_baseline():
+    """The tier-1 analyzer smoke: all five rules over src/, repo
+    baseline applied — zero findings, zero stale baseline entries."""
+    report = run_analysis(SRC, [r() for r in ALL_RULES],
+                          baseline=Baseline.load(BASELINE))
+    assert report.findings == [], [f.render() for f in report.findings]
+    assert report.unused_baseline == []
+    assert report.files_scanned > 50
+    # the baseline is load-bearing: without it the DET01 profiler
+    # findings reappear (i.e. the suppressions are real, not dead)
+    bare = run_analysis(SRC, [r() for r in ALL_RULES])
+    assert {f.rule for f in bare.findings} == {"DET01"}
+
+
+def _copy_src(tmp_path: Path) -> Path:
+    dst = tmp_path / "src"
+    shutil.copytree(SRC, dst,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    return dst
+
+
+def test_deleting_stageconfig_key_field_fails_analysis(tmp_path, capsys):
+    """Acceptance seed 1: drop timeout_s from StageConfig.key() in a
+    copy of the real sources — the analyzer must exit non-zero."""
+    root = _copy_src(tmp_path)
+    p = root / "repro/core/pipeline.py"
+    text = p.read_text()
+    needle = ("return (self.hardware, self.batch_size, self.replicas,\n"
+              "                self.timeout_s, self.policy)")
+    assert needle in text, "StageConfig.key() changed shape; update test"
+    p.write_text(text.replace(
+        needle, "return (self.hardware, self.batch_size, self.replicas,\n"
+                "                self.policy)"))
+    rc = analysis_main(["--root", str(root), "--baseline", str(BASELINE)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "KEY01" in out and "timeout_s" in out
+
+
+def test_unlocked_guarded_write_fails_analysis(tmp_path, capsys):
+    """Acceptance seed 2: an unlocked write to a guarded executor
+    attribute in a copy of the real sources must exit non-zero."""
+    root = _copy_src(tmp_path)
+    p = root / "repro/serving/executor.py"
+    p.write_text(p.read_text() + textwrap.dedent("""
+
+        def _poke(ex: PipelineExecutor, stage: str) -> None:
+            st = ex._stages[stage]
+            st.target = 0
+    """))
+    rc = analysis_main(["--root", str(root), "--baseline", str(BASELINE)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "LOCK01" in out and "st.target" in out
+
+
+def test_cli_json_and_exit_codes(tmp_path, capsys):
+    _write_tree(tmp_path, {"repro/sim/bad.py": """
+        import time
+
+        def f():
+            return time.time()
+    """})
+    rc = analysis_main(["--root", str(tmp_path), "--json",
+                        "--baseline", str(tmp_path / "absent.txt")])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1 and report["ok"] is False
+    assert report["findings"][0]["rule"] == "DET01"
+    assert report["rules_run"] == [r.id for r in ALL_RULES]
+
+    rc = analysis_main(["--root", str(tmp_path), "--rules", "LOCK01"])
+    capsys.readouterr()
+    assert rc == 0                      # rule scoping skips the DET01 hit
+
+    rc = analysis_main(["--root", str(tmp_path), "--rules", "NOPE99"])
+    assert rc == 2
+
+    rc = analysis_main(["--list-rules"])
+    out = capsys.readouterr().out
+    assert rc == 0 and all(r.id in out for r in ALL_RULES)
+
+
+def test_cli_rejects_baseline_without_justification(tmp_path, capsys):
+    _write_tree(tmp_path, {"repro/sim/ok.py": "x = 1\n"})
+    bad = tmp_path / "baseline.txt"
+    bad.write_text("DET01\trepro/sim/ok.py\tf\n")
+    rc = analysis_main(["--root", str(tmp_path), "--baseline", str(bad)])
+    assert rc == 2
+    assert "justification" in capsys.readouterr().err
+    with pytest.raises(BaselineError):
+        Baseline.load(bad)
+
+
+def test_stale_baseline_entry_is_reported(tmp_path, capsys):
+    _write_tree(tmp_path, {"repro/sim/ok.py": "x = 1\n"})
+    stale = tmp_path / "baseline.txt"
+    stale.write_text("DET01\trepro/sim/gone.py\tf\tno longer exists\n")
+    rc = analysis_main(["--root", str(tmp_path), "--baseline", str(stale)])
+    out = capsys.readouterr().out
+    assert rc == 0                      # stale entries warn, not fail
+    assert "stale baseline entry" in out
+
+
+# -- KEY01's dynamic twin: the property the static rule protects -------------
+
+_SESSION_CACHE = {}
+
+
+def _session_and_config():
+    if "s" not in _SESSION_CACHE:
+        specs = [ModelSpec("prep", 2e9, 1e6, 1e6),
+                 ModelSpec("res152", 2.3e10, 1.2e8, 5e7)]
+        store = ProfileStore()
+        for s in specs:
+            store.add(profile_model_analytic(s))
+        pipe = linear_pipeline("p", ["prep", "res152"])
+        engine = SimEngine(pipe, store)
+        sess = engine.session(np.linspace(0.0, 1.0, 16))
+        cfg = PipelineConfig({
+            s: StageConfig("cpu-1", 4, 2, 0.1, "fifo")
+            for s in pipe.stages})
+        _SESSION_CACHE["s"] = (sess, cfg)
+    return _SESSION_CACHE["s"]
+
+
+# every single-field mutation of the FIRST stage's config/schedules;
+# the key checked is the LAST stage's — the cone must carry them all
+_MUTATIONS = [
+    ("hardware", lambda c: dataclasses.replace(c, hardware="tpu-v5e-1")),
+    ("batch_size", lambda c: dataclasses.replace(c, batch_size=5)),
+    ("replicas", lambda c: dataclasses.replace(c, replicas=3)),
+    ("timeout_s", lambda c: dataclasses.replace(c, timeout_s=0.25)),
+    ("policy", lambda c: dataclasses.replace(c, policy="edf")),
+    ("sched_t", None), ("sched_delta", None),
+    ("shed_t", None), ("shed_margin", None),
+    ("policy_t", None), ("policy_name", None),
+]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=len(_MUTATIONS) - 1))
+def test_any_single_field_mutation_changes_stage_key(idx):
+    sess, cfg = _session_and_config()
+    stage_names = list(sess.engine.pipeline.stages)
+    first, last = stage_names[0], stage_names[-1]
+    sched = {first: [(1.0, 1)]}
+    shed = {first: [(1.0, 0.05)]}
+    pols = {first: [(1.0, "edf")]}
+    base = sess._stage_key(last, cfg, sched, shed, pols)
+    assert base == sess._stage_key(last, cfg, sched, shed, pols)
+
+    name, mut = _MUTATIONS[idx]
+    cfg2, sched2, shed2, pols2 = cfg, sched, shed, pols
+    if mut is not None:
+        cfg2 = cfg.copy()
+        cfg2.stage_configs[first] = mut(cfg[first])
+    elif name == "sched_t":
+        sched2 = {first: [(2.0, 1)]}
+    elif name == "sched_delta":
+        sched2 = {first: [(1.0, 2)]}
+    elif name == "shed_t":
+        shed2 = {first: [(2.0, 0.05)]}
+    elif name == "shed_margin":
+        shed2 = {first: [(1.0, 0.1)]}
+    elif name == "policy_t":
+        pols2 = {first: [(2.0, "edf")]}
+    elif name == "policy_name":
+        pols2 = {first: [(1.0, "fifo")]}
+    mutated = sess._stage_key(last, cfg2, sched2, shed2, pols2)
+    assert mutated != base, (
+        f"mutating {name} on {first!r} left {last!r}'s cone cache key "
+        f"unchanged — the PR 6 stale-cone bug class")
+
+
+# -- worker-crash surfacing (threading.excepthook wiring) --------------------
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_worker_crash_fails_serve_trace_loudly(monkeypatch):
+    """An uncaught exception in a worker thread outside the model-fn
+    guard used to silently kill the replica and deadlock the run; now
+    threading.excepthook routes it to the executor and serve_trace
+    raises instead of returning all-inf latencies."""
+    names = ["m0"]
+    pipe = linear_pipeline("t", names, {n: ["cpu-1"] for n in names})
+    cfg = PipelineConfig({s: StageConfig("cpu-1", 4, 1)
+                          for s in pipe.stages})
+    ex = PipelineExecutor(pipe, cfg, {"m0": lambda b: list(b)})
+    try:
+        monkeypatch.setattr(
+            ex, "_on_done",
+            lambda *a, **k: (_ for _ in ()).throw(RuntimeError("kaboom")))
+        with pytest.raises(RuntimeError, match="worker thread"):
+            ex.serve_trace(np.array([0.0]), lambda i: i, timeout_s=2.0)
+        assert ex.worker_failures  # analysis: allow LOCK01 — post-run assert
+    finally:
+        ex.shutdown()
