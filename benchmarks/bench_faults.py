@@ -1,0 +1,263 @@
+"""Failure-aware serving under crash-during-spike: sim + live fidelity.
+
+The fault issue's acceptance harness (``BENCH_faults.json``):
+
+* **A. recovery on vs off (co-simulation)** — the same crash-during-
+  spike fault schedule through the closed-loop tuner twice: with the
+  full recovery stack (requeue + replacement ups) and with it disabled
+  (in-flight work dropped, no replacement). Recovery ON must beat OFF
+  on SLO miss rate.
+* **B. planner failure headroom** — ``failure_headroom=1`` plans must
+  cost no more than the headroom-free plan +25%, and their static
+  (tuner-less) miss rate under the crash is recorded next to the base
+  plan's.
+* **C. sim<->live fault replay** — the SAME crash schedule drives the
+  real thread-pool executor (a worker thread actually dies) under the
+  live closed loop and its co-simulated twin: both must converge to
+  the same final fleet, with a small attainment gap.
+
+Reuses the jitted-stage setup of ``bench_live_loop`` so the two
+fidelity harnesses price the identical serving path.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import save, table
+from benchmarks.bench_live_loop import PLAN_LAM, SEED, SLO, _setup
+
+ATTAINMENT_TOL = 0.15          # |sim - real| attainment under faults
+HEADROOM_COST_TOL = 1.25       # cost(headroom=1) <= cost(base) * this
+CRASH_T = 12.0                 # mid-spike (deterministic live replay)
+CRASH_QUIET_T = 30.0           # post-spike: normal scaling is idle, so
+#                                only the failure-recovery path can
+#                                replace the loss (recovery on-vs-off)
+REPLICA_CAP = 4
+UP_RATE_SLACK = 1.35           # same corroboration slack as bench_live_loop
+
+
+def _crash_schedule(pipe, cfg, recovery=None):
+    from repro.faults import FaultSchedule, crash
+
+    # crash the most-provisioned stage (the one whose loss the tuner
+    # can observably replace) at mid-spike
+    stage = max(pipe.stages, key=lambda s: cfg[s].replicas)
+    faults = [crash(stage, CRASH_T)]
+    kw = {} if recovery is None else {"recovery": recovery}
+    return stage, FaultSchedule(faults, seed=SEED, **kw)
+
+
+def _spike_trace():
+    from repro.workload.generator import gamma_trace
+
+    return np.concatenate([
+        gamma_trace(PLAN_LAM, 1.0, 10, seed=31),
+        10.0 + gamma_trace(3.0 * PLAN_LAM, 0.7, 6, seed=32),
+        16.0 + gamma_trace(PLAN_LAM, 1.0, 24, seed=33)])
+
+
+def run() -> dict:
+    from repro.core.estimator import Estimator
+    from repro.core.planner import Planner
+    from repro.core.tuner import ClosedLoopTuner, TunerPlanInfo
+    from repro.faults import RecoveryPolicy
+    from repro.serving.loop import LiveControlLoop
+    from repro.sim import ControlLoopSession, SimEngine
+
+    from repro.faults import FaultSchedule, crash
+
+    pipe, store, plan, sample, fns = _setup()
+    cfg = plan.config
+    est = Estimator(pipe, store)
+    service = est.service_time(cfg)
+    spike = _spike_trace()
+    stage, fs_replay = _crash_schedule(pipe, cfg)
+    # A: take the whole bottleneck stage down in the post-spike lull
+    # (n caps at the stage's live fleet) — the scaling rules are idle
+    # there, so only failure recovery can revive the stage
+    bottleneck = max(pipe.stages,
+                     key=lambda s: store.get(pipe.stages[s].model_id)
+                     .batch_latency(cfg[s].hardware, 1))
+    fs_on = FaultSchedule([crash(bottleneck, CRASH_QUIET_T, n=99)],
+                          seed=SEED)
+    fs_off = FaultSchedule([crash(bottleneck, CRASH_QUIET_T, n=99)],
+                           seed=SEED,
+                           recovery=RecoveryPolicy(enabled=False))
+    payload = lambda i: np.ones(192, np.float32) * ((i % 7) / 7.0)  # noqa: E731
+
+    out: dict = {
+        "slo_s": SLO,
+        "crash": {"recovery_sweep": {"stage": bottleneck,
+                                     "t": CRASH_QUIET_T, "n": "all"},
+                  "live_replay": {"stage": stage, "t": CRASH_T, "n": 1}},
+        "plan": {s: {"batch": cfg[s].batch_size,
+                     "replicas": cfg[s].replicas} for s in pipe.stages},
+        "tolerances": {"attainment": ATTAINMENT_TOL,
+                       "headroom_cost_ratio": HEADROOM_COST_TOL},
+    }
+    rows = []
+
+    def tuner(recover=True):
+        info = TunerPlanInfo.from_plan(pipe, cfg, store, sample, service)
+        return ClosedLoopTuner(info, max_replicas=REPLICA_CAP,
+                               up_rate_slack=UP_RATE_SLACK,
+                               failure_recovery=recover)
+
+    # ---- A. recovery on vs off (co-simulation) --------------------------
+    on = ControlLoopSession(pipe, store, cfg, SLO).run(
+        spike, tuner(True), faults=fs_on)
+    off = ControlLoopSession(pipe, store, cfg, SLO).run(
+        spike, tuner(False), faults=fs_off)
+    out["recovery_sweep"] = {
+        "n_queries": int(spike.size),
+        "on": {"miss_rate": on.miss_rate,
+               "mean_cost_per_hr": on.mean_cost_per_hr(),
+               "events": [e.as_record() for e in on.events]},
+        "off": {"miss_rate": off.miss_rate,
+                "mean_cost_per_hr": off.mean_cost_per_hr(),
+                "events": [e.as_record() for e in off.events]},
+    }
+    rows.append(["sim/recovery-on", f"{1-on.miss_rate:.4f}",
+                 f"${on.mean_cost_per_hr():.2f}/hr",
+                 f"{len(on.events)} events"])
+    rows.append(["sim/recovery-off", f"{1-off.miss_rate:.4f}",
+                 f"${off.mean_cost_per_hr():.2f}/hr",
+                 f"{len(off.events)} events"])
+    assert on.miss_rate <= off.miss_rate, \
+        ("recovery made things worse", on.miss_rate, off.miss_rate)
+    # recovery (replacement ups + retries) must not blow the cost
+    # budget: its mean run cost stays within +25% of the recovery-off
+    # run under the identical spike + crash (the spike-driven scaling
+    # both runs share dominates; recovery adds one replacement replica)
+    assert on.mean_cost_per_hr() <= \
+        off.mean_cost_per_hr() * HEADROOM_COST_TOL, \
+        ("recovery cost blow-up", on.mean_cost_per_hr(),
+         off.mean_cost_per_hr())
+
+    # ---- B. planner failure headroom ------------------------------------
+    # headroom is a +-1-replica post-pass, so the +25% cost bound is
+    # only meaningful once the base fleet amortizes the granularity:
+    # raise the planning rate until the fleet has >= 8 replicas
+    from repro.workload.generator import gamma_trace
+    hi_lam, base_hi = PLAN_LAM, plan
+    for _ in range(6):
+        total = sum(base_hi.config[s].replicas for s in pipe.stages)
+        if total >= 8:
+            break
+        probe_lam = hi_lam * 2.0
+        probe = Planner(pipe, store).plan(
+            gamma_trace(probe_lam, 1.0, 60, seed=SEED), SLO)
+        if not probe.feasible:
+            break                  # keep the last feasible plan + its lam
+        hi_lam, base_hi = probe_lam, probe
+    sample_hi = gamma_trace(hi_lam, 1.0, 60, seed=SEED)
+    hard_hi = Planner(pipe, store, failure_headroom=1).plan(sample_hi, SLO)
+    assert hard_hi.feasible
+    cost_base = base_hi.config.cost_per_hr()
+    cost_hard = hard_hi.config.cost_per_hr()
+
+    # static (tuner-less) resilience under the crash, at the hi rate
+    hi_stage = max(pipe.stages, key=lambda s: base_hi.config[s].replicas)
+    from repro.faults import FaultSchedule, crash
+    fs_hi = FaultSchedule([crash(hi_stage, CRASH_T)], seed=SEED,
+                          recovery=RecoveryPolicy(enabled=False))
+    trace_hi = gamma_trace(hi_lam, 1.0, 30, seed=34)
+    eng = SimEngine(pipe, store, seed=SEED)
+    miss_base = eng.simulate(base_hi.config, trace_hi, slo_s=SLO,
+                             fault_schedules=fs_hi).slo_miss_rate(SLO)
+    miss_hard = eng.simulate(hard_hi.config, trace_hi, slo_s=SLO,
+                             fault_schedules=fs_hi).slo_miss_rate(SLO)
+    out["headroom_sweep"] = {
+        "plan_lam": hi_lam,
+        "crash_stage": hi_stage,
+        "base": {"cost_per_hr": cost_base, "static_miss_rate": miss_base,
+                 "replicas": {s: base_hi.config[s].replicas
+                              for s in pipe.stages}},
+        "headroom_1": {"cost_per_hr": cost_hard,
+                       "static_miss_rate": miss_hard,
+                       "replicas": {s: hard_hi.config[s].replicas
+                                    for s in pipe.stages}},
+        "cost_ratio": cost_hard / cost_base,
+    }
+    rows.append(["plan/headroom-0", f"{1-miss_base:.4f}",
+                 f"${cost_base:.2f}/hr", f"static crash @ {hi_lam:.0f}qps"])
+    rows.append(["plan/headroom-1", f"{1-miss_hard:.4f}",
+                 f"${cost_hard:.2f}/hr", f"static crash @ {hi_lam:.0f}qps"])
+    total_hi = sum(base_hi.config[s].replicas for s in pipe.stages)
+    if total_hi >= 8:
+        assert cost_hard <= cost_base * HEADROOM_COST_TOL, \
+            ("headroom plan too expensive", cost_hard, cost_base)
+
+    # ---- C. the same crash schedule on REAL threads ---------------------
+    # deterministic replay: one crash + one scheduled replacement up,
+    # through BOTH loop drivers. The closed-loop tuner's spike scaling
+    # is timing-sensitive between backends (recorded in A); a fixed
+    # control schedule makes "same final fleet" an exact criterion for
+    # the fault machinery itself.
+    from repro.control import ControlEvent
+    from repro.sim import ScheduleController
+
+    replace = [ControlEvent(CRASH_T + 1.0, CRASH_T + 5.0, stage, "up", 1)]
+    co = ControlLoopSession(pipe, store, cfg, SLO).run(
+        spike, ScheduleController(list(replace)), faults=fs_replay)
+    crashes = {s: (sum(n for (_, n) in sf.crashes()) if sf else 0)
+               for s in pipe.stages
+               for sf in (fs_replay.stage(s),)}
+    co_final = {s: cfg[s].replicas - crashes[s]
+                + sum(d for (_, d) in co.replica_schedules.get(s, ()))
+                for s in pipe.stages}
+
+    ex = _faulty_executor(pipe, store, cfg, fns, fs_replay)
+    loop = LiveControlLoop(ex, SLO, epoch_s=1.0, service_time_s=service,
+                           drain_timeout_s=30.0)
+    t0 = time.perf_counter()
+    live = loop.run(spike, ScheduleController(list(replace)), payload)
+    live_wall = time.perf_counter() - t0
+    # the executor's own timeline carries BOTH control and crash deltas
+    # (the loop-result timeline folds control events only)
+    live_final = {s: tl[-1][1]
+                  for s, tl in ex.replica_timeline.items()}
+    fault_deltas = ex.fault_deltas()
+    ex.shutdown()
+
+    gap = abs((1 - co.miss_rate) - (1 - live.miss_rate))
+    out["live_replay"] = {
+        "wall_s": live_wall,
+        "cosim": {"miss_rate": co.miss_rate, "final_fleet": co_final,
+                  "events": [e.as_record() for e in co.events]},
+        "live": {"miss_rate": live.miss_rate, "final_fleet": live_final,
+                 "released": live.released,
+                 "fault_deltas": {s: list(map(list, d)) for s, d
+                                  in fault_deltas.items()},
+                 "events": [e.as_record() for e in live.events]},
+        "attainment_gap": gap,
+        "same_final_fleet": live_final == co_final,
+    }
+    rows.append(["crash/cosim", f"{1-co.miss_rate:.4f}",
+                 f"fleet {co_final}", f"{len(co.events)} events"])
+    rows.append(["crash/live", f"{1-live.miss_rate:.4f}",
+                 f"fleet {live_final}", f"{len(live.events)} events"])
+    assert live_final == co_final, \
+        ("sim/live fleets diverged", co_final, live_final)
+    assert gap <= ATTAINMENT_TOL, ("attainment gap", gap)
+
+    print(table(rows, ["run", "attainment", "cost/fleet", "detail"]))
+    save("BENCH_faults", out)
+    return out
+
+
+def _faulty_executor(pipe, store, cfg, fns, faults):
+    from repro.serving.executor import PipelineExecutor
+    from repro.serving.frontends import FRONTENDS
+
+    solo = {s: store.get(pipe.stages[s].model_id)
+            .batch_latency(cfg[s].hardware, 1) for s in pipe.stages}
+    return PipelineExecutor(pipe, cfg, fns, solo_latency_s=solo,
+                            frontend=FRONTENDS["clipper"], faults=faults)
+
+
+if __name__ == "__main__":
+    run()

@@ -3,8 +3,9 @@
 The planner is only trustworthy because a ``TraceSession`` is a pure
 function of (trace, configuration): cone-memoized re-simulation must be
 bit-identical to a fresh run. Wall-clock reads and global-state RNG
-break that silently, so inside ``repro.sim``, ``repro.core`` and
-``repro.workload`` this rule bans:
+break that silently, so inside ``repro.sim``, ``repro.core``,
+``repro.workload`` and ``repro.faults`` (fault replay must be
+bit-identical under one seed) this rule bans:
 
 * wall-clock calls — ``time.time``/``perf_counter``/``monotonic`` (and
   ``_ns`` variants), ``datetime.now``/``utcnow``/``today``;
@@ -29,7 +30,8 @@ from repro.analysis.core import Rule
 from repro.analysis.findings import Finding
 from repro.analysis.source import ModuleSource, dotted_name
 
-DETERMINISTIC_PACKAGES = ("repro/sim/", "repro/core/", "repro/workload/")
+DETERMINISTIC_PACKAGES = ("repro/sim/", "repro/core/", "repro/workload/",
+                          "repro/faults/")
 
 WALL_CLOCK = {
     "time.time", "time.time_ns",

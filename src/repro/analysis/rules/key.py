@@ -10,14 +10,16 @@ the key-function ASTs and cross-checks them:
 1. every dataclass field of ``StageConfig`` (repro/core/pipeline.py)
    must be read (``self.<field>``) inside ``StageConfig.key()``;
 2. the schedule key helpers in repro/sim/engine.py (``_sched_key``,
-   ``_shed_key``, ``_policy_key``) must fold EVERY component of the
-   event tuples they iterate: a comprehension binding ``(t, d)`` must
-   use both names in the emitted element, and the unpack arity must
-   match the event arity of the corresponding schedule class in
-   repro/core/policy.py (``ReplicaPool`` events, ``ShedMarginSchedule``,
-   ``PolicySchedule``);
+   ``_shed_key``, ``_policy_key``, ``_fault_key``) must fold EVERY
+   component of the event tuples they iterate: a comprehension binding
+   ``(t, d)`` must use both names in the emitted element, and the
+   unpack arity must match the event arity of the corresponding
+   schedule class — ``ReplicaPool``/``ShedMarginSchedule``/
+   ``PolicySchedule`` in repro/core/policy.py, ``FaultSchedule``
+   (4-component ``(kind, t0, t1, value)`` events) in
+   repro/faults/schedule.py;
 3. ``TraceSession._stage_key`` must token the backend
-   (``self.backend``), call ``StageConfig.key()`` and all three
+   (``self.backend``), call ``StageConfig.key()`` and all four
    schedule-key helpers; the percentile caches (``percentile``,
    ``class_percentile``) must also carry ``self.backend``.
 
@@ -39,13 +41,15 @@ from repro.analysis.source import ModuleSource
 PIPELINE_FILE = "repro/core/pipeline.py"
 ENGINE_FILE = "repro/sim/engine.py"
 POLICY_FILE = "repro/core/policy.py"
+FAULTS_FILE = "repro/faults/schedule.py"
 
-# engine schedule-key helper -> (policy.py class carrying the event
-# stream, fallback event arity when policy.py is absent)
+# engine schedule-key helper -> (class carrying the event stream,
+# fallback event arity when its defining file is absent, defining file)
 SCHEDULE_KEYS = {
-    "_sched_key": ("ReplicaPool", 2),
-    "_shed_key": ("ShedMarginSchedule", 2),
-    "_policy_key": ("PolicySchedule", 2),
+    "_sched_key": ("ReplicaPool", 2, POLICY_FILE),
+    "_shed_key": ("ShedMarginSchedule", 2, POLICY_FILE),
+    "_policy_key": ("PolicySchedule", 2, POLICY_FILE),
+    "_fault_key": ("FaultSchedule", 4, FAULTS_FILE),
 }
 
 # TraceSession methods whose cache keys must carry the backend token
@@ -133,16 +137,16 @@ class Key01(Rule):
     def check(self, modules: Sequence[ModuleSource]) -> Iterable[Finding]:
         by_suffix: Dict[str, ModuleSource] = {}
         for m in modules:
-            for suffix in (PIPELINE_FILE, ENGINE_FILE, POLICY_FILE):
+            for suffix in (PIPELINE_FILE, ENGINE_FILE, POLICY_FILE,
+                           FAULTS_FILE):
                 if m.relpath.endswith(suffix):
                     by_suffix[suffix] = m
         pipeline = by_suffix.get(PIPELINE_FILE)
         engine = by_suffix.get(ENGINE_FILE)
-        policy = by_suffix.get(POLICY_FILE)
         if pipeline is not None:
             yield from self._check_stage_config(pipeline)
         if engine is not None:
-            yield from self._check_engine(engine, policy)
+            yield from self._check_engine(engine, by_suffix)
 
     # -- StageConfig.key() covers every field -------------------------------
     def _check_stage_config(self, mod: ModuleSource) -> Iterable[Finding]:
@@ -170,11 +174,12 @@ class Key01(Rule):
 
     # -- engine key helpers + TraceSession backend token --------------------
     def _check_engine(self, engine: ModuleSource,
-                      policy: Optional[ModuleSource]) -> Iterable[Finding]:
+                      by_suffix: Dict[str, ModuleSource]
+                      ) -> Iterable[Finding]:
         fns: Dict[str, ast.FunctionDef] = {
             n.name: n for n in engine.tree.body
             if isinstance(n, ast.FunctionDef)}
-        for kname, (cls_name, fallback) in SCHEDULE_KEYS.items():
+        for kname, (cls_name, fallback, src_file) in SCHEDULE_KEYS.items():
             fn = fns.get(kname)
             if fn is None:
                 yield Finding(
@@ -182,9 +187,10 @@ class Key01(Rule):
                     f"schedule key helper {kname}() is missing — "
                     f"schedules cannot reach the cone cache keys")
                 continue
+            src = by_suffix.get(src_file)
             expected = fallback
-            if policy is not None:
-                expected = _event_arity(policy, cls_name) or fallback
+            if src is not None:
+                expected = _event_arity(src, cls_name) or fallback
             yield from self._check_key_fn(engine, fn, expected, cls_name)
 
         session = _find_class(engine, "TraceSession")

@@ -112,11 +112,16 @@ class Planner:
     def __init__(self, pipeline: Pipeline, profiles: ProfileStore,
                  estimator: Optional[Estimator] = None,
                  percentile: float = 99.0, policy: str = "fifo",
-                 backend: str = "numpy"):
+                 backend: str = "numpy", failure_headroom: int = 0):
         self.pipeline = pipeline
         self.profiles = profiles
         self.estimator = estimator or Estimator(pipeline, profiles)
         self.percentile = percentile
+        # survivable-failure headroom: after the cost search converges,
+        # every stage is grown (post-pass, see _harden) until the plan
+        # stays SLO-feasible with `failure_headroom` replicas removed —
+        # over-provisioning for crash tolerance (repro.faults)
+        self.failure_headroom = int(failure_headroom)
         # queueing policy stamped on every stage of the search space —
         # "edf" lets a multi-class plan serve tight-deadline traffic from
         # fewer replicas (deadline scheduling instead of overprovisioning)
@@ -229,6 +234,30 @@ class Planner:
         cfg = config[stage]
         prof = self.profiles.get(self.pipeline.stages[stage].model_id)
         return cfg.replicas * prof.throughput(cfg.hardware, cfg.batch_size)
+
+    def _harden(self, config: PipelineConfig, slo: float) -> PipelineConfig:
+        """Failure-headroom post-pass: grow each stage until the plan
+        would stay feasible after losing ``failure_headroom`` replicas
+        of that stage (single-stage failure model — the planner's
+        survivable-failure target). Runs AFTER the cost search so the
+        headroom rides the cheapest feasible shape rather than steering
+        it; a stage is left at ``MAX_REPLICAS_PER_STAGE`` if even the
+        cap cannot buy the headroom (best effort)."""
+        f = self.failure_headroom
+        if f <= 0:
+            return config
+        for stage in self.pipeline.stages:
+            while True:
+                k = config[stage].replicas
+                if k - f >= 1:
+                    probe = config.copy()
+                    probe[stage].replicas = k - f
+                    if self._feasible(probe, slo):
+                        break
+                if k + 1 > MAX_REPLICAS_PER_STAGE:
+                    break
+                config[stage].replicas = k + 1
+        return config
 
     # ------------------------------------------------------------ Algorithm 1
     def initialize(self, arrivals: np.ndarray, slo: float
@@ -416,6 +445,7 @@ class Planner:
                 break
             config = best
 
+        config = self._harden(config, slo)
         p99 = self._p99(config)
         return PlannerResult(True, config, config.cost_per_hr(), p99,
                              iterations, self._sims)
@@ -555,6 +585,8 @@ class BeamPlanner(Planner):
             if front_cost < best_cost - 1e-12:
                 best, best_cost = frontier[0], front_cost
 
+        best = self._harden(best, slo)
+        best_cost = best.cost_per_hr()
         p = self._p99(best)
         return PlannerResult(True, best, best_cost, p,
                              greedy.iterations + rounds, self._sims)
@@ -621,6 +653,8 @@ class AnnealedPlanner(Planner):
                     cur, cur_cost = cand, cost
                     if cost < best_cost - 1e-12:
                         best, best_cost = cand.copy(), cost
+        best = self._harden(best, slo)
+        best_cost = best.cost_per_hr()
         p99 = self._p99(best)
         return PlannerResult(True, best, best_cost, p99,
                              greedy.iterations + steps, self._sims)

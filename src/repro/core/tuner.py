@@ -339,7 +339,8 @@ class ClosedLoopTuner(Tuner):
                  shed_off_miss: float = 0.005,
                  shed_patience: int = 3,
                  up_rate_slack: float = 1.15,
-                 up_miss_floor: float = 0.01):
+                 up_miss_floor: float = 0.01,
+                 failure_recovery: bool = True):
         super().__init__(plan, envelope_horizon_s, min_replicas)
         self.activation_delay_s = activation_delay_s
         self.up_rate_slack = up_rate_slack
@@ -361,6 +362,14 @@ class ClosedLoopTuner(Tuner):
         self.last_boost_t = 0.0  # deployment: boosts wait one activation
         self._shed_hot = 0
         self._shed_cool = 0
+        # failure-aware re-provisioning: observed capacity loss (the
+        # telemetry `alive` field falling below the target) emits
+        # replacement ups through the same ControlEvent path
+        self.failure_recovery = failure_recovery
+        # in-flight scale-ups (t_effective, n) per stage — replicas the
+        # fold has already promised but telemetry cannot see yet; the
+        # loss computation must not mistake them for crashes
+        self._pending_ups: Dict[str, List[Tuple[float, int]]] = {}
 
     # -- feedback signals --------------------------------------------------
     def _backlog_seconds(self, tele: EpochTelemetry) -> float:
@@ -437,10 +446,37 @@ class ClosedLoopTuner(Tuner):
             self.events.append((now, "up", stage, delta))
             events.append(ControlEvent(
                 now, now + self.activation_delay_s, stage, "up", delta))
+            self._pending_ups.setdefault(stage, []).append(
+                (now + self.activation_delay_s, delta))
         if up:
             self.last_change_t = now
             if boosted:
                 self.last_boost_t = now
+
+        # ---- failure recovery (capacity-loss replacement ups) -----------
+        if self.failure_recovery:
+            for stage, st in tele.stages.items():
+                alive = getattr(st, "alive", -1)
+                if alive is None or alive < 0:
+                    continue        # telemetry without fault tracking
+                pend = [(te, n) for (te, n)
+                        in self._pending_ups.get(stage, []) if te > now]
+                self._pending_ups[stage] = pend
+                # current = the count the control schedule will reach
+                # once every pending up activates; alive = what the
+                # fleet actually carries now. The difference beyond the
+                # still-activating ups is crash loss to replace.
+                # Replacement ups do NOT bump self.current — the intent
+                # is unchanged; the fold's schedule absorbs the deltas.
+                lost = (self.current[stage] - alive
+                        - sum(n for _, n in pend))
+                if lost > 0:
+                    t_eff = now + self.activation_delay_s
+                    pend.append((t_eff, lost))
+                    self.events.append((now, "up", stage, lost))
+                    events.append(ControlEvent(now, t_eff, stage, "up",
+                                               lost))
+                    self.last_change_t = now
 
         # ---- admission control (slo-drop shed margin) -------------------
         if self.shed_stages:

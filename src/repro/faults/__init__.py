@@ -1,0 +1,42 @@
+"""Deterministic fault injection for both serving worlds.
+
+`repro.faults` defines seedable fault schedules — replica crashes,
+straggler slowdown windows, transient per-batch stage errors — plus the
+recovery policy (bounded exponential-backoff retries, optional hedged
+duplicates near the deadline) that both backends honor:
+
+* the discrete-event engine folds a :class:`FaultSchedule` into its
+  per-stage simulation (``repro.faults.simstage``) and into the cone
+  cache keys (``TraceSession._stage_key``), exactly like replica/shed/
+  policy schedules;
+* the wall-clock executor (:mod:`repro.serving.executor`) kills and
+  slows real worker threads on the same schedule and runs the same
+  retry/hedge/requeue machinery on live requests.
+
+Everything is deterministic under a fixed seed (per-stage substreams),
+so a fault scenario replays bit-identically in simulation and lands on
+the same final fleet when the closed-loop tuner re-provisions around it
+(``benchmarks/bench_faults.py``).
+"""
+
+from repro.faults.schedule import (
+    Fault,
+    FaultSchedule,
+    InjectedFault,
+    RecoveryPolicy,
+    StageFaults,
+    crash,
+    straggle,
+    transient,
+)
+
+__all__ = [
+    "Fault",
+    "FaultSchedule",
+    "InjectedFault",
+    "RecoveryPolicy",
+    "StageFaults",
+    "crash",
+    "straggle",
+    "transient",
+]

@@ -35,6 +35,18 @@ hold) is honored by the live queue exactly as in the simulator: a
 partial fifo batch is held open until ``timeout_s`` past the head-of-
 line arrival or the batch fills, whichever comes first (workers sleep
 through the hold rather than polling).
+
+**Fault injection** (:mod:`repro.faults`): constructed with a
+``FaultSchedule``, the executor kills real worker threads on the crash
+schedule (a per-run driver thread calls :meth:`PipelineExecutor
+.crash_replicas`; an in-service victim's batch requeues, never lost),
+stretches batch service inside straggle windows, and fails batches
+inside error windows from a per-stage seeded substream (same
+``[seed, crc32(stage)]`` convention as the sim path). Failed work is
+retried under the schedule's :class:`~repro.faults.schedule
+.RecoveryPolicy` — bounded attempts, exponential backoff, optional
+hedged duplicate near the deadline — with exactly-once delivery
+enforced by per-(request, stage) resolve-once claims.
 """
 
 from __future__ import annotations
@@ -43,6 +55,7 @@ import dataclasses
 import threading
 import time
 import weakref
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -50,6 +63,12 @@ import numpy as np
 from repro.control import ControlEvent
 from repro.core.pipeline import Pipeline, PipelineConfig
 from repro.core.policy import LiveQueue
+from repro.faults.schedule import (
+    FaultSchedule,
+    InjectedFault,
+    RecoveryPolicy,
+    StageFaults,
+)
 from repro.serving.frontends import Frontend
 
 
@@ -68,6 +87,15 @@ class _Request:
     # bookkeeping of a new run that reuses its rid
     visited: set = dataclasses.field(default_factory=set)  # guarded-by: _lock
     pending: int = 0                    # guarded-by: _lock (branches in flight)
+    # per-stage delivery attempt count (1 = first try) for bounded retry
+    attempts: dict = dataclasses.field(default_factory=dict)  # guarded-by: _lock
+    # stages where this request already resolved (delivered, shed, or
+    # given up) — hedged duplicate queue entries lose against this set
+    resolved_stages: set = dataclasses.field(default_factory=set)  # guarded-by: _lock
+    # AND-join barrier: per-stage count of parent messages received and
+    # the max readiness over *firing* parents (see _route_child)
+    join_msgs: dict = dataclasses.field(default_factory=dict)  # guarded-by: _lock
+    join_ready: dict = dataclasses.field(default_factory=dict)  # guarded-by: _lock
 
 
 class _Stage:
@@ -75,7 +103,8 @@ class _Stage:
 
     def __init__(self, name: str, fn: Callable[[List[Any]], List[Any]],
                  max_batch: int, policy: str, solo_latency_s: float,
-                 timeout_s: float = 0.0):
+                 timeout_s: float = 0.0,
+                 fault_rng: Optional[np.random.Generator] = None):
         self.name = name
         self.fn = fn
         self.max_batch = max_batch
@@ -85,6 +114,10 @@ class _Stage:
         self.workers: List[threading.Thread] = []      # guarded-by: cond
         self.target = 0                 # guarded-by: cond (replica target)
         self.retire_pending = 0         # guarded-by: cond
+        self.kill_pending = 0           # guarded-by: cond (injected crashes)
+        # per-stage substream for injected transient errors (drawn in
+        # batch-dispatch order, like the sim's StageFaults.rng())
+        self.fault_rng = fault_rng      # guarded-by: cond
         self.stop = False               # guarded-by: cond
         # cumulative counters (run-relative; reset by start_run)
         self.arrived = 0                # guarded-by: cond
@@ -142,16 +175,32 @@ class PipelineExecutor:
         completes) and to the reply hop — mirroring the simulator's
         ``rpc_delay_s`` so sim<->real comparisons model the same
         network.
+      faults: optional :class:`repro.faults.FaultSchedule` — crashes are
+        driven against the run clock by a per-run driver thread,
+        straggle/error windows are consulted at each batch dispatch, and
+        the schedule's recovery policy arms the retry machinery.
+      retry: override the recovery policy without a fault schedule
+        (e.g. to retry real model-fn exceptions); defaults to
+        ``faults.recovery`` when a schedule is given, else None
+        (legacy behavior: a failed batch reports None payloads).
 
-    Join semantics: a request visits a stage at most once (same cap the
-    scale-factor computation uses); the first triggering parent routes it.
+    Join semantics: AND-join with per-request barriers, mirroring the
+    simulator's ``_stage_ready``. Every stage receives exactly one
+    message per inbound edge per request — a firing token (parent
+    completed and the edge's coin came up) or a non-firing anti-token —
+    and is enqueued at most once, after ALL parents reported, iff at
+    least one token fired, ready ``hop_delay_s`` after the latest
+    firing parent. A stage none of whose tokens fired relays
+    anti-tokens to its own children so descendants never stall.
     """
 
     def __init__(self, pipeline: Pipeline, config: PipelineConfig,
                  stage_fns: Dict[str, Callable[[List[Any]], List[Any]]],
                  seed: int = 0,
                  solo_latency_s: Optional[Dict[str, float]] = None,
-                 frontend: Optional[Frontend] = None):
+                 frontend: Optional[Frontend] = None,
+                 faults: Optional[FaultSchedule] = None,
+                 retry: Optional[RecoveryPolicy] = None):
         self.pipeline = pipeline
         self.config = config
         self.rng = np.random.default_rng(seed)
@@ -166,6 +215,29 @@ class PipelineExecutor:
         # beats a silent replica loss that deadlocks the run
         self.worker_failures: List[Tuple[str, BaseException]] = []  # guarded-by: _lock
         _install_worker_excepthook()
+        # fault injection + recovery (repro.faults)
+        self._faults = faults
+        self._retry = retry if retry is not None else (
+            faults.recovery if faults is not None else None)
+        self._fault_specs: Dict[str, StageFaults] = {}
+        if faults is not None:
+            for s in pipeline.stages:
+                spec = faults.stage(s)
+                if spec is not None:
+                    self._fault_specs[s] = spec
+        # (t, -n) capacity losses from injected crashes, per stage —
+        # the live analogue of the sim's crash schedule (feeds the
+        # `alive` telemetry field); accessed under the stage's cond
+        self._fault_deltas: Dict[str, List[Tuple[float, int]]] = {
+            s: [] for s in pipeline.stages}  # guarded-by: cond
+        # crash-driver thread control; touched only by the run driver
+        # (start_run / shutdown), never by workers
+        self._fault_stop: Optional[threading.Event] = None
+        # AND-join fan-in per stage. pipeline.edges includes SOURCE
+        # edges, so entry stages count the source message `inject` sends
+        self._parents_n: Dict[str, int] = {}
+        for e in pipeline.edges:
+            self._parents_n[e.dst] = self._parents_n.get(e.dst, 0) + 1
         solo = solo_latency_s or {}
         self._stages: Dict[str, _Stage] = {}
         # (t_effective, +/-delta) per stage; the replica_timeline property
@@ -176,10 +248,14 @@ class PipelineExecutor:
         self._base_replicas: Dict[str, int] = {}   # guarded-by: cond
         for name, stage in pipeline.stages.items():
             cfg = config[name]
+            fault_rng = (np.random.default_rng(
+                [int(faults.seed), zlib.crc32(name.encode())])
+                if faults is not None else None)
             st = _Stage(name, stage_fns[stage.model_id], cfg.batch_size,
                         getattr(cfg, "policy", "fifo"),
                         float(solo.get(name, 0.0)),
-                        timeout_s=float(getattr(cfg, "timeout_s", 0.0)))
+                        timeout_s=float(getattr(cfg, "timeout_s", 0.0)),
+                        fault_rng=fault_rng)
             self._stages[name] = st
             self._timeline_deltas[name] = []
             self._base_replicas[name] = cfg.replicas
@@ -212,6 +288,8 @@ class PipelineExecutor:
                 st.queue.clear()
                 self._timeline_deltas[st.name] = []
                 self._base_replicas[st.name] = st.target
+                self._fault_deltas[st.name] = []
+        self._start_fault_driver()
 
     # -- replica lifecycle -------------------------------------------------
     def _spawn_worker(self, st: _Stage, t_active: float) -> None:
@@ -280,6 +358,71 @@ class PipelineExecutor:
         elif replicas < cur:
             self.retire_replicas(stage, cur - replicas)
 
+    # -- fault injection ---------------------------------------------------
+    def crash_replicas(self, stage: str, n: int = 1) -> int:
+        """Kill `n` worker threads of `stage` (fault injection). Each
+        victim dies at its next scheduling point: an idle victim exits
+        immediately; an in-service victim dies *instead of delivering*
+        and its batch requeues under the recovery policy (the work is
+        never silently lost). The deaths are clean thread exits —
+        injected failures must not trip the ``worker_failures``
+        crash-surfacing path reserved for real bugs. Returns the number
+        actually killed (capped at the stage's live target)."""
+        st = self._stages[stage]
+        t = self.now()
+        with st.cond:
+            n_eff = min(int(n), st.target)
+            if n_eff <= 0:
+                return 0
+            st.kill_pending += n_eff
+            st.target -= n_eff
+            self._record_delta(st, t, -n_eff)
+            self._fault_deltas[stage].append((t, -n_eff))
+            st.cond.notify_all()
+        return n_eff
+
+    def fault_deltas(self) -> Dict[str, List[Tuple[float, int]]]:
+        """Per-stage ``(t, -n)`` capacity losses from injected crashes
+        this run — what the live control loop subtracts from the replica
+        target to report the ``alive`` telemetry field."""
+        out: Dict[str, List[Tuple[float, int]]] = {}
+        for name, st in self._stages.items():
+            with st.cond:
+                out[name] = list(self._fault_deltas[name])
+        return out
+
+    def _start_fault_driver(self) -> None:
+        """(Re)arm the crash schedule against the freshly-zeroed run
+        clock. Called by :meth:`start_run`; a previous run's driver is
+        stopped first so stale crash times never fire into a new run."""
+        if self._fault_stop is not None:
+            self._fault_stop.set()
+            self._fault_stop = None
+        crashes: List[Tuple[float, str, int]] = []
+        for s, spec in self._fault_specs.items():
+            for t, n in spec.crashes():
+                crashes.append((float(t), s, int(n)))
+        if not crashes:
+            return
+        crashes.sort()
+        stop = threading.Event()
+        self._fault_stop = stop
+        t = threading.Thread(target=self._fault_driver_loop,
+                             args=(crashes, stop), daemon=True)
+        t.start()
+
+    def _fault_driver_loop(self, crashes: List[Tuple[float, str, int]],
+                           stop: threading.Event) -> None:
+        for t_c, stage, n in crashes:
+            while not stop.is_set():
+                dt = t_c - self.now()
+                if dt <= 0:
+                    break
+                stop.wait(min(dt, 0.05))
+            if stop.is_set():
+                return
+            self.crash_replicas(stage, n)
+
     def live_worker_count(self, stage: str) -> int:
         """Worker threads actually alive (draining included)."""
         st = self._stages[stage]
@@ -327,12 +470,20 @@ class PipelineExecutor:
     # -- the worker loop ---------------------------------------------------
     def _worker_loop(self, st: _Stage, t_active: float) -> None:
         cond = st.cond
+        spec = self._fault_specs.get(st.name)
         while True:
             with cond:
                 batch: List[_Request] = []
                 shed: List[_Request] = []
                 while True:
                     if st.stop:
+                        return
+                    if st.kill_pending > 0:
+                        # injected crash: die at the scheduling point.
+                        # A clean return is invisible to the excepthook
+                        # registry — this is a simulated failure, not a
+                        # bug to surface via worker_failures
+                        st.kill_pending -= 1
                         return
                     if st.retire_pending > 0:
                         # drain: exit between batches, never mid-batch
@@ -349,30 +500,71 @@ class PipelineExecutor:
                     nxt = st.queue.next_ready_after(now, st.max_batch)
                     cond.wait(0.25 if nxt is None
                               else min(max(nxt - now, 0.0) + 1e-4, 0.25))
-                cancelled = [r for r in batch if r.cancelled]
-                batch = [r for r in batch if not r.cancelled]
+            batch = self._dedup_batch(st, batch)
+            cancelled = [r for r in batch if r.cancelled]
+            batch = [r for r in batch if not r.cancelled]
+            with cond:
                 if batch:
                     st.batch_log.append((self.now(), len(batch)))
                     st.in_flight += len(batch)
             for req in cancelled:       # released by a timed-out driver
-                self._finish_branch(st, req)
+                if self._resolve_stage_once(st, req):
+                    self._finish_branch(st, req)
             for req in shed:
-                self._finish_branch(st, req, shed_here=True)
+                if self._resolve_stage_once(st, req):
+                    self._finish_branch(st, req, shed_here=True)
             if not batch:
                 continue
+            t_start = self.now()
+            err: Optional[BaseException] = None
             try:
                 outs = st.fn([r.payload for r in batch])
             except Exception as e:  # noqa: BLE001 — a dead worker
                 # deadlocks the pipeline; surface the failure per-request
-                import traceback
-                print(f"[executor] stage {st.name} batch failed: {e!r}")
-                traceback.print_exc()
+                err = e
                 outs = [None] * len(batch)
+            if spec is not None:
+                slow = spec.slowdown_at(t_start)
+                if slow > 1.0:
+                    # stretch the observed service time to `slow`x real
+                    time.sleep(max(0.0,
+                                   (self.now() - t_start) * (slow - 1.0)))
+                if err is None:
+                    p_err = spec.error_p(t_start)
+                    if p_err > 0.0:
+                        with cond:
+                            fail = bool(st.fault_rng.random() < p_err)
+                        if fail:
+                            err = InjectedFault(
+                                f"injected transient error on {st.name}")
+            with cond:
+                killed = st.kill_pending > 0
+                if killed:
+                    st.kill_pending -= 1
+                st.in_flight -= len(batch)
+                # legacy accounting: without retry machinery a failed
+                # batch still counts completed (it delivered None)
+                if not killed and (err is None or self._retry is None):
+                    st.completed += len(batch)
+            if killed:
+                # the replica died mid-service: its batch is lost and
+                # requeues immediately (no backoff — the server failed,
+                # not the work); the thread itself dies cleanly
+                now = self.now()
+                for req in batch:
+                    self._retry_or_fail(st, req, now, backoff=False)
+                return
+            if err is not None and not isinstance(err, InjectedFault):
+                import traceback
+                print(f"[executor] stage {st.name} batch failed: {err!r}")
+                traceback.print_exc()
+            if err is not None and self._retry is not None:
+                now = self.now()
+                for req in batch:
+                    self._retry_or_fail(st, req, now, backoff=True)
+                continue
             for req, out in zip(batch, outs):
                 self._on_done(st, req, out)
-            with cond:
-                st.in_flight -= len(batch)
-                st.completed += len(batch)
 
     # -- request routing ---------------------------------------------------
     def _coin(self, p: float) -> bool:
@@ -394,13 +586,95 @@ class PipelineExecutor:
             st.cond.notify()
         return True
 
+    def _resolve_stage_once(self, st: _Stage, req: _Request) -> bool:
+        """Claim the single resolution of `req` at this stage (delivery,
+        shed, cancel, or retry give-up). Hedged duplicate entries lose
+        the claim and must have NO routing or accounting effect."""
+        with self._lock:
+            if st.name in req.resolved_stages:
+                return False
+            req.resolved_stages.add(st.name)
+            return True
+
+    def _dedup_batch(self, st: _Stage,
+                     batch: List[_Request]) -> List[_Request]:
+        """Drop hedged-duplicate queue entries: the same request twice
+        in one formation, or an entry whose request already resolved at
+        this stage (its twin was served or shed earlier)."""
+        out: List[_Request] = []
+        seen: set = set()
+        with self._lock:
+            for r in batch:
+                if id(r) in seen or st.name in r.resolved_stages:
+                    continue
+                seen.add(id(r))
+                out.append(r)
+        return out
+
+    def _retry_or_fail(self, st: _Stage, req: _Request, now: float,
+                       backoff: bool) -> None:
+        """One failed delivery attempt of `req` at this stage: requeue
+        under the recovery policy (exponential backoff for transient
+        errors, immediate for crash-aborted work; a hedged duplicate is
+        added when the remaining deadline budget is below
+        ``hedge_slack_s``), or — retries exhausted / recovery disabled /
+        request cancelled — resolve the branch as shed."""
+        rec = self._retry
+        with self._lock:
+            a = req.attempts.get(st.name, 1) + 1
+            req.attempts[st.name] = a
+            give_up = (rec is None or not rec.enabled
+                       or a > int(rec.max_attempts) or req.cancelled)
+        if give_up:
+            if self._resolve_stage_once(st, req):
+                self._finish_branch(st, req, shed_here=True)
+            return
+        ready = now + (rec.backoff(a - 1) if backoff else 0.0)
+        copies = 2 if (rec.hedge_slack_s > 0.0
+                       and req.deadline - ready < rec.hedge_slack_s) else 1
+        with st.cond:
+            for _ in range(copies):
+                st.queue.push(req, ready, req.deadline)
+            st.cond.notify_all()
+
+    def _route_child(self, stage: str, req: _Request, fired: bool,
+                     ready: float) -> None:
+        """Deliver one parent message to `stage`'s join barrier: a
+        firing token (`fired`, batchable at `ready`) or an anti-token.
+        When the last parent message lands, the stage either enqueues
+        (>=1 token fired; ready = max over firing parents, the sim's
+        AND-join) or relays anti-tokens to its own children."""
+        with self._lock:
+            got = req.join_msgs.get(stage, 0) + 1
+            req.join_msgs[stage] = got
+            if fired:
+                prev = req.join_ready.get(stage)
+                req.join_ready[stage] = (ready if prev is None
+                                         else max(prev, ready))
+            complete = got == self._parents_n.get(stage, 1)
+            fire = complete and stage in req.join_ready
+            r = req.join_ready.get(stage, 0.0)
+        if not complete:
+            return
+        if fire:
+            self._enqueue(stage, req, r)
+        else:
+            for e in self._children[stage]:
+                self._route_child(e.dst, req, False, 0.0)
+
     def _finish_branch(self, st: _Stage, req: _Request,
                        shed_here: bool = False) -> None:
-        """One branch of the request resolved without outputs (shed)."""
+        """One branch of the request resolved without outputs (shed,
+        cancelled, or retries exhausted). Caller must have won
+        :meth:`_resolve_stage_once` for this stage. Children still
+        receive their join messages — as anti-tokens — so AND-join
+        descendants never stall on a missing parent report."""
         if shed_here:
             req.shed = True
             with st.cond:
                 st.dropped += 1
+        for e in self._children[st.name]:
+            self._route_child(e.dst, req, False, 0.0)
         with self._lock:
             req.pending -= 1
             finished = req.pending == 0
@@ -408,13 +682,14 @@ class PipelineExecutor:
             self._finalize(req)
 
     def _on_done(self, st: _Stage, req: _Request, out: Any) -> None:
+        if not self._resolve_stage_once(st, req):
+            return      # hedged twin: the other copy already resolved
         if not req.shed:
             req.payload = out
-        if not req.cancelled:
-            ready = self.now() + self.hop_delay_s
-            for e in self._children[st.name]:
-                if self._coin(e.probability):
-                    self._enqueue(e.dst, req, ready)
+        ready = self.now() + self.hop_delay_s
+        for e in self._children[st.name]:
+            fired = (not req.cancelled) and self._coin(e.probability)
+            self._route_child(e.dst, req, fired, ready)
         with self._lock:
             req.pending -= 1
             finished = req.pending == 0
@@ -429,14 +704,24 @@ class PipelineExecutor:
             cb(req)
 
     def inject(self, req: _Request) -> None:
-        routed = False
+        # the injection guard keeps `pending` positive while entry
+        # messages land, so a fast first branch finishing cannot
+        # finalize the request before its remaining entry edges route
+        with self._lock:
+            req.pending += 1
         ready = req.t_arrival + self.hop_delay_s
         for e in self.pipeline.entry_edges():
-            if self._coin(e.probability):
-                routed |= self._enqueue(e.dst, req, ready)
-        if not routed:
-            req.t_done = req.t_arrival
-            req.done.set()
+            self._route_child(e.dst, req, self._coin(e.probability), ready)
+        with self._lock:
+            req.pending -= 1
+            finished = req.pending == 0
+            routed = bool(req.visited)
+        if finished:
+            if routed:
+                self._finalize(req)
+            else:       # nothing fired anywhere: never entered a queue
+                req.t_done = req.t_arrival
+                req.done.set()
 
     def release(self, reqs: List[_Request]) -> int:
         """Cancel every unfinished request in `reqs`: queued occurrences
@@ -536,6 +821,8 @@ class PipelineExecutor:
         """Stop every worker and join it. Returns True when all worker
         threads exited within the timeout. Safe to call twice."""
         self._shutdown = True
+        if self._fault_stop is not None:
+            self._fault_stop.set()
         to_join: List[threading.Thread] = []
         for st in self._stages.values():
             with st.cond:

@@ -144,6 +144,7 @@ class LiveControlLoop:
         # co-simulation loop's partition of the run
         t_lo = -np.inf if epoch == 1 else t0
         counters = ex.telemetry_counters()
+        fdel = ex.fault_deltas()
         stages: Dict[str, StageTelemetry] = {}
         for s, cur in counters.items():
             p = prev.get(s, {})
@@ -153,6 +154,11 @@ class LiveControlLoop:
             # deltas landed by t1
             replicas = base_replicas[s] + sum(
                 d for (t, d) in sched.get(s, ()) if t <= t1)
+            # alive = target minus injected-crash losses landed by t1 —
+            # the capacity-loss signal failure-aware controllers react
+            # to; floored at 0 (negative would read as "untracked")
+            alive = max(0, replicas + sum(
+                d for (t, d) in fdel.get(s, ()) if t <= t1))
             stages[s] = StageTelemetry(
                 stage=s,
                 arrived=int(cur["arrived"] - p.get("arrived", 0)),
@@ -160,7 +166,7 @@ class LiveControlLoop:
                 dropped=int(cur["dropped"] - p.get("dropped", 0)),
                 queue_depth=int(cur["queue_depth"]),
                 in_flight=int(cur["in_flight"]),
-                replicas=replicas)
+                replicas=replicas, alive=alive)
         prev.clear()
         prev.update(counters)
 
@@ -248,6 +254,9 @@ class LiveControlLoop:
                         break
                     time.sleep(min(t - now, 0.05))
                 epoch += 1
+                # surface real worker crashes within one epoch — a dead
+                # fleet must fail the run now, not at drain time
+                self._check_worker_failures()
                 tele = self._telemetry(epoch, t0, t, reqs, prev_counters,
                                        base_replicas, sched, env)
                 telemetry.append(tele)
@@ -271,13 +280,7 @@ class LiveControlLoop:
         for req in reqs:
             req.done.wait(max(0.0, deadline - time.perf_counter()))
         released = ex.release(reqs)
-        with ex._lock:
-            failures = list(ex.worker_failures)
-        if failures:
-            stages_msg = ", ".join(f"{s}: {e!r}" for s, e in failures)
-            raise RuntimeError(
-                f"{len(failures)} worker thread(s) crashed during the "
-                f"closed-loop run ({stages_msg})")
+        self._check_worker_failures()
 
         lat = np.array([
             np.inf if (r.t_done is None or r.shed or r.cancelled)
@@ -293,6 +296,19 @@ class LiveControlLoop:
             replica_schedules=sched, shed_schedules=shed,
             policy_schedules=pols, cost_times=times, cost_per_hr=costs,
             replica_timeline=timeline, batch_sizes=ex.batch_sizes())
+
+    def _check_worker_failures(self) -> None:
+        """Raise if any worker thread crashed (uncaught exception — an
+        injected fault never registers here). Polled at every epoch
+        boundary and again after drain."""
+        ex = self.executor
+        with ex._lock:
+            failures = list(ex.worker_failures)
+        if failures:
+            stages_msg = ", ".join(f"{s}: {e!r}" for s, e in failures)
+            raise RuntimeError(
+                f"{len(failures)} worker thread(s) crashed during the "
+                f"closed-loop run ({stages_msg})")
 
     def _apply_if_due(self, ev: ControlEvent, now: float) -> bool:
         """Scale-ups apply immediately (the executor defers activation to

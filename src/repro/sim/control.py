@@ -136,6 +136,7 @@ class ControlLoopSession:
         states,
         sched: Dict[str, List[Tuple[float, int]]],
         env: IncrementalEnvelope,
+        faults=None,
     ) -> EpochTelemetry:
         # the first epoch's window is closed at BOTH ends ([0, t1], not
         # (0, t1]) so an arrival at exactly t=0 is counted somewhere —
@@ -174,10 +175,17 @@ class ControlLoopSession:
                             .sum())
             replicas = self.config[s].replicas + sum(
                 d for (t, d) in sched.get(s, ()) if t <= t1)
+            # alive mirrors the live loop's fault_deltas accounting:
+            # replica target minus crash losses observed by t1, floored
+            # at 0 — a schedule can ask for more kills than exist, and
+            # a negative value would read as the "untracked" sentinel
+            sf = faults.stage(s) if faults else None
+            alive = max(0, replicas - (sum(n for (t, n) in sf.crashes()
+                                           if t <= t1) if sf else 0))
             stages[s] = StageTelemetry(
                 stage=s, arrived=arrived, completed=completed,
                 dropped=dropped, queue_depth=int(backlog.sum()),
-                in_flight=in_flight, replicas=replicas)
+                in_flight=in_flight, replicas=replicas, alive=alive)
 
         # pipeline-level windowed accounting (causal: completions and
         # deadline passages inside this window only — each missing query
@@ -203,7 +211,8 @@ class ControlLoopSession:
 
     # -- the loop ----------------------------------------------------------
     def run(self, arrivals: np.ndarray, controller,
-            t_end: Optional[float] = None) -> ClosedLoopResult:
+            t_end: Optional[float] = None,
+            faults=None) -> ClosedLoopResult:
         arr = np.asarray(arrivals, dtype=np.float64)
         if arr.size > 1 and np.any(np.diff(arr) < 0):
             # the engine tolerates unsorted traces (it sorts per stage)
@@ -228,11 +237,11 @@ class ControlLoopSession:
         while t <= t_stop + 1e-9:
             epoch += 1
             res = session.simulate(self.config, sched, shed or None,
-                                   pols or None)
+                                   pols or None, faults)
             states = session.stage_states(self.config, sched, shed or None,
-                                          pols or None)
+                                          pols or None, faults)
             tele = self._telemetry(epoch, t0, t, arr, res, states, sched,
-                                   env)
+                                   env, faults)
             telemetry.append(tele)
             for ev in controller.step(tele) or ():
                 # shared validation + schedule folding (repro.control):
@@ -243,7 +252,8 @@ class ControlLoopSession:
             t0 = t
             t += self.epoch_s
 
-        res = session.simulate(self.config, sched, shed or None, pols or None)
+        res = session.simulate(self.config, sched, shed or None, pols or None,
+                               faults)
         times, costs, timeline = replica_cost_timeline(
             self.pipeline, self.config, sched, t_stop)
         return ClosedLoopResult(

@@ -66,6 +66,18 @@ def _policy_key(sched: Optional[PolicySchedule]) -> Tuple:
     return tuple((float(t), str(p)) for t, p in sched) if sched else ()
 
 
+def _fault_key(spec) -> Tuple:
+    """Cache-key component for one stage's fault spec
+    (:class:`repro.faults.schedule.StageFaults`); faults change stage
+    outcomes just like replica/shed/policy schedules, so they must
+    reach the cone keys (KEY01)."""
+    if spec is None:
+        return ()
+    return (int(spec.seed), spec.recovery.key(), tuple(
+        (str(kind), float(t0), float(t1), float(v))
+        for kind, t0, t1, v in spec.events))
+
+
 class SimEngine:
     """Stateless pipeline simulator + shared caches (LUTs, routing draws).
 
@@ -185,13 +197,15 @@ class SimEngine:
         class_names: Optional[Sequence[str]] = None,
         shed_schedules: Optional[ShedSchedules] = None,
         policy_schedules: Optional[PolicySchedules] = None,
+        fault_schedules=None,
     ) -> SimResult:
         """One-shot simulation (fresh session; no cross-call memoization)."""
         return self.session(arrivals, slo_s=slo_s, class_ids=class_ids,
                             class_names=class_names).simulate(
             config, replica_schedules=replica_schedules,
             shed_schedules=shed_schedules,
-            policy_schedules=policy_schedules)
+            policy_schedules=policy_schedules,
+            fault_schedules=fault_schedules)
 
     def service_time(self, config: PipelineConfig) -> float:
         """Sum of batch-size-configured latencies along the longest path
@@ -336,8 +350,8 @@ class TraceSession:
     def _stage_key(self, stage: str, config: PipelineConfig,
                    schedules: Optional[Schedules],
                    shed_schedules: Optional[ShedSchedules] = None,
-                   policy_schedules: Optional[PolicySchedules] = None
-                   ) -> Tuple:
+                   policy_schedules: Optional[PolicySchedules] = None,
+                   fault_schedules=None) -> Tuple:
         # StageConfig.key() is the single source of truth for config
         # identity — new StageConfig knobs invalidate these caches
         # automatically instead of silently colliding. The backend token
@@ -347,9 +361,11 @@ class TraceSession:
         sched = schedules or {}
         shed = shed_schedules or {}
         pols = policy_schedules or {}
+        faults = fault_schedules
         return (stage, self.backend, tuple(
             (s, config[s].key(), _sched_key(sched.get(s)),
-             _shed_key(shed.get(s)), _policy_key(pols.get(s)))
+             _shed_key(shed.get(s)), _policy_key(pols.get(s)),
+             _fault_key(faults.stage(s) if faults else None))
             for s in self.engine._cone[stage]
         ))
 
@@ -403,6 +419,7 @@ class TraceSession:
         completion: Dict[str, np.ndarray],
         shed_schedules: Optional[ShedSchedules] = None,
         policy_schedules: Optional[PolicySchedules] = None,
+        fault_schedules=None,
     ) -> _StageEntry:
         engine = self.engine
         n = self.n
@@ -429,6 +446,8 @@ class TraceSession:
             (shed_schedules or {}).get(stage),
             (policy_schedules or {}).get(stage),
             backend=self.backend,
+            fault_spec=(fault_schedules.stage(stage)
+                        if fault_schedules else None),
         )
         comp = np.full(n, -np.inf)
         comp[order] = done_sorted
@@ -444,12 +463,17 @@ class TraceSession:
         replica_schedules: Optional[Schedules] = None,
         shed_schedules: Optional[ShedSchedules] = None,
         policy_schedules: Optional[PolicySchedules] = None,
+        fault_schedules=None,
     ) -> SimResult:
         """Run the trace through the configured pipeline.
 
         Per-stage results are memoized on the stage's configuration cone,
         so repeat calls with partially-overlapping configurations only
         simulate the stages whose cone actually changed.
+
+        ``fault_schedules`` (a :class:`repro.faults.FaultSchedule`) adds
+        deterministic crash/straggle/error disruptions; its per-stage
+        components are part of the cone cache keys.
         """
         engine = self.engine
         n = self.n
@@ -466,12 +490,13 @@ class TraceSession:
 
         for stage in engine._topo:
             skey = self._stage_key(stage, config, replica_schedules,
-                                   shed_schedules, policy_schedules)
+                                   shed_schedules, policy_schedules,
+                                   fault_schedules)
             ent = self._stage_cache.get(skey)
             if ent is None:
                 ent = self._simulate_stage_entry(
                     stage, config, replica_schedules, visited, completion,
-                    shed_schedules, policy_schedules)
+                    shed_schedules, policy_schedules, fault_schedules)
                 self._stage_cache[skey] = ent
                 self._cache_bytes += ent.nbytes
                 self.stats["stage_sims"] += 1
@@ -516,6 +541,7 @@ class TraceSession:
         replica_schedules: Optional[Schedules] = None,
         shed_schedules: Optional[ShedSchedules] = None,
         policy_schedules: Optional[PolicySchedules] = None,
+        fault_schedules=None,
     ) -> Dict[str, StageState]:
         """Per-stage queue views for the configured simulation — what the
         closed-loop telemetry (:mod:`repro.sim.control`) samples at epoch
@@ -530,12 +556,13 @@ class TraceSession:
         out: Dict[str, StageState] = {}
         for stage in engine._topo:
             skey = self._stage_key(stage, config, replica_schedules,
-                                   shed_schedules, policy_schedules)
+                                   shed_schedules, policy_schedules,
+                                   fault_schedules)
             ent = self._stage_cache.get(skey)
             if ent is None:
                 ent = self._simulate_stage_entry(
                     stage, config, replica_schedules, visited, completion,
-                    shed_schedules, policy_schedules)
+                    shed_schedules, policy_schedules, fault_schedules)
                 self._stage_cache[skey] = ent
                 self._cache_bytes += ent.nbytes
                 self.stats["stage_sims"] += 1

@@ -753,6 +753,7 @@ def simulate_stage(
     shed_events: Optional[Sequence[Tuple[float, float]]] = None,
     policy_events: Optional[Sequence[Tuple[float, str]]] = None,
     backend: str = "numpy",
+    fault_spec=None,
 ) -> StageOutcome:
     """Dispatch to a named policy. `ready` must be sorted ascending.
 
@@ -765,10 +766,24 @@ def simulate_stage(
     (:mod:`repro.sim.jax_backend`). Both are bit-identical; jax pays a
     per-shape compile, so it only wins on batched candidate grids — the
     engine routes those through ``grid_stage_percentiles`` directly.
+
+    A non-empty ``fault_spec`` (:class:`repro.faults.schedule
+    .StageFaults`) routes through the scalar fault-aware event loop
+    (:func:`repro.faults.simstage.simulate_stage_faults`) which handles
+    crashes/stragglers/transient errors plus retry/hedge recovery and
+    folds ``policy_events`` itself; ``None`` or empty specs take the
+    existing paths untouched (bit-identical no-fault guarantee).
     """
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}; "
                          f"have ('numpy', 'jax')")
+    if fault_spec is not None and fault_spec.events:
+        from repro.faults.simstage import simulate_stage_faults
+
+        return simulate_stage_faults(
+            policy, ready, latency_lut, max_batch, replicas,
+            replica_events, timeout_s, deadline, shed_events,
+            policy_events, fault_spec)
     if policy_events:
         return switched(ready, latency_lut, max_batch, replicas,
                         replica_events, timeout_s, deadline, shed_events,

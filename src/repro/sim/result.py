@@ -217,6 +217,9 @@ class StageTelemetry:
     #                       service time of t_end (= currently in service,
     #                       up to the batch-latency bound)
     replicas: int         # configured replica target effective at t_end
+    alive: int = -1       # replicas minus observed crash losses at t_end;
+    #                       -1 = no fault tracking (legacy constructors),
+    #                       which controllers treat as "assume healthy"
 
 
 @dataclasses.dataclass

@@ -173,6 +173,12 @@ def test_key01_flags_dropped_schedule_component(tmp_path):
 
         def _policy_key(sched):
             return tuple((float(t), str(p)) for t, p in sched) if sched else ()
+
+        def _fault_key(spec):
+            if spec is None:
+                return ()
+            return tuple((str(k), float(a), float(b), float(v))
+                         for k, a, b, v in spec.events)
     """})
     found = _findings(tmp_path, "KEY01")
     assert len(found) == 1
@@ -186,9 +192,46 @@ def test_key01_flags_missing_schedule_helper(tmp_path):
 
         def _shed_key(sched):
             return tuple((float(t), float(m)) for t, m in sched) if sched else ()
+
+        def _fault_key(spec):
+            return tuple((str(k), float(a), float(b), float(v))
+                         for k, a, b, v in spec.events) if spec else ()
     """})
     found = _findings(tmp_path, "KEY01")
     assert len(found) == 1 and "_policy_key" in found[0].message
+
+
+def test_key01_flags_fault_key_arity_mismatch(tmp_path):
+    # FaultSchedule events are 4-tuples (kind, t0, t1, value); a
+    # _fault_key folding only 3 components makes one fault dimension
+    # invisible to the cone cache — two schedules differing only in
+    # that component collide on one entry
+    _write_tree(tmp_path, {
+        "repro/sim/engine.py": """
+            def _sched_key(sched):
+                return tuple((float(t), int(d)) for t, d in sched) if sched else ()
+
+            def _shed_key(sched):
+                return tuple((float(t), float(m)) for t, m in sched) if sched else ()
+
+            def _policy_key(sched):
+                return tuple((float(t), str(p)) for t, p in sched) if sched else ()
+
+            def _fault_key(spec):
+                return tuple((str(k), float(a), float(v))
+                             for k, a, v in spec.events) if spec else ()
+        """,
+        "repro/faults/schedule.py": """
+            class FaultSchedule:
+                def __init__(self, raw):
+                    self.events = tuple(
+                        (str(k), float(a), float(b), float(v))
+                        for k, a, b, v in raw)
+        """,
+    })
+    found = _findings(tmp_path, "KEY01")
+    assert len(found) == 1
+    assert "_fault_key" in found[0].message and "4" in found[0].message
 
 
 # -- LOCK01 ------------------------------------------------------------------

@@ -1,0 +1,336 @@
+"""Fault vocabulary + failure-aware simulation (tier-1, sim-only).
+
+The fault subsystem's contract, pinned as properties (``tests/_hyp``):
+
+* **replay determinism** — the same seed and fault schedule through a
+  fresh engine is bit-identical (property (c) of the fault issue);
+* **identity** — ``faults=None``, an *empty* ``FaultSchedule`` and the
+  omitted argument are all bit-identical to the fault-free golden path
+  (property (d)): shipping the subsystem must not perturb a single
+  existing output;
+* **bounded retry** — retries never exceed ``max_attempts`` and the
+  backoff sequence is monotone non-decreasing (property (b));
+* **cone-key hygiene** — a session that simulated under faults must
+  still return bit-identical fault-free results afterwards (the KEY01
+  ``_fault_key`` dimension, exercised dynamically);
+* **recovery loop** — the ClosedLoopTuner replaces crashed capacity
+  through the ordinary ControlEvent path, and ``failure_recovery=False``
+  switches that off;
+* **planner headroom** — ``failure_headroom=f`` yields a plan that
+  stays feasible after losing ``f`` replicas from any single stage.
+
+The live-thread half lives in ``tests/test_faults_live.py``.
+"""
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.core.estimator import Estimator
+from repro.core.pipeline import PipelineConfig, StageConfig, linear_pipeline
+from repro.core.planner import Planner
+from repro.core.profiler import ModelProfile, ProfileStore
+from repro.core.tuner import ClosedLoopTuner, TunerPlanInfo
+from repro.faults import (
+    Fault,
+    FaultSchedule,
+    RecoveryPolicy,
+    crash,
+    straggle,
+    transient,
+)
+from repro.sim import ControlLoopSession, SimEngine
+from repro.workload.generator import gamma_trace
+
+HW = "cpu-1"
+SLO = 0.15
+
+
+def _pipeline(n_stages=2, base=0.004, slope=0.001):
+    names = [f"m{i}" for i in range(n_stages)]
+    pipe = linear_pipeline("f", names, {n: [HW] for n in names})
+    store = ProfileStore()
+    for i, nm in enumerate(names):
+        table = {(HW, b): base * (1 + 0.3 * i) + slope * b
+                 for b in (1, 2, 4, 8, 16, 32)}
+        store.add(ModelProfile(nm, table, (1, 2, 4, 8, 16, 32)))
+    return pipe, store
+
+
+def _config(pipe, batch=4, replicas=2, **kw):
+    return PipelineConfig({
+        s: StageConfig(HW, batch, replicas, **kw) for s in pipe.stages})
+
+
+# -- vocabulary --------------------------------------------------------------
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault("melt", "s0_m0", 0.0, 1.0, 1.0)          # unknown kind
+    with pytest.raises(ValueError):
+        crash("s0_m0", -1.0)                           # negative time
+    with pytest.raises(ValueError):
+        Fault("crash", "s0_m0", 1.0, 2.0, 1.0)         # crash is a point
+    with pytest.raises(ValueError):
+        straggle("s0_m0", 2.0, 1.0, 3.0)               # inverted window
+    with pytest.raises(ValueError):
+        transient("s0_m0", 0.0, 1.0, 1.5)              # p out of [0, 1]
+    with pytest.raises(ValueError):
+        straggle("s0_m0", 0.0, 1.0, 0.5)               # speedup, not a fault
+
+
+def test_schedule_key_folds_every_component():
+    """Two schedules differing in any one component must key apart —
+    the dynamic twin of the KEY01 ``_fault_key`` registry entry."""
+    base = [crash("a", 1.0), straggle("a", 2.0, 3.0, 4.0),
+            transient("b", 0.5, 1.5, 0.25)]
+    k0 = FaultSchedule(base, seed=7).key()
+    assert FaultSchedule(base, seed=7).key() == k0          # deterministic
+    variants = [
+        FaultSchedule(base, seed=8),                        # seed
+        FaultSchedule(base[:-1], seed=7),                   # event set
+        FaultSchedule([crash("a", 1.5)] + base[1:], seed=7),  # t0
+        FaultSchedule([base[0], straggle("a", 2.0, 3.5, 4.0),
+                       base[2]], seed=7),                   # t1
+        FaultSchedule([base[0], base[1],
+                       transient("b", 0.5, 1.5, 0.5)], seed=7),  # value
+        FaultSchedule(base, seed=7,
+                      recovery=RecoveryPolicy(max_attempts=5)),  # recovery
+    ]
+    assert len({v.key() for v in variants} | {k0}) == len(variants) + 1
+    assert not FaultSchedule([])
+    assert FaultSchedule(base)
+
+
+def test_backoff_monotone_and_bounded():
+    """Property (b): the backoff sequence is monotone non-decreasing
+    and a request is attempted at most max_attempts times."""
+    rec = RecoveryPolicy(max_attempts=4, backoff_s=0.01, backoff_mult=2.0)
+    seq = [rec.backoff(i) for i in range(1, rec.max_attempts + 1)]
+    assert all(b >= 0.0 for b in seq)
+    assert all(b2 >= b1 for b1, b2 in zip(seq, seq[1:]))
+
+    # p=1.0 transient: every attempt fails, so every query must be
+    # dropped after exactly bounded retries — never an infinite loop
+    pipe, store = _pipeline(1)
+    cfg = _config(pipe)
+    arr = gamma_trace(50.0, 1.0, 2.0, seed=3)
+    fs = FaultSchedule([transient("s0_m0", 0.0, 1e9, 1.0)], seed=1,
+                       recovery=rec)
+    res = SimEngine(pipe, store, seed=0).simulate(cfg, arr, slo_s=SLO,
+                                                  fault_schedules=fs)
+    assert res.dropped is not None and res.dropped.all()
+    assert np.isinf(res.latency).all()
+
+
+# -- identity + determinism --------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16))
+def test_no_fault_schedule_is_identity(seed):
+    """Property (d): None, omitted, and an EMPTY FaultSchedule are all
+    bit-identical — the subsystem is invisible until armed."""
+    pipe, store = _pipeline(2)
+    cfg = _config(pipe)
+    arr = gamma_trace(80.0, 1.0, 3.0, seed=seed)
+    eng = SimEngine(pipe, store, seed=0)
+    base = eng.simulate(cfg, arr, slo_s=SLO)
+    omitted = SimEngine(pipe, store, seed=0).simulate(cfg, arr, slo_s=SLO,
+                                                      fault_schedules=None)
+    empty = SimEngine(pipe, store, seed=0).simulate(
+        cfg, arr, slo_s=SLO, fault_schedules=FaultSchedule([]))
+    np.testing.assert_array_equal(base.latency, omitted.latency)
+    np.testing.assert_array_equal(base.latency, empty.latency)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16),
+       st.floats(min_value=0.05, max_value=0.95))
+def test_same_seed_fault_replay_bit_identical(seed, p_err):
+    """Property (c): the full fault mix under one seed replays bit-
+    identically through a fresh engine."""
+    pipe, store = _pipeline(2)
+    cfg = _config(pipe)
+    arr = gamma_trace(100.0, 1.0, 4.0, seed=seed)
+    fs = FaultSchedule(
+        [crash("s0_m0", 1.0),
+         straggle("s1_m1", 0.5, 2.5, 3.0),
+         transient("s0_m0", 0.0, 4.0, p_err)],
+        seed=seed, recovery=RecoveryPolicy(max_attempts=3, backoff_s=0.01))
+    r1 = SimEngine(pipe, store, seed=0).simulate(cfg, arr, slo_s=SLO,
+                                                 fault_schedules=fs)
+    r2 = SimEngine(pipe, store, seed=0).simulate(cfg, arr, slo_s=SLO,
+                                                 fault_schedules=fs)
+    np.testing.assert_array_equal(r1.latency, r2.latency)
+    if r1.dropped is None:
+        assert r2.dropped is None
+    else:
+        np.testing.assert_array_equal(r1.dropped, r2.dropped)
+
+
+def test_session_cache_keyed_on_faults():
+    """A session that simulated under faults must afterwards return the
+    fault-free result bit-identically — the cone cache keys the fault
+    dimension (KEY01's ``_fault_key``), so no stale-entry collision."""
+    pipe, store = _pipeline(2)
+    cfg = _config(pipe)
+    arr = gamma_trace(80.0, 1.0, 3.0, seed=11)
+    sess = SimEngine(pipe, store, seed=0).session(arr, slo_s=SLO)
+    clean = sess.simulate(cfg)
+    fs = FaultSchedule([straggle("s0_m0", 0.0, 3.0, 5.0)], seed=2)
+    faulty = sess.simulate(cfg, fault_schedules=fs)
+    assert not np.array_equal(clean.latency, faulty.latency)
+    again = sess.simulate(cfg)
+    np.testing.assert_array_equal(clean.latency, again.latency)
+    faulty2 = sess.simulate(cfg, fault_schedules=fs)
+    np.testing.assert_array_equal(faulty.latency, faulty2.latency)
+
+
+# -- fault semantics ---------------------------------------------------------
+
+
+def test_crash_loses_capacity_and_all_dead_starves():
+    """Crashing one of two replicas degrades throughput; crashing both
+    starves the stage — unserved queries carry the far-future sentinel
+    (not Inf: they are stuck, not shed) and are not marked dropped."""
+    pipe, store = _pipeline(1)
+    cfg = _config(pipe, replicas=2)
+    arr = gamma_trace(120.0, 1.0, 3.0, seed=5)
+    eng = SimEngine(pipe, store, seed=0)
+    base = eng.simulate(cfg, arr, slo_s=SLO)
+
+    one = eng.simulate(cfg, arr, slo_s=SLO, fault_schedules=FaultSchedule(
+        [crash("s0_m0", 0.5)], seed=0))
+    assert one.latency.mean() > base.latency.mean()
+    assert np.isfinite(one.latency).all()
+
+    dead = eng.simulate(cfg, arr, slo_s=SLO, fault_schedules=FaultSchedule(
+        [crash("s0_m0", 0.5, n=2)], seed=0))
+    starved = dead.latency > 1e17
+    assert starved.any()
+    assert dead.dropped is None or not dead.dropped[starved].any()
+
+    # a replacement replica (the recovery path's control event) un-starves
+    healed = eng.simulate(
+        cfg, arr, replica_schedules={"s0_m0": [(1.0, 1)]}, slo_s=SLO,
+        fault_schedules=FaultSchedule([crash("s0_m0", 0.5, n=2)], seed=0))
+    assert np.isfinite(healed.latency).all()
+
+
+def test_transient_retry_recovers_and_recovery_off_drops():
+    """An error window that closes lets retries land (finite latencies);
+    with recovery disabled the same faults drop every affected query."""
+    pipe, store = _pipeline(1)
+    cfg = _config(pipe)
+    arr = np.sort(gamma_trace(60.0, 1.0, 0.4, seed=7))
+    fs_on = FaultSchedule(
+        [transient("s0_m0", 0.0, 0.5, 1.0)], seed=1,
+        recovery=RecoveryPolicy(max_attempts=8, backoff_s=0.2,
+                                backoff_mult=2.0))
+    eng = SimEngine(pipe, store, seed=0)
+    res_on = eng.simulate(cfg, arr, slo_s=SLO, fault_schedules=fs_on)
+    assert np.isfinite(res_on.latency).all()
+
+    fs_off = FaultSchedule([transient("s0_m0", 0.0, 0.5, 1.0)], seed=1,
+                           recovery=RecoveryPolicy(enabled=False))
+    res_off = eng.simulate(cfg, arr, slo_s=SLO, fault_schedules=fs_off)
+    assert res_off.dropped is not None and res_off.dropped.all()
+
+
+def test_straggle_window_slows_only_inside():
+    pipe, store = _pipeline(1)
+    cfg = _config(pipe, replicas=4)
+    arr = np.arange(0.0, 4.0, 0.05)           # sparse: no queueing
+    eng = SimEngine(pipe, store, seed=0)
+    base = eng.simulate(cfg, arr, slo_s=SLO)
+    fs = FaultSchedule([straggle("s0_m0", 1.0, 2.0, 10.0)], seed=0)
+    slow = eng.simulate(cfg, arr, slo_s=SLO, fault_schedules=fs)
+    inside = (arr >= 1.0) & (arr < 2.0)
+    assert (slow.latency[inside] > base.latency[inside]).all()
+    np.testing.assert_allclose(slow.latency[arr < 0.9],
+                               base.latency[arr < 0.9])
+
+
+# -- closed-loop recovery ----------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def planned(image_pipeline):
+    pipe, store = image_pipeline
+    sample = gamma_trace(lam=150.0, cv=1.0, duration_s=60.0, seed=0)
+    res = Planner(pipe, store).plan(sample, SLO)
+    assert res.feasible
+    est = Estimator(pipe, store)
+    info = TunerPlanInfo.from_plan(pipe, res.config, store, sample,
+                                   est.service_time(res.config))
+    return pipe, store, res, info
+
+
+def _crashed_stage(res):
+    # crash a stage that planned >= 2 replicas if one exists
+    return max(res.config.stage_configs,
+               key=lambda s: res.config[s].replicas)
+
+
+def test_tuner_replaces_crashed_capacity(planned):
+    """The ClosedLoopTuner reads capacity loss off telemetry (alive <
+    provisioned) and emits replacement ups through the ordinary
+    ControlEvent path; the final fleet is restored to plan."""
+    pipe, store, res, info = planned
+    stage = _crashed_stage(res)
+    arr = gamma_trace(150.0, 1.0, 40.0, seed=13)
+    fs = FaultSchedule([crash(stage, 10.0)], seed=0)
+    tuner = ClosedLoopTuner(info)
+    out = ControlLoopSession(pipe, store, res.config, SLO).run(
+        arr, tuner, faults=fs)
+    ups = [e for e in out.events
+           if e.stage == stage and e.kind == "up"]
+    assert ups, "no replacement up was emitted for the crashed stage"
+    # final fleet (plan + control deltas) minus the crash loss == plan
+    final = res.config[stage].replicas + sum(
+        d for (_, d) in out.replica_schedules.get(stage, ()))
+    assert final - 1 >= res.config[stage].replicas
+
+
+def test_tuner_failure_recovery_off(planned):
+    """failure_recovery=False: the same crash provisions strictly fewer
+    replacement replicas for the crashed stage than recovery-on."""
+    pipe, store, res, info = planned
+    stage = _crashed_stage(res)
+    arr = gamma_trace(150.0, 1.0, 40.0, seed=13)
+    fs = FaultSchedule([crash(stage, 10.0)], seed=0)
+    out_off = ControlLoopSession(pipe, store, res.config, SLO).run(
+        arr, ClosedLoopTuner(info, failure_recovery=False), faults=fs)
+    out_on = ControlLoopSession(pipe, store, res.config, SLO).run(
+        arr, ClosedLoopTuner(info), faults=fs)
+
+    def ups(out):
+        return sum(int(e.value) for e in out.events
+                   if e.stage == stage and e.kind == "up")
+
+    assert ups(out_on) > ups(out_off)
+
+
+# -- planner headroom --------------------------------------------------------
+
+
+def test_planner_failure_headroom(image_pipeline):
+    """failure_headroom=1 plans survive losing one replica from any
+    single stage, at a cost no lower than the headroom-free plan."""
+    pipe, store = image_pipeline
+    sample = gamma_trace(lam=150.0, cv=1.0, duration_s=60.0, seed=0)
+    base = Planner(pipe, store).plan(sample, SLO)
+    hard_planner = Planner(pipe, store, failure_headroom=1)
+    hard = hard_planner.plan(sample, SLO)
+    assert hard.feasible
+    assert hard.config.cost_per_hr() >= base.config.cost_per_hr()
+    for s in pipe.stages:
+        assert hard.config[s].replicas >= base.config[s].replicas
+        probe = hard.config.copy()
+        if probe[s].replicas > 1:
+            probe[s].replicas -= 1
+            assert hard_planner._feasible(probe, SLO), (
+                f"headroom plan not resilient to losing one {s} replica")

@@ -1,0 +1,257 @@
+"""Live fault injection: crashes, stragglers, retries on real threads.
+
+Time-budgeted chaos lane (tier-1, run alongside the live-executor
+smoke): the same :class:`~repro.faults.FaultSchedule` vocabulary the
+simulator consumes drives the real :class:`~repro.serving.executor
+.PipelineExecutor` — injected crashes kill actual worker threads at
+scheduled instants (cleanly: they must NOT trip the real-bug
+``worker_failures`` registry), stragglers stretch observed service
+time, and transient errors exercise the bounded-retry + hedging
+recovery path. Also here: the AND-join regression (a diamond pipeline
+delivers exactly once per request, with and without conditional
+branches) and the closed-loop driver's epoch-boundary worker-failure
+polling.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (
+    SOURCE,
+    Edge,
+    Pipeline,
+    PipelineConfig,
+    Stage,
+    StageConfig,
+    linear_pipeline,
+)
+from repro.faults import FaultSchedule, RecoveryPolicy, crash, straggle, transient
+from repro.serving.executor import PipelineExecutor, _Request
+from repro.serving.loop import LiveControlLoop
+from repro.sim import ScheduleController
+
+
+def _sleep_fn(per_batch_s):
+    def fn(payloads):
+        time.sleep(per_batch_s)
+        return list(payloads)
+    return fn
+
+
+def _linear(n_stages=1, batch=4, replicas=1, **kw):
+    names = [f"m{i}" for i in range(n_stages)]
+    pipe = linear_pipeline("t", names, {n: ["cpu-1"] for n in names})
+    cfg = PipelineConfig({
+        s: StageConfig("cpu-1", batch, replicas, **kw)
+        for s in pipe.stages})
+    return pipe, cfg
+
+
+def _diamond(prob_c=1.0):
+    """a -> (b, c) -> d; the c branch optionally conditional."""
+    stages = {n: Stage(n, n, ("cpu-1",)) for n in "abcd"}
+    edges = [Edge(SOURCE, "a"), Edge("a", "b"),
+             Edge("a", "c", probability=prob_c),
+             Edge("b", "d"), Edge("c", "d")]
+    pipe = Pipeline("diamond", stages, edges)
+    cfg = PipelineConfig({
+        s: StageConfig("cpu-1", 4, 1) for s in stages})
+    fns = {n: _sleep_fn(0.002) for n in "abcd"}
+    return pipe, cfg, fns
+
+
+# -- AND-join regression (satellite 1) ---------------------------------------
+
+
+def test_diamond_and_join_exactly_once():
+    """The join stage d must serve each request exactly once, after BOTH
+    parents delivered — not twice (the pre-fix behavior: each parent
+    enqueued independently)."""
+    pipe, cfg, fns = _diamond()
+    ex = PipelineExecutor(pipe, cfg, fns)
+    done_rids = []
+    done_lock = threading.Lock()
+
+    def on_done(req):
+        with done_lock:
+            done_rids.append(req.rid)
+
+    ex.on_request_done = on_done
+    lat = ex.serve_trace(np.linspace(0.0, 0.3, 30), lambda i: i,
+                         timeout_s=20.0)
+    assert np.isfinite(lat).all(), lat
+    assert sorted(done_rids) == list(range(30))      # exactly once each
+    # the join stage saw each request once, not once per parent
+    with ex._stages["d"].cond:
+        assert ex._stages["d"].arrived == 30
+    assert ex.shutdown()
+
+
+def test_diamond_conditional_branch_anti_tokens():
+    """With a 0.5-probability branch the join must still fire exactly
+    once per request whose other parent delivered: the non-activated
+    branch sends an anti-token instead of leaving the barrier hanging."""
+    pipe, cfg, fns = _diamond(prob_c=0.5)
+    ex = PipelineExecutor(pipe, cfg, fns)
+    done_rids = []
+    done_lock = threading.Lock()
+
+    def on_done(req):
+        with done_lock:
+            done_rids.append(req.rid)
+
+    ex.on_request_done = on_done
+    lat = ex.serve_trace(np.linspace(0.0, 0.3, 30), lambda i: i,
+                         timeout_s=20.0)
+    assert np.isfinite(lat).all(), lat
+    assert sorted(done_rids) == list(range(30))
+    with ex._stages["c"].cond:
+        c_arrived = ex._stages["c"].arrived
+    assert 0 < c_arrived < 30            # the coin actually flipped
+    assert ex.shutdown()
+
+
+# -- injected crashes --------------------------------------------------------
+
+
+def test_crash_kills_thread_and_requeues_in_flight():
+    """A scheduled crash takes a real worker down (clean exit: nothing
+    in worker_failures) and its in-flight batch is requeued, so every
+    request still finishes on the survivor."""
+    pipe, cfg = _linear(replicas=2, batch=2)
+    fs = FaultSchedule([crash("s0_m0", 0.08)], seed=0)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.05)}, faults=fs)
+    lat = ex.serve_trace(np.linspace(0.0, 0.4, 16), lambda i: i,
+                         timeout_s=20.0)
+    assert np.isfinite(lat).all(), lat   # serve_trace raises on failures
+    assert ex.replica_target("s0_m0") == 1
+    deadline = time.time() + 3.0
+    while ex.live_worker_count("s0_m0") > 1 and time.time() < deadline:
+        time.sleep(0.02)
+    assert ex.live_worker_count("s0_m0") == 1
+    deltas = ex.fault_deltas()["s0_m0"]
+    assert len(deltas) == 1 and deltas[0][1] == -1
+    assert ex.shutdown()
+
+
+def test_crash_then_control_replacement():
+    """The recovery story end to end on real threads: a crash halves
+    the fleet; a replacement `up` control event restores it."""
+    pipe, cfg = _linear(replicas=2, batch=2)
+    fs = FaultSchedule([crash("s0_m0", 0.05)], seed=0)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.01)}, faults=fs)
+    ex.start_run()
+    time.sleep(0.15)                     # let the driver land the crash
+    assert ex.replica_target("s0_m0") == 1
+    ex.add_replicas("s0_m0", 1, t_active=ex.now())
+    assert ex.replica_target("s0_m0") == 2
+    deadline = time.time() + 3.0
+    while ex.live_worker_count("s0_m0") < 2 and time.time() < deadline:
+        time.sleep(0.02)
+    assert ex.live_worker_count("s0_m0") == 2
+    assert ex.shutdown()
+
+
+def test_straggle_stretches_observed_latency():
+    pipe, cfg = _linear(replicas=1, batch=1)
+    base_ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.005)})
+    base = base_ex.serve_trace(np.linspace(0.0, 0.3, 10), lambda i: i,
+                               timeout_s=10.0)
+    assert base_ex.shutdown()
+    fs = FaultSchedule([straggle("s0_m0", 0.0, 10.0, 5.0)], seed=0)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.005)}, faults=fs)
+    slow = ex.serve_trace(np.linspace(0.0, 0.3, 10), lambda i: i,
+                          timeout_s=10.0)
+    assert ex.shutdown()
+    assert np.isfinite(slow).all()
+    assert slow.mean() > base.mean() * 2.0
+
+
+# -- transient errors + recovery ---------------------------------------------
+
+
+def test_transient_errors_retried_to_completion():
+    """An error window that closes: every request eventually lands."""
+    pipe, cfg = _linear(replicas=1, batch=4)
+    fs = FaultSchedule(
+        [transient("s0_m0", 0.0, 0.15, 1.0)], seed=3,
+        recovery=RecoveryPolicy(max_attempts=10, backoff_s=0.05,
+                                backoff_mult=2.0))
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.002)}, faults=fs)
+    lat = ex.serve_trace(np.linspace(0.0, 0.1, 8), lambda i: i,
+                         timeout_s=20.0)
+    assert np.isfinite(lat).all(), lat
+    assert ex.shutdown()
+
+
+def test_retries_exhausted_reports_inf_and_run_completes():
+    """p=1.0 forever: bounded retries give up, requests report inf, and
+    the run terminates promptly instead of spinning."""
+    pipe, cfg = _linear(replicas=1, batch=4)
+    fs = FaultSchedule(
+        [transient("s0_m0", 0.0, 1e9, 1.0)], seed=3,
+        recovery=RecoveryPolicy(max_attempts=2, backoff_s=0.01))
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.002)}, faults=fs)
+    t0 = time.time()
+    lat = ex.serve_trace(np.linspace(0.0, 0.1, 8), lambda i: i,
+                         timeout_s=10.0)
+    assert time.time() - t0 < 8.0
+    assert np.isinf(lat).all()
+    assert ex.shutdown()
+
+
+def test_exactly_once_under_errors_and_hedging():
+    """Property (a): with transient errors AND hedged duplicates armed,
+    each request is delivered at most once (resolve-once dedup) and the
+    completion callback fires exactly once per finished request."""
+    pipe, cfg = _linear(n_stages=2, replicas=2, batch=2)
+    fs = FaultSchedule(
+        [transient("s0_m0", 0.0, 0.2, 0.6)], seed=5,
+        recovery=RecoveryPolicy(max_attempts=6, backoff_s=0.02,
+                                backoff_mult=1.5, hedge_slack_s=0.4))
+    ex = PipelineExecutor(pipe, cfg,
+                          {"m0": _sleep_fn(0.004), "m1": _sleep_fn(0.004)},
+                          faults=fs)
+    done_rids = []
+    done_lock = threading.Lock()
+
+    def on_done(req):
+        with done_lock:
+            done_rids.append(req.rid)
+
+    ex.on_request_done = on_done
+    lat = ex.serve_trace(np.linspace(0.0, 0.4, 40), lambda i: i,
+                         timeout_s=20.0, slo_s=0.5)
+    assert len(done_rids) == len(set(done_rids)), "duplicate delivery"
+    finished = sorted(r for r, l in zip(range(40), lat)
+                      if np.isfinite(l))
+    assert set(finished) <= set(done_rids)
+    assert ex.shutdown()
+
+
+# -- closed-loop failure polling (satellite 2) -------------------------------
+
+
+def test_loop_surfaces_worker_failure_at_epoch_boundary():
+    """A real worker crash (uncaught exception) recorded mid-run must
+    fail the loop at the NEXT epoch boundary, not at drain time."""
+    pipe, cfg = _linear(replicas=1, batch=2)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.002)})
+    loop = LiveControlLoop(ex, slo=0.5, epoch_s=0.25, drain_timeout_s=30.0)
+
+    def sabotage():
+        time.sleep(0.3)
+        ex._note_worker_failure("s0_m0", RuntimeError("worker died"))
+
+    threading.Thread(target=sabotage, daemon=True).start()
+    trace = np.linspace(0.0, 6.0, 60)
+    t0 = time.time()
+    with pytest.raises(RuntimeError, match="worker thread"):
+        loop.run(trace, ScheduleController([]), lambda i: i)
+    # caught at an epoch boundary (~0.5 s), far before the 6 s trace
+    # ends or the 30 s drain budget is spent
+    assert time.time() - t0 < 4.0
+    assert ex.shutdown()
