@@ -21,6 +21,22 @@ attribute name equals the guarding lock (simple aliases like
 the attribute (construction precedes sharing). Everything else is a
 finding.
 
+**Handoff guards (cross-process shared memory).** The process-backed
+replica pool (:mod:`repro.serving.procpool`) shares request slabs
+between processes, where no ``threading`` lock can exist: slab
+ownership alternates between the two endpoints via their message pipe
+(whoever last *received* owns the slab until it *sends*). The
+annotation vocabulary covers this with a guard form:
+
+* ``# guarded-by: handoff(<conn>)`` declares the attribute owned under
+  the pipe-handoff protocol of the connection attribute ``<conn>``;
+* ``# holds-lock: handoff(<conn>)`` on a ``def`` declares the function
+  a protocol participant. Participation is *verified*, not trusted: the
+  function body must actually drive the channel (call
+  ``<conn>.send/recv/poll/close``) — an annotated function that never
+  touches the pipe claims ownership the protocol cannot grant, and is
+  itself a finding.
+
 Matching is by terminal lock NAME, not full object path — the registry
 cannot type-infer which instance ``st`` refers to. That approximation
 admits holding the wrong instance's ``cond``, but catches the real
@@ -43,13 +59,44 @@ from repro.analysis.source import ModuleSource, dotted_name
 
 SERVING_PACKAGE = "repro/serving/"
 
-GUARD_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w.]*)")
+# a lock token is a dotted lock-attribute name or handoff(<conn attr>)
+_LOCK_TOKEN = r"(?:handoff\([A-Za-z_][\w.]*\)|[A-Za-z_][\w.]*)"
+GUARD_RE = re.compile(rf"#\s*guarded-by:\s*({_LOCK_TOKEN})")
 HOLDS_RE = re.compile(
-    r"#\s*holds-lock:\s*([A-Za-z_][\w.]*(?:\s*,\s*[A-Za-z_][\w.]*)*)")
+    rf"#\s*holds-lock:\s*({_LOCK_TOKEN}(?:\s*,\s*{_LOCK_TOKEN})*)")
+_HANDOFF_RE = re.compile(r"^handoff\(\s*([A-Za-z_][\w.]*)\s*\)$")
+
+# the pipe surface that constitutes protocol participation for a
+# holds-lock: handoff(<conn>) function
+_CHANNEL_CALLS = ("close", "poll", "recv", "recv_bytes", "send",
+                  "send_bytes")
 
 
 def _terminal(name: str) -> str:
     return name.rsplit(".", 1)[-1]
+
+
+def _norm_lock(tok: str) -> str:
+    """Canonical form of one lock token: terminal attribute name, with
+    handoff guards normalized to ``handoff(<terminal conn name>)``."""
+    tok = tok.strip()
+    m = _HANDOFF_RE.match(tok)
+    if m:
+        return f"handoff({_terminal(m.group(1))})"
+    return _terminal(tok)
+
+
+def _uses_channel(fn: ast.AST, chan: str) -> bool:
+    """True if `fn`'s body calls ``<...>.{chan-protocol method}`` on a
+    base whose terminal name is `chan`."""
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _CHANNEL_CALLS):
+            base = dotted_name(node.func.value)
+            if base is not None and _terminal(base) == chan:
+                return True
+    return False
 
 
 class _Registry:
@@ -60,7 +107,7 @@ class _Registry:
 
     def declare(self, attr: str, lock: str, cls_qual: str) -> None:
         self.guards.setdefault(attr, {})[_terminal(cls_qual)] = \
-            _terminal(lock)
+            _norm_lock(lock)
 
 
 def _collect_registry(mod: ModuleSource, reg: _Registry) -> None:
@@ -140,7 +187,7 @@ def _held_locks(mod: ModuleSource, node: ast.AST) -> Set[str]:
         m = HOLDS_RE.search(mod.comments.get(fn.lineno, ""))
         if m:
             for lock in m.group(1).split(","):
-                held.add(_terminal(lock.strip()))
+                held.add(_norm_lock(lock))
     cur: Optional[ast.AST] = mod.parent.get(node)
     while cur is not None:
         if isinstance(cur, ast.With):
@@ -169,10 +216,39 @@ class Lock01(Rule):
                 _collect_registry(mod, reg)
             if has_annotations or mod.in_package(SERVING_PACKAGE):
                 checked.append(mod)
+        for mod in checked:
+            yield from self._check_handoff_protocol(mod)
         if not reg.guards:
             return
         for mod in checked:
             yield from self._check_module(mod, reg)
+
+    def _check_handoff_protocol(self, mod: ModuleSource
+                                ) -> Iterable[Finding]:
+        """A ``holds-lock: handoff(X)`` function claims slab ownership
+        granted by the X pipe protocol; the claim is only coherent if
+        the function actually participates in that protocol. Verify the
+        body drives the channel (send/recv/poll/close on X)."""
+        for node in ast.walk(mod.tree):
+            if not isinstance(node,
+                              (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            m = HOLDS_RE.search(mod.comments.get(node.lineno, ""))
+            if not m:
+                continue
+            for tok in m.group(1).split(","):
+                hm = _HANDOFF_RE.match(tok.strip())
+                if hm is None:
+                    continue
+                chan = _terminal(hm.group(1))
+                if not _uses_channel(node, chan):
+                    yield self.finding(
+                        mod, node,
+                        f"`holds-lock: handoff({chan})` on {node.name} "
+                        f"but its body never drives channel {chan} "
+                        f"(no {'/'.join(_CHANNEL_CALLS)} call) — the "
+                        f"annotation claims slab ownership the message "
+                        f"protocol cannot grant")
 
     def _check_module(self, mod: ModuleSource,
                       reg: _Registry) -> Iterable[Finding]:
@@ -213,8 +289,17 @@ class Lock01(Rule):
             access = "write of" if isinstance(
                 node.ctx, (ast.Store, ast.Del)) else "read of"
             base = dotted_name(node.value) or "<expr>"
-            yield self.finding(
-                mod, node,
-                f"{access} guarded attribute {base}.{node.attr} outside "
-                f"`with {locks_msg}` (declared guarded-by {locks_msg} "
-                f"in {declaring}) — the PR 5 executor race class")
+            if locks_msg.startswith("handoff("):
+                yield self.finding(
+                    mod, node,
+                    f"{access} guarded attribute {base}.{node.attr} "
+                    f"outside the {locks_msg} ownership protocol "
+                    f"(declared guarded-by {locks_msg} in {declaring}) "
+                    f"— shared-memory slab touched by a non-participant")
+            else:
+                yield self.finding(
+                    mod, node,
+                    f"{access} guarded attribute {base}.{node.attr} "
+                    f"outside `with {locks_msg}` (declared guarded-by "
+                    f"{locks_msg} in {declaring}) — the PR 5 executor "
+                    f"race class")

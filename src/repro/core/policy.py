@@ -440,6 +440,16 @@ class LiveQueue:
     def set_policy(self, name: str) -> None:
         self.policy = check_policy_name(name)
 
+    def drain_all(self) -> List[object]:
+        """Pop every queued item in arrival (push) order and empty the
+        queue — the starved-stage release path: when no replica is left
+        to serve a stage, the executor drains it and resolves the items
+        upstream. Hedged duplicates of the same item come out once per
+        queued occurrence; the caller's resolve-once dedup absorbs them."""
+        out = [self._items[seq] for seq in sorted(self._items)]
+        self.clear()
+        return out
+
     def push(self, item, ready: float,
              deadline: float = float("inf")) -> None:
         seq = next(self._seq)

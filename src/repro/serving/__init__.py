@@ -1,4 +1,10 @@
 from repro.serving.cluster import LiveClusterSim, LiveRunResult  # noqa: F401
 from repro.serving.executor import PipelineExecutor  # noqa: F401
 from repro.serving.frontends import FRONTENDS, Frontend  # noqa: F401
+from repro.serving.ingress import AsyncIngress, IngressStats  # noqa: F401
 from repro.serving.loop import LiveControlLoop, LiveLoopResult  # noqa: F401
+from repro.serving.procpool import (  # noqa: F401
+    ProcessReplicaPool,
+    ProcReplica,
+    ReplicaDead,
+)

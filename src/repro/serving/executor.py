@@ -70,6 +70,12 @@ from repro.faults.schedule import (
     StageFaults,
 )
 from repro.serving.frontends import Frontend
+from repro.serving.procpool import (
+    DEFAULT_SLAB_BYTES,
+    ProcessReplicaPool,
+    ProcReplica,
+    ReplicaDead,
+)
 
 
 @dataclasses.dataclass
@@ -104,9 +110,14 @@ class _Stage:
     def __init__(self, name: str, fn: Callable[[List[Any]], List[Any]],
                  max_batch: int, policy: str, solo_latency_s: float,
                  timeout_s: float = 0.0,
-                 fault_rng: Optional[np.random.Generator] = None):
+                 fault_rng: Optional[np.random.Generator] = None,
+                 pool: Optional[ProcessReplicaPool] = None):
         self.name = name
         self.fn = fn
+        # process backend: each dispatcher thread pairs with one worker
+        # process from this pool (None = thread backend, fn runs inline).
+        # The pool carries its own lock; it is NOT guarded by cond.
+        self.pool = pool
         self.max_batch = max_batch
         self.solo_latency_s = solo_latency_s
         self.queue = LiveQueue(policy, timeout_s=timeout_s)  # guarded-by: cond
@@ -183,6 +194,14 @@ class PipelineExecutor:
         (e.g. to retry real model-fn exceptions); defaults to
         ``faults.recovery`` when a schedule is given, else None
         (legacy behavior: a failed batch reports None payloads).
+      backend: ``"thread"`` (default) runs stage fns inline in the
+        dispatcher threads; ``"process"`` pairs every dispatcher with a
+        worker OS process (:mod:`repro.serving.procpool`) fed through a
+        shared-memory slab — same LiveQueue/batch-formation contract,
+        but service escapes the GIL and injected crashes SIGKILL real
+        processes. Stage fns must be fork-safe for the process backend.
+      slab_bytes: per-replica shared-memory slab size for the process
+        backend (oversize batches fall back to inline pipe transport).
 
     Join semantics: AND-join with per-request barriers, mirroring the
     simulator's ``_stage_ready``. Every stage receives exactly one
@@ -200,9 +219,14 @@ class PipelineExecutor:
                  solo_latency_s: Optional[Dict[str, float]] = None,
                  frontend: Optional[Frontend] = None,
                  faults: Optional[FaultSchedule] = None,
-                 retry: Optional[RecoveryPolicy] = None):
+                 retry: Optional[RecoveryPolicy] = None,
+                 backend: str = "thread",
+                 slab_bytes: int = DEFAULT_SLAB_BYTES):
+        if backend not in ("thread", "process"):
+            raise ValueError(f"unknown executor backend {backend!r}")
         self.pipeline = pipeline
         self.config = config
+        self.backend = backend
         self.rng = np.random.default_rng(seed)
         self._rng_lock = threading.Lock()
         self._lock = threading.Lock()     # guards per-request routing state
@@ -211,9 +235,15 @@ class PipelineExecutor:
         self._t0 = time.perf_counter()             # guarded-by: _lock
         self._shutdown = False
         self.on_request_done: Optional[Callable[[_Request], None]] = None
+        # invoked (outside locks) when a worker records a real crash —
+        # lets a driver blocked on a timed wait fail the run immediately
+        # (a reference read is GIL-atomic; set it before the run starts)
+        self.on_worker_failure: Optional[Callable[[], None]] = None
         # (stage, exception) per uncaught worker crash — failing loudly
         # beats a silent replica loss that deadlocks the run
         self.worker_failures: List[Tuple[str, BaseException]] = []  # guarded-by: _lock
+        # injection-lag telemetry of the most recent trace injection
+        self._injection_stats: Optional[Dict[str, float]] = None  # guarded-by: _lock
         _install_worker_excepthook()
         # fault injection + recovery (repro.faults)
         self._faults = faults
@@ -251,11 +281,14 @@ class PipelineExecutor:
             fault_rng = (np.random.default_rng(
                 [int(faults.seed), zlib.crc32(name.encode())])
                 if faults is not None else None)
+            pool = (ProcessReplicaPool(stage_fns[stage.model_id],
+                                       slab_bytes=slab_bytes)
+                    if backend == "process" else None)
             st = _Stage(name, stage_fns[stage.model_id], cfg.batch_size,
                         getattr(cfg, "policy", "fifo"),
                         float(solo.get(name, 0.0)),
                         timeout_s=float(getattr(cfg, "timeout_s", 0.0)),
-                        fault_rng=fault_rng)
+                        fault_rng=fault_rng, pool=pool)
             self._stages[name] = st
             self._timeline_deltas[name] = []
             self._base_replicas[name] = cfg.replicas
@@ -281,6 +314,7 @@ class PipelineExecutor:
         with self._lock:
             self._t0 = time.perf_counter()
             self.worker_failures = []
+            self._injection_stats = None
         for st in self._stages.values():
             with st.cond:
                 st.arrived = st.completed = st.dropped = 0
@@ -303,6 +337,9 @@ class PipelineExecutor:
     def _note_worker_failure(self, stage: str, exc: BaseException) -> None:
         with self._lock:
             self.worker_failures.append((stage, exc))
+            cb = self.on_worker_failure
+        if cb is not None:   # wake a blocked driver (e.g. the epoch wait)
+            cb()
 
     def _record_delta(self, st: _Stage, t: float, delta: int) -> None:  # holds-lock: cond
         self._timeline_deltas[st.name].append((t, delta))
@@ -360,21 +397,33 @@ class PipelineExecutor:
 
     # -- fault injection ---------------------------------------------------
     def crash_replicas(self, stage: str, n: int = 1) -> int:
-        """Kill `n` worker threads of `stage` (fault injection). Each
-        victim dies at its next scheduling point: an idle victim exits
-        immediately; an in-service victim dies *instead of delivering*
-        and its batch requeues under the recovery policy (the work is
-        never silently lost). The deaths are clean thread exits —
-        injected failures must not trip the ``worker_failures``
-        crash-surfacing path reserved for real bugs. Returns the number
-        actually killed (capped at the stage's live target)."""
+        """Kill `n` replicas of `stage` (fault injection).
+
+        Thread backend: each victim dies at its next scheduling point —
+        an idle victim exits immediately; an in-service victim dies
+        *instead of delivering* and its batch requeues under the
+        recovery policy (the work is never silently lost). The deaths
+        are clean thread exits — injected failures must not trip the
+        ``worker_failures`` crash-surfacing path reserved for real bugs.
+
+        Process backend: the victims are real OS processes, SIGKILLed
+        immediately (busy ones first). A mid-batch death surfaces as
+        :class:`~repro.serving.procpool.ReplicaDead` in the paired
+        dispatcher thread, which requeues the in-flight batch exactly
+        like the thread backend's kill path and exits cleanly.
+
+        Returns the number killed (capped at the stage's live target).
+        """
         st = self._stages[stage]
         t = self.now()
         with st.cond:
             n_eff = min(int(n), st.target)
             if n_eff <= 0:
                 return 0
-            st.kill_pending += n_eff
+            if st.pool is not None:
+                st.pool.kill(n_eff)
+            else:
+                st.kill_pending += n_eff
             st.target -= n_eff
             self._record_delta(st, t, -n_eff)
             self._fault_deltas[stage].append((t, -n_eff))
@@ -430,6 +479,16 @@ class PipelineExecutor:
             st.workers = [t for t in st.workers if t.is_alive()]
             return len(st.workers)
 
+    def live_process_count(self, stage: str) -> int:
+        """Worker OS processes alive (process backend; 0 for threads)."""
+        st = self._stages[stage]
+        return st.pool.alive_count() if st.pool is not None else 0
+
+    def worker_pids(self, stage: str) -> List[int]:
+        """PIDs of the stage's live worker processes (process backend)."""
+        st = self._stages[stage]
+        return st.pool.pids() if st.pool is not None else []
+
     def replica_target(self, stage: str) -> int:
         st = self._stages[stage]
         with st.cond:
@@ -469,6 +528,22 @@ class PipelineExecutor:
 
     # -- the worker loop ---------------------------------------------------
     def _worker_loop(self, st: _Stage, t_active: float) -> None:
+        """Dispatcher thread body. With the process backend it first
+        claims a paired worker process from the stage pool and always
+        returns it (graceful close) on exit — including injected-death
+        exits, where close() just reaps the corpse and frees the slab."""
+        proc: Optional[ProcReplica] = None
+        if st.pool is not None:
+            proc = st.pool.spawn()
+        try:
+            self._dispatch_loop(st, t_active, proc)
+        finally:
+            if proc is not None:
+                st.pool.discard(proc)
+                proc.close()
+
+    def _dispatch_loop(self, st: _Stage, t_active: float,
+                       proc: Optional[ProcReplica]) -> None:
         cond = st.cond
         spec = self._fault_specs.get(st.name)
         while True:
@@ -477,6 +552,10 @@ class PipelineExecutor:
                 shed: List[_Request] = []
                 while True:
                     if st.stop:
+                        return
+                    if proc is not None and not proc.alive():
+                        # our paired process was crash-killed while idle
+                        # (process-backend fault injection): exit cleanly
                         return
                     if st.kill_pending > 0:
                         # injected crash: die at the scheduling point.
@@ -517,10 +596,25 @@ class PipelineExecutor:
                 continue
             t_start = self.now()
             err: Optional[BaseException] = None
+            proc_dead = False
             try:
-                outs = st.fn([r.payload for r in batch])
+                if proc is None:
+                    outs = st.fn([r.payload for r in batch])
+                else:
+                    proc.busy = True
+                    try:
+                        outs = proc.run([r.payload for r in batch])
+                    finally:
+                        proc.busy = False
+            except ReplicaDead:
+                # the paired process died under the batch (injected
+                # crash): requeue below, exactly like a thread kill
+                proc_dead = True
+                outs = [None] * len(batch)
             except Exception as e:  # noqa: BLE001 — a dead worker
                 # deadlocks the pipeline; surface the failure per-request
+                # (StageWorkerError — a child-side fn exception — lands
+                # here too: the replica survives, the batch failed)
                 err = e
                 outs = [None] * len(batch)
             if spec is not None:
@@ -538,9 +632,10 @@ class PipelineExecutor:
                             err = InjectedFault(
                                 f"injected transient error on {st.name}")
             with cond:
-                killed = st.kill_pending > 0
-                if killed:
+                killed = proc_dead
+                if not killed and st.kill_pending > 0:
                     st.kill_pending -= 1
+                    killed = True
                 st.in_flight -= len(batch)
                 # legacy accounting: without retry machinery a failed
                 # batch still counts completed (it delivered None)
@@ -740,6 +835,83 @@ class PipelineExecutor:
         return n
 
     # -- serving -----------------------------------------------------------
+    def release_starved(self) -> int:
+        """Release requests stranded at a *dead* stage: replica target 0
+        (all replicas crashed, or scaled to zero) with queued work and
+        nothing to serve it. The live analogue of the sim's finite
+        starvation sentinel — stranded requests resolve promptly
+        (reported ``inf``) instead of grinding to the run timeout.
+        Hedged duplicates resolve once; AND-join descendants receive
+        anti-tokens so the rest of the DAG never stalls. Returns the
+        number of requests released."""
+        released = 0
+        for st in self._stages.values():
+            with st.cond:
+                if st.target > 0 or st.stop or len(st.queue) == 0:
+                    continue
+                stranded = st.queue.drain_all()
+            for req in stranded:
+                if self._resolve_stage_once(st, req):
+                    req.cancelled = True
+                    released += 1
+                    self._finish_branch(st, req)
+        return released
+
+    def await_all(self, reqs: List[_Request], timeout_s: float,
+                  poll_s: float = 0.2) -> int:
+        """Wait until every request in `reqs` resolves or `timeout_s`
+        expires, releasing work stranded on starved (zero-replica)
+        stages as soon as the condition is detected — an all-dead stage
+        fast-fails in ~`poll_s` rather than eating the whole timeout.
+        Returns the number of starvation-released requests."""
+        deadline_t = time.perf_counter() + float(timeout_s)
+        released = 0
+        pending = [r for r in reqs if r is not None]
+        while True:
+            released += self.release_starved()
+            pending = [r for r in pending if not r.done.is_set()]
+            if not pending:
+                return released
+            rem = deadline_t - time.perf_counter()
+            if rem <= 0.0:
+                return released
+            pending[0].done.wait(min(poll_s, rem))
+
+    def check_worker_failures(self, context: str = "the run") -> None:
+        """Raise if any worker thread crashed with a real (non-injected)
+        exception during `context` — results would silently under-serve."""
+        with self._lock:
+            failures = list(self.worker_failures)
+        if failures:
+            stages = ", ".join(f"{s}: {e!r}" for s, e in failures)
+            raise RuntimeError(
+                f"{len(failures)} worker thread(s) crashed during "
+                f"{context} ({stages}) — results would silently "
+                f"under-serve")
+
+    def _note_injection_lags(self, lags: np.ndarray) -> None:
+        """Record injection-lag telemetry for the run (how late each
+        request was admitted past its nominal absolute deadline)."""
+        lags = np.asarray(lags, dtype=np.float64)
+        stats = {
+            "n": int(lags.size),
+            "max_lag_s": float(lags.max()) if lags.size else 0.0,
+            "p99_lag_s": (float(np.percentile(lags, 99.0))
+                          if lags.size else 0.0),
+            "mean_lag_s": float(lags.mean()) if lags.size else 0.0,
+        }
+        with self._lock:
+            self._injection_stats = stats
+
+    def injection_stats(self) -> Optional[Dict[str, float]]:
+        """Injection-lag telemetry of the most recent trace injection
+        (``serve_trace`` or :class:`~repro.serving.ingress.AsyncIngress`):
+        ``{n, max_lag_s, p99_lag_s, mean_lag_s}``, or None before the
+        first injection of a run."""
+        with self._lock:
+            return (dict(self._injection_stats)
+                    if self._injection_stats is not None else None)
+
     def serve_trace(self, arrivals: np.ndarray, payload_fn,
                     time_scale: float = 1.0,
                     timeout_s: float = 300.0,
@@ -747,36 +919,46 @@ class PipelineExecutor:
         """Replay `arrivals` (seconds, scaled by `time_scale`) against the
         running pipeline; returns per-query latency (unscaled seconds).
 
+        Open-loop injection is *absolute-deadline* scheduled: payloads
+        are pre-built before the clock starts, each sleep targets
+        ``start + t_arr`` (never re-anchored on the drifted ``now()``,
+        so a late injection catches up instead of compounding), and
+        requests are stamped with their NOMINAL arrival — measured
+        latency and the ``slo_s`` deadline are charged against the
+        intended schedule, not the drifted injection instant. Per-
+        request injection lag is recorded (:meth:`injection_stats`).
+
         Requests still unfinished ``timeout_s`` after the last injection
         are *released* (cancelled and reported as ``inf``), not silently
-        abandoned to keep grinding through the stages. ``slo_s`` stamps
-        per-request deadlines (scaled), which the edf/slo-drop queue
-        policies consume; shed requests report ``inf``.
+        abandoned to keep grinding through the stages; requests stranded
+        on a stage whose replicas all died release promptly
+        (:meth:`release_starved`). ``slo_s`` stamps per-request
+        deadlines (scaled), which the edf/slo-drop queue policies
+        consume; shed requests report ``inf``.
         """
         arrivals = np.asarray(arrivals, dtype=np.float64) * time_scale
+        n = int(arrivals.size)
+        payloads = [payload_fn(i) for i in range(n)]
         self.start_run()
         reqs: List[_Request] = []
-        for i, t_arr in enumerate(arrivals):
-            now = self.now()
-            if t_arr > now:
-                time.sleep(t_arr - now)
-            t_inj = self.now()
-            deadline = (t_inj + slo_s * time_scale if slo_s is not None
+        lags = np.zeros(n, dtype=np.float64)
+        for i in range(n):
+            t_arr = float(arrivals[i])
+            while True:
+                dt = t_arr - self.now()
+                if dt <= 0.0:
+                    break
+                time.sleep(dt)
+            deadline = (t_arr + slo_s * time_scale if slo_s is not None
                         else float("inf"))
-            req = _Request(i, t_inj, payload_fn(i), deadline)
+            req = _Request(i, t_arr, payloads[i], deadline)
             reqs.append(req)
             self.inject(req)
-        deadline_t = time.perf_counter() + timeout_s
-        for req in reqs:
-            req.done.wait(max(0.0, deadline_t - time.perf_counter()))
+            lags[i] = self.now() - t_arr
+        self._note_injection_lags(lags)
+        self.await_all(reqs, timeout_s)
         self.release(reqs)
-        with self._lock:
-            failures = list(self.worker_failures)
-        if failures:
-            stages = ", ".join(f"{s}: {e!r}" for s, e in failures)
-            raise RuntimeError(
-                f"{len(failures)} worker thread(s) crashed during the "
-                f"run ({stages}) — results would silently under-serve")
+        self.check_worker_failures()
         return np.array([
             np.inf if (r.t_done is None or r.shed or r.cancelled)
             else (r.t_done - r.t_arrival) / time_scale
@@ -829,9 +1011,28 @@ class PipelineExecutor:
                 st.stop = True
                 st.cond.notify_all()
                 to_join.extend(st.workers)
-        ok = True
         deadline = time.perf_counter() + join_timeout_s
         for t in to_join:
             t.join(max(0.0, deadline - time.perf_counter()))
-            ok &= not t.is_alive()
+        stuck = [t for t in to_join if t.is_alive()]
+        if stuck and any(st.pool is not None
+                         for st in self._stages.values()):
+            # a dispatcher past the join budget is almost always blocked
+            # inside proc.run() on a wedged child: forking a
+            # thread-heavy parent (e.g. once JAX has warmed its pools)
+            # can deadlock the child on a lock an unforked thread held.
+            # SIGKILL the worker processes — the death sentinel unblocks
+            # connection.wait and the dispatcher exits via ReplicaDead.
+            for st in self._stages.values():
+                if st.pool is not None:
+                    st.pool.kill(len(st.pool.pids()))
+            for t in stuck:
+                t.join(2.0)
+        ok = all(not t.is_alive() for t in to_join)
+        # process backend: dispatchers close their paired replicas on
+        # exit; close_all reaps anything left (e.g. a dispatcher stuck
+        # past the join budget) so no worker process or slab leaks
+        for st in self._stages.values():
+            if st.pool is not None:
+                st.pool.close_all()
         return ok

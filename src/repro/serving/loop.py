@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -117,21 +116,35 @@ class LiveControlLoop:
     def _inject_all(self, arrivals: np.ndarray, payload_fn,
                     reqs: List[_Request], stop: threading.Event) -> None:
         ex = self.executor
-        for i, t_arr in enumerate(arrivals):
-            # sleep in slices so a stop (run cut short by t_end) is
-            # honored within ~0.1 s even mid-gap, and never injects the
-            # arrival the interrupted sleep was waiting on
-            while not stop.is_set():
+        n = int(arrivals.size)
+        # payloads are pre-built so payload_fn cost never eats into the
+        # inter-arrival gaps at high rate
+        payloads = [payload_fn(i) for i in range(n)]
+        lags: List[float] = []
+        for i in range(n):
+            t_arr = float(arrivals[i])
+            # absolute-deadline wait on the stop event: a stop (run cut
+            # short by t_end) is honored IMMEDIATELY even mid-gap — no
+            # sleep slicing — and never injects the arrival the
+            # interrupted wait was waiting on; a late injection catches
+            # up on the next arrival instead of compounding drift
+            while True:
                 dt = t_arr - ex.now()
-                if dt <= 0:
+                if dt <= 0.0:
                     break
-                time.sleep(min(dt, 0.1))
+                if stop.wait(dt):
+                    ex._note_injection_lags(np.asarray(lags))
+                    return
             if stop.is_set():
                 break
-            t_inj = ex.now()
-            req = _Request(i, t_inj, payload_fn(i), t_inj + self.slo)
+            # nominal-arrival stamp: latency and the SLO deadline are
+            # charged against the intended schedule, not the drifted
+            # injection instant
+            req = _Request(i, t_arr, payloads[i], t_arr + self.slo)
             reqs.append(req)
             ex.inject(req)
+            lags.append(ex.now() - t_arr)
+        ex._note_injection_lags(np.asarray(lags))
 
     # -- one epoch's telemetry --------------------------------------------
     def _telemetry(self, epoch: int, t0: float, t1: float,
@@ -237,14 +250,20 @@ class LiveControlLoop:
         prev_counters: Dict[str, Dict[str, float]] = {}
         env = IncrementalEnvelope(self.service_time_s,
                                   self.envelope_max_window_s)
+        # precise interruptible timer for the epoch loop: one wakeup per
+        # deadline (epoch boundary or earliest deferred event) instead of
+        # 20 Hz sleep slices, and a real worker crash sets it so the run
+        # fails immediately rather than at the next boundary
+        wake = threading.Event()
+        ex.on_worker_failure = wake.set
         injector.start()
         try:
             epoch = 0
             t0 = 0.0
             t = self.epoch_s
             while t <= t_stop + 1e-9:
-                # sub-epoch ticks land deferred events (future-dated
-                # downs/sheds/policy switches) close to their t_effective;
+                # event-timed ticks land deferred events (future-dated
+                # downs/sheds/policy switches) at their t_effective;
                 # scale-up activation is handled inside the executor
                 while True:
                     now = ex.now()
@@ -252,7 +271,12 @@ class LiveControlLoop:
                                 if not self._apply_if_due(ev, now)]
                     if now >= t:
                         break
-                    time.sleep(min(t - now, 0.05))
+                    self._check_worker_failures()
+                    nxt = min([t] + [ev.t_effective for ev in deferred])
+                    # epsilon past the deadline so the due-checks above
+                    # see it due on the next pass
+                    wake.wait(max(nxt - now, 0.0) + 1e-4)
+                    wake.clear()
                 epoch += 1
                 # surface real worker crashes within one epoch — a dead
                 # fleet must fail the run now, not at drain time
@@ -271,15 +295,15 @@ class LiveControlLoop:
                 t += self.epoch_s
         finally:
             stop.set()
+            ex.on_worker_failure = None
         injector.join()
         for ev in deferred:                    # land stragglers
             self.executor.apply_control_event(ev)
 
-        # drain: wait for the tail, then release anything still stuck
-        deadline = time.perf_counter() + self.drain_timeout_s
-        for req in reqs:
-            req.done.wait(max(0.0, deadline - time.perf_counter()))
-        released = ex.release(reqs)
+        # drain: wait for the tail (requests stranded on a starved /
+        # all-dead stage release promptly), then cancel anything stuck
+        starved = ex.await_all(reqs, self.drain_timeout_s)
+        released = ex.release(reqs) + starved
         self._check_worker_failures()
 
         lat = np.array([
@@ -299,16 +323,10 @@ class LiveControlLoop:
 
     def _check_worker_failures(self) -> None:
         """Raise if any worker thread crashed (uncaught exception — an
-        injected fault never registers here). Polled at every epoch
-        boundary and again after drain."""
-        ex = self.executor
-        with ex._lock:
-            failures = list(ex.worker_failures)
-        if failures:
-            stages_msg = ", ".join(f"{s}: {e!r}" for s, e in failures)
-            raise RuntimeError(
-                f"{len(failures)} worker thread(s) crashed during the "
-                f"closed-loop run ({stages_msg})")
+        injected fault never registers here). Checked at every epoch-
+        loop wakeup — a crash sets the wake event, so the run fails
+        immediately — and again after drain."""
+        self.executor.check_worker_failures("the closed-loop run")
 
     def _apply_if_due(self, ev: ControlEvent, now: float) -> bool:
         """Scale-ups apply immediately (the executor defers activation to

@@ -1,0 +1,326 @@
+"""Process-backed replica pool: worker OS processes behind the LiveQueue.
+
+Breaks the GIL ceiling for the live executor. Batch formation stays
+exactly where it was — dispatcher *threads* inside
+:class:`~repro.serving.executor.PipelineExecutor` holding the per-stage
+``LiveQueue`` under its condition variable — but with
+``backend="process"`` each dispatcher is paired with a
+:class:`ProcReplica`: a forked worker process that executes the stage
+fn, fed through a shared-memory request slab plus a control pipe. The
+``PipelineExecutor`` / ``LiveControlLoop`` / ``ClosedLoopTuner`` and the
+PR 8 fault machinery are unchanged by construction: the queue contract,
+retry/hedging, and the AND-join all live parent-side, and an injected
+crash SIGKILLs a real OS process (the paired dispatcher observes the
+death and requeues the in-flight batch, exactly like the thread
+backend's ``kill_pending`` path).
+
+Transport protocol (one slab + one pipe per replica, strictly
+request/response so slab ownership alternates — the ``handoff``
+discipline LOCK01 checks):
+
+* parent pickles ``("run", payloads)`` into the slab and sends
+  ``("slab", nbytes)`` over the pipe; messages larger than the slab fall
+  back to an inline ``("inline", bytes)`` pipe message;
+* the child replies ``("ok", outs)`` / ``("err", repr)`` the same way;
+* the parent waits on ``[pipe, process.sentinel]`` simultaneously, so a
+  SIGKILL mid-batch surfaces as :class:`ReplicaDead` immediately rather
+  than hanging the dispatcher.
+
+The fork start method is required: stage fns are closures over model
+state (not picklable), and fork inherits them for free. Fns that hold
+accelerator handles should be constructed fork-safe (e.g. init JAX
+lazily inside the fn); the benches use numpy/sleep LUT fns.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import threading
+from multiprocessing import connection as mp_conn
+from multiprocessing import shared_memory
+from typing import Callable, List, Optional, Sequence
+
+__all__ = [
+    "DEFAULT_SLAB_BYTES",
+    "ProcReplica",
+    "ProcessReplicaPool",
+    "ReplicaDead",
+    "StageWorkerError",
+]
+
+DEFAULT_SLAB_BYTES = 1 << 20
+
+# Serializes SharedMemory creation + fork across dispatcher threads. A
+# fork taken while a sibling spawn holds the multiprocessing resource
+# tracker / shm internals mid-operation hands the child a permanently
+# locked lock — the child then wedges before its first recv. One spawn
+# at a time keeps our own machinery quiescent at every fork point.
+_SPAWN_LOCK = threading.Lock()
+
+
+class ReplicaDead(Exception):
+    """The worker process died (crash injection, OOM, hard exit) while a
+    batch was in flight — the dispatcher requeues and retires."""
+
+
+class StageWorkerError(Exception):
+    """The stage fn raised *inside* the worker process; carries the
+    child-side repr. The replica itself is still healthy."""
+
+
+class _SlabChannel:
+    """One endpoint of the shared-memory request slab + its pipe.
+
+    Slab ownership is never locked — it alternates between the two
+    processes via the pipe protocol: whoever just received a pipe
+    message owns the slab until it sends the next one. LOCK01 enforces
+    this as the ``handoff`` discipline: the buffer may only be touched
+    from functions annotated as protocol participants.
+    """
+
+    def __init__(self, shm: shared_memory.SharedMemory, conn) -> None:
+        self._conn = conn
+        self._buf = shm.buf            # guarded-by: handoff(_conn)
+
+    def send(self, obj) -> None:       # holds-lock: handoff(_conn)
+        data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        if len(data) <= len(self._buf):
+            self._buf[: len(data)] = data
+            self._conn.send(("slab", len(data)))
+        else:                          # oversize: inline pipe fallback
+            self._conn.send(("inline", data))
+
+    def recv(self, sentinel=None, timeout=None):  # holds-lock: handoff(_conn)
+        """Receive one message; with ``sentinel`` (a process sentinel
+        fd), raise :class:`ReplicaDead` if the peer dies first. A
+        ``timeout`` (spawn handshake only) bounds the wait: expiry also
+        raises ReplicaDead — an alive-but-silent child is wedged."""
+        if sentinel is not None:
+            while True:
+                ready = mp_conn.wait([self._conn, sentinel],
+                                     timeout=timeout)
+                if self._conn in ready:
+                    break
+                if not ready:
+                    raise ReplicaDead(
+                        "worker process unresponsive within timeout")
+                # the process died — drain any final message it managed
+                # to flush before declaring the replica dead
+                if not self._conn.poll(0.05):
+                    raise ReplicaDead("worker process died mid-batch")
+        try:
+            tag, val = self._conn.recv()
+        except (EOFError, OSError) as exc:
+            raise ReplicaDead("worker pipe closed") from exc
+        if tag == "slab":
+            return pickle.loads(bytes(self._buf[:val]))
+        return pickle.loads(val)
+
+    def close(self) -> None:           # holds-lock: handoff(_conn)
+        """Relinquish this endpoint: drop the slab view, close the pipe."""
+        self._buf = None
+        try:
+            self._conn.close()
+        except OSError:
+            pass
+
+
+def _child_main(shm_name: str, conn, peer_conn,
+                fn: Callable[[Sequence], Sequence]) -> None:
+    """Worker-process entrypoint: serve run requests until quit/EOF."""
+    try:
+        peer_conn.close()              # drop the inherited parent end
+    except OSError:
+        pass
+    shm = shared_memory.SharedMemory(name=shm_name)
+    chan = _SlabChannel(shm, conn)
+    try:
+        # fork-safety handshake: forking a thread-heavy parent (e.g.
+        # once JAX has warmed its internal pools) can deadlock the child
+        # on a lock some unforked thread held. Announcing readiness
+        # exercises the allocator + pickle + pipe path first thing, so a
+        # wedged child is detected at spawn instead of eating a batch
+        try:
+            chan.send(("ready", None))
+        except (OSError, ReplicaDead):
+            return
+        while True:
+            try:
+                msg = chan.recv()
+            except ReplicaDead:        # parent closed its end
+                break
+            if msg[0] == "quit":
+                break
+            try:
+                outs = list(fn(msg[1]))
+            except BaseException as exc:  # noqa: BLE001 — report, keep serving
+                try:
+                    chan.send(("err", f"{type(exc).__name__}: {exc}"))
+                except (OSError, ReplicaDead):
+                    break
+                continue
+            try:
+                chan.send(("ok", outs))
+            except (OSError, ReplicaDead):
+                break
+    finally:
+        chan.close()
+        shm.close()
+
+
+class ProcReplica:
+    """One worker process + its slab. Owned by a single dispatcher
+    thread (the only caller of :meth:`run`/:meth:`close`); :meth:`kill`
+    may be called concurrently by the fault driver / control plane."""
+
+    def __init__(self, fn: Callable[[Sequence], Sequence],
+                 slab_bytes: int = DEFAULT_SLAB_BYTES, ctx=None,
+                 ready_timeout_s: float = 2.0) -> None:
+        ctx = ctx or mp.get_context("fork")
+        with _SPAWN_LOCK:
+            self._shm = shared_memory.SharedMemory(create=True,
+                                                   size=int(slab_bytes))
+            parent_end, child_end = ctx.Pipe()
+            self._chan = _SlabChannel(self._shm, parent_end)
+            self._proc = ctx.Process(
+                target=_child_main,
+                args=(self._shm.name, child_end, parent_end, fn),
+                daemon=True)
+            self._proc.start()
+        child_end.close()              # child's end lives in the child now
+        self._close_once = threading.Lock()
+        self._closed = False           # guarded-by: _close_once
+        self.busy = False              # crash-victim hint; racy by design
+        # consume the child's ready handshake within a bound: a child
+        # that never says ready is wedged (fork of a multithreaded
+        # parent) — reap it here so it can never join the fleet
+        try:
+            msg = self._chan.recv(sentinel=self._proc.sentinel,
+                                  timeout=ready_timeout_s)
+            ok = msg[0] == "ready"
+        except ReplicaDead:
+            ok = False
+        if not ok:
+            self.close()
+            raise ReplicaDead("worker process failed the spawn handshake")
+
+    @property
+    def pid(self) -> Optional[int]:
+        return self._proc.pid
+
+    def alive(self) -> bool:
+        return self._proc.is_alive()
+
+    def run(self, payloads: Sequence) -> List:
+        """Execute one batch in the worker process.
+
+        Raises :class:`ReplicaDead` if the process dies under the batch
+        (the caller requeues, mirroring the thread backend's killed
+        path) and :class:`StageWorkerError` for child-side fn errors.
+        """
+        if not self._proc.is_alive():
+            raise ReplicaDead("worker process already dead")
+        try:
+            self._chan.send(("run", list(payloads)))
+        except (BrokenPipeError, OSError) as exc:
+            raise ReplicaDead("worker pipe broken on send") from exc
+        msg = self._chan.recv(sentinel=self._proc.sentinel)
+        if msg[0] == "ok":
+            return msg[1]
+        raise StageWorkerError(msg[1])
+
+    def kill(self) -> None:
+        """SIGKILL the worker — the injected-crash path. A real OS
+        process dies; any in-flight batch surfaces as ReplicaDead in
+        the paired dispatcher."""
+        if self._proc.is_alive():
+            self._proc.kill()
+
+    def close(self) -> None:
+        """Graceful retire: ask the child to quit, reap it, free the slab.
+        Idempotent and safe to race (dispatcher exit vs pool shutdown)."""
+        with self._close_once:
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            if self._proc.is_alive():
+                self._chan.send(("quit", None))
+        except (BrokenPipeError, OSError):
+            pass
+        self._proc.join(timeout=2.0)
+        if self._proc.is_alive():
+            self._proc.kill()
+            self._proc.join(timeout=2.0)
+        self._chan.close()
+        self._shm.close()
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+class ProcessReplicaPool:
+    """Per-stage registry of live :class:`ProcReplica` workers.
+
+    The executor's dispatcher threads spawn/close members through this
+    pool; the fault driver calls :meth:`kill` to take down real
+    processes at scheduled instants (busy victims first, so crash
+    injection exercises the in-flight requeue path whenever possible,
+    matching the thread backend's semantics where only a dispatching
+    worker could consume a kill).
+    """
+
+    def __init__(self, fn: Callable[[Sequence], Sequence],
+                 slab_bytes: int = DEFAULT_SLAB_BYTES,
+                 start_method: str = "fork") -> None:
+        self._fn = fn
+        self._slab_bytes = int(slab_bytes)
+        self._ctx = mp.get_context(start_method)
+        self._plock = threading.Lock()
+        self._members: List[ProcReplica] = []   # guarded-by: _plock
+
+    def spawn(self) -> ProcReplica:
+        last: Optional[ReplicaDead] = None
+        for _ in range(3):             # a wedged fork is retryable
+            try:
+                rep = ProcReplica(self._fn, self._slab_bytes, self._ctx)
+            except ReplicaDead as exc:
+                last = exc
+                continue
+            with self._plock:
+                self._members.append(rep)
+            return rep
+        raise RuntimeError(
+            f"could not spawn a healthy worker process: {last}")
+
+    def discard(self, rep: ProcReplica) -> None:
+        """Forget a member (dispatcher exit path); caller closes it."""
+        with self._plock:
+            if rep in self._members:
+                self._members.remove(rep)
+
+    def kill(self, n: int) -> int:
+        """SIGKILL up to ``n`` live members, busy ones first. Returns
+        the number actually signalled."""
+        with self._plock:
+            live = [m for m in self._members if m.alive()]
+            victims = sorted(live, key=lambda m: not m.busy)[: max(0, n)]
+        for v in victims:
+            v.kill()
+        return len(victims)
+
+    def alive_count(self) -> int:
+        with self._plock:
+            return sum(1 for m in self._members if m.alive())
+
+    def pids(self) -> List[int]:
+        with self._plock:
+            return [m.pid for m in self._members if m.alive()]
+
+    def close_all(self) -> None:
+        with self._plock:
+            members, self._members = self._members, []
+        for m in members:
+            m.close()

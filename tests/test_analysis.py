@@ -298,6 +298,63 @@ def test_lock01_silent_without_annotations(tmp_path):
     assert _findings(tmp_path, "LOCK01") == []
 
 
+# the shared-memory slab discipline of repro.serving.procpool: slab
+# ownership alternates over a pipe, so the guard is a protocol
+# (`handoff(conn)`), not a lock object
+_HANDOFF_FIXTURE = """
+    import pickle
+
+
+    class Chan:
+        def __init__(self, shm, conn):
+            self._conn = conn
+            self._buf = shm.buf       # guarded-by: handoff(_conn)
+
+        def send(self, obj):          # holds-lock: handoff(_conn)
+            data = pickle.dumps(obj)
+            self._buf[:len(data)] = data
+            self._conn.send(("slab", len(data)))
+
+        def recv(self):               # holds-lock: handoff(_conn)
+            tag, n = self._conn.recv()
+            return pickle.loads(bytes(self._buf[:n]))
+"""
+
+
+def test_lock01_handoff_guards_slab_access(tmp_path):
+    # a slab read from a function that is not a protocol participant
+    # is exactly the cross-process race the annotation exists to stop
+    _write_tree(tmp_path, {"repro/serving/chan.py": _HANDOFF_FIXTURE + """
+
+    def peek(chan: Chan):
+        return chan._buf[0]
+    """})
+    found = _findings(tmp_path, "LOCK01")
+    assert len(found) == 1
+    assert found[0].scope == "peek"
+    assert "handoff(_conn)" in found[0].message
+
+
+def test_lock01_handoff_annotation_requires_channel_traffic(tmp_path):
+    # `holds-lock: handoff(X)` is verified, not trusted: a function
+    # claiming protocol participation must actually drive the channel
+    _write_tree(tmp_path, {"repro/serving/chan.py": _HANDOFF_FIXTURE + """
+
+    class Freeloader(Chan):
+        def steal(self):              # holds-lock: handoff(_conn)
+            return self._buf[0]
+    """})
+    found = _findings(tmp_path, "LOCK01")
+    assert len(found) == 1
+    assert found[0].scope == "Freeloader.steal"
+    assert "cannot grant" in found[0].message
+
+
+def test_lock01_handoff_participants_are_clean(tmp_path):
+    _write_tree(tmp_path, {"repro/serving/chan.py": _HANDOFF_FIXTURE})
+    assert _findings(tmp_path, "LOCK01") == []
+
+
 # -- EVT01 -------------------------------------------------------------------
 
 def test_evt01_flags_unsorted_constructor_and_fold(tmp_path):

@@ -410,3 +410,99 @@ def test_closed_loop_result_empty_cost_timeline_guard():
                            np.zeros(0), {})
     assert res.total_cost() == 0.0
     assert res.mean_cost_per_hr() == 0.0
+
+
+# -- injector timing fidelity (the PR 9 bugfix class) ------------------------
+
+
+def test_serve_trace_injection_fidelity_at_high_rate():
+    """500 qps open-loop injection: absolute-deadline scheduling with
+    pre-built payloads must keep per-request injection error tight, and
+    every request must carry its NOMINAL arrival stamp (latency is
+    measured against the trace, not against a drifted clock)."""
+    pipe, cfg = _linear(replicas=1, batch=32)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.001)})
+    n, rate = 500, 500.0
+    trace = np.arange(n) / rate
+    stamps = {}
+    ex.on_request_done = lambda r: stamps.setdefault(r.rid, r.t_arrival)
+
+    def slow_payload(i):
+        # deliberately non-trivial payload build: the pre-fix injector
+        # built this inside the timing loop and drifted by n * 1 ms
+        time.sleep(0.001)
+        return i
+
+    lat = ex.serve_trace(trace, slow_payload, timeout_s=30.0)
+    assert np.isfinite(lat).all(), lat
+    stats = ex.injection_stats()
+    assert stats is not None and stats["n"] == n
+    # tight epsilon at p99; the single worst wakeup is OS-scheduler
+    # noise under suite-wide load, bounded looser (drift — the bug this
+    # guards against — moves the whole distribution, not one sample)
+    assert stats["p99_lag_s"] < 0.05, stats
+    assert stats["max_lag_s"] < 0.25, stats
+    # nominal stamps: exactly the trace, independent of injection lag
+    got = np.array([stamps[i] for i in range(n)])
+    assert np.allclose(got, trace), "t_arrival must be the nominal trace"
+    assert ex.shutdown()
+
+
+def test_serve_trace_all_dead_stage_fast_fails():
+    """Thread backend: both replicas crash with no replacement — the
+    starvation sentinel must release the stranded tail promptly instead
+    of burning the whole 30 s timeout."""
+    from repro.faults import FaultSchedule, crash
+
+    pipe, cfg = _linear(replicas=2, batch=2)
+    fs = FaultSchedule([crash("s0_m0", 0.05, n=2)], seed=0)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.05)}, faults=fs)
+    t0 = time.time()
+    lat = ex.serve_trace(np.linspace(0.0, 0.3, 12), lambda i: i,
+                         timeout_s=30.0)
+    assert time.time() - t0 < 8.0, "all-dead stage ate the full timeout"
+    assert np.isinf(lat).any()
+    assert ex.shutdown()
+
+
+def test_epoch_boundaries_land_on_time():
+    """The epoch loop's event-based timer must invoke the controller
+    within a few milliseconds of each boundary (the sliced-sleep loop it
+    replaces added up to ~100 ms of jitter per epoch)."""
+    pipe, cfg = _linear(replicas=1, batch=8)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.002)})
+
+    class _Probe:
+        def __init__(self):
+            self.deltas = []
+
+        def step(self, tele):
+            self.deltas.append(ex.now() - tele.t_end)
+            return []
+
+    probe = _Probe()
+    loop = LiveControlLoop(ex, slo=0.5, epoch_s=0.25, drain_timeout_s=5.0)
+    res = loop.run(gamma_trace(40.0, 1.5, 2.0, seed=3), probe, lambda i: i)
+    assert np.isfinite(res.latency).all()
+    assert len(probe.deltas) >= 5
+    assert max(probe.deltas) < 0.08, probe.deltas
+    assert ex.shutdown()
+
+
+def test_async_ingress_fidelity_at_high_rate():
+    from repro.serving.ingress import AsyncIngress
+
+    pipe, cfg = _linear(replicas=1, batch=32)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.001)})
+    ing = AsyncIngress(ex, clients=64)
+    n, rate = 500, 500.0
+    lat, stats = ing.serve_trace(np.arange(n) / rate, lambda i: i,
+                                 timeout_s=30.0, slo_s=1.0)
+    assert np.isfinite(lat).all(), lat
+    assert stats.injected == n and stats.clients == 64
+    assert stats.p99_lag_s < 0.05, stats.as_dict()
+    assert stats.max_lag_s < 0.25, stats.as_dict()
+    # the executor mirrors the ingress stats for telemetry consumers
+    mirrored = ex.injection_stats()
+    assert mirrored is not None and mirrored["n"] == n
+    assert ex.shutdown()

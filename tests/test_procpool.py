@@ -1,0 +1,240 @@
+"""Process-backed replica pool: real OS processes behind the LiveQueue.
+
+Time-budgeted procpool smoke lane (tier-1, alongside the live-executor
+and chaos lanes): ``PipelineExecutor(backend="process")`` pairs every
+dispatcher thread with a forked worker process fed through a shared-
+memory slab (:mod:`repro.serving.procpool`). The whole serving contract
+must survive the move off threads — batch formation, replica lifecycle
+(spawn/drain), PR 8 fault injection (a scheduled crash SIGKILLs a real
+process and its in-flight batch requeues), bounded retry + hedged
+duplicates with exactly-once delivery, and the asyncio ingress on top.
+Scale stays tiny (1 worker process per replica, millisecond fns) so the
+file fits the CI budget.
+"""
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig, StageConfig, linear_pipeline
+from repro.faults import FaultSchedule, RecoveryPolicy, crash, transient
+from repro.serving.executor import PipelineExecutor
+from repro.serving.ingress import AsyncIngress
+from repro.serving.procpool import ProcReplica, ReplicaDead, StageWorkerError
+
+
+def _sleep_fn(per_batch_s, scale=1):
+    def fn(payloads):
+        time.sleep(per_batch_s)
+        return [p * scale for p in payloads]
+    return fn
+
+
+def _linear(n_stages=1, batch=4, replicas=1, **kw):
+    names = [f"m{i}" for i in range(n_stages)]
+    pipe = linear_pipeline("t", names, {n: ["cpu-1"] for n in names})
+    cfg = PipelineConfig({
+        s: StageConfig("cpu-1", batch, replicas, **kw)
+        for s in pipe.stages})
+    return pipe, cfg
+
+
+def _wait_until(pred, timeout_s=15.0):
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(0.02)
+    return pred()
+
+
+# -- the replica primitive ---------------------------------------------------
+
+
+def test_proc_replica_runs_batches_in_child_process():
+    rep = ProcReplica(_sleep_fn(0.0, scale=3))
+    try:
+        assert rep.alive() and rep.pid != os.getpid()
+        assert rep.run([1, 2, 3]) == [3, 6, 9]
+        assert rep.run([5]) == [15]          # slab reused request-to-request
+    finally:
+        rep.close()
+    assert not rep.alive()
+    rep.close()                              # idempotent
+
+
+def test_proc_replica_oversize_batch_falls_back_inline():
+    """A batch bigger than the slab ships inline over the pipe — slower,
+    never wrong."""
+    rep = ProcReplica(lambda ps: [p.sum() for p in ps], slab_bytes=256)
+    try:
+        big = np.ones(50_000)                # ~400 KB >> 256 B slab
+        assert rep.run([big, 2 * big]) == [50_000.0, 100_000.0]
+    finally:
+        rep.close()
+
+
+def test_proc_replica_child_error_keeps_process_alive():
+    def fn(payloads):
+        if payloads[0] == "boom":
+            raise ValueError("bad payload")
+        return list(payloads)
+
+    rep = ProcReplica(fn)
+    try:
+        try:
+            rep.run(["boom"])
+            raise AssertionError("expected StageWorkerError")
+        except StageWorkerError as e:
+            assert "bad payload" in str(e)
+        assert rep.alive()                   # fn error != replica death
+        assert rep.run(["ok"]) == ["ok"]
+    finally:
+        rep.close()
+
+
+def test_proc_replica_kill_surfaces_replica_dead():
+    rep = ProcReplica(_sleep_fn(10.0))
+    try:
+        rep.kill()
+        try:
+            rep.run([1])
+            raise AssertionError("expected ReplicaDead")
+        except ReplicaDead:
+            pass
+    finally:
+        rep.close()
+
+
+# -- the executor on the process backend -------------------------------------
+
+
+def test_process_backend_serves_through_real_processes():
+    pipe, cfg = _linear(n_stages=2, batch=4, replicas=2)
+    ex = PipelineExecutor(pipe, cfg,
+                          {"m0": _sleep_fn(0.002, scale=2),
+                           "m1": _sleep_fn(0.002, scale=5)},
+                          backend="process")
+    assert _wait_until(lambda: ex.live_process_count("s0_m0") == 2)
+    pids = ex.worker_pids("s0_m0") + ex.worker_pids("s1_m1")
+    assert pids and all(p != os.getpid() for p in pids)
+    payloads = {}
+    ex.on_request_done = lambda r: payloads.setdefault(r.rid, r.payload)
+    lat = ex.serve_trace(np.linspace(0.0, 0.3, 24), lambda i: i,
+                         timeout_s=20.0)
+    assert np.isfinite(lat).all(), lat
+    # outputs really crossed both stage processes: i * 2 * 5
+    assert payloads == {i: i * 10 for i in range(24)}
+    assert ex.shutdown()
+    assert ex.live_process_count("s0_m0") == 0   # no leaked processes
+
+
+def test_process_backend_scales_both_directions():
+    pipe, cfg = _linear(replicas=1, batch=2)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.002)},
+                          backend="process")
+    ex.scale("s0_m0", 3)
+    assert _wait_until(lambda: ex.live_process_count("s0_m0") == 3)
+    ex.scale("s0_m0", 1)
+    assert _wait_until(lambda: ex.live_process_count("s0_m0") == 1)
+    assert ex.replica_target("s0_m0") == 1
+    assert ex.shutdown()
+
+
+def test_crash_kills_real_os_process_and_requeues():
+    """The PR 8 fault contract on processes: a scheduled crash takes a
+    real OS process down mid-batch; the in-flight batch requeues and
+    every request still finishes on the survivor."""
+    pipe, cfg = _linear(replicas=2, batch=2)
+    fs = FaultSchedule([crash("s0_m0", 0.08)], seed=0)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.05)}, faults=fs,
+                          backend="process")
+    assert _wait_until(lambda: ex.live_process_count("s0_m0") == 2)
+    pids_before = set(ex.worker_pids("s0_m0"))
+    lat = ex.serve_trace(np.linspace(0.0, 0.4, 16), lambda i: i,
+                         timeout_s=20.0)
+    assert np.isfinite(lat).all(), lat   # serve_trace raises on failures
+    assert ex.replica_target("s0_m0") == 1
+    assert _wait_until(lambda: ex.live_process_count("s0_m0") == 1)
+    pids_after = set(ex.worker_pids("s0_m0"))
+    assert len(pids_before - pids_after) == 1    # a real pid died
+    deltas = ex.fault_deltas()["s0_m0"]
+    assert len(deltas) == 1 and deltas[0][1] == -1
+    assert ex.shutdown()
+
+
+def test_crash_then_replacement_on_processes():
+    pipe, cfg = _linear(replicas=2, batch=2)
+    fs = FaultSchedule([crash("s0_m0", 0.05)], seed=0)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.01)}, faults=fs,
+                          backend="process")
+    ex.start_run()
+    assert _wait_until(lambda: ex.replica_target("s0_m0") == 1)
+    ex.add_replicas("s0_m0", 1, t_active=ex.now())
+    assert ex.replica_target("s0_m0") == 2
+    assert _wait_until(lambda: ex.live_process_count("s0_m0") == 2)
+    # final fleet matches the deterministic replay arithmetic the
+    # fault bench asserts sim<->live: base - crashes + ups
+    assert ex.replica_timeline["s0_m0"][-1][1] == 2
+    assert ex.shutdown()
+
+
+def test_all_dead_stage_fast_fails_on_processes():
+    """Both replicas crash and nothing replaces them: serve_trace must
+    release the stranded requests promptly (starvation sentinel), not
+    grind through the full timeout."""
+    pipe, cfg = _linear(replicas=2, batch=2)
+    fs = FaultSchedule([crash("s0_m0", 0.05, n=2)], seed=0)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.05)}, faults=fs,
+                          backend="process")
+    t0 = time.time()
+    lat = ex.serve_trace(np.linspace(0.0, 0.3, 12), lambda i: i,
+                         timeout_s=30.0)
+    assert time.time() - t0 < 8.0, "all-dead stage ate the full timeout"
+    assert np.isinf(lat).any()
+    assert ex.shutdown()
+
+
+def test_exactly_once_under_errors_and_hedging_on_processes():
+    """Transient errors + hedged duplicates, with service in real
+    processes: resolve-once dedup must still deliver at most once."""
+    import threading
+
+    pipe, cfg = _linear(n_stages=2, replicas=2, batch=2)
+    fs = FaultSchedule(
+        [transient("s0_m0", 0.0, 0.2, 0.6)], seed=5,
+        recovery=RecoveryPolicy(max_attempts=6, backoff_s=0.02,
+                                backoff_mult=1.5, hedge_slack_s=0.4))
+    ex = PipelineExecutor(pipe, cfg,
+                          {"m0": _sleep_fn(0.004), "m1": _sleep_fn(0.004)},
+                          faults=fs, backend="process")
+    done_rids = []
+    done_lock = threading.Lock()
+
+    def on_done(req):
+        with done_lock:
+            done_rids.append(req.rid)
+
+    ex.on_request_done = on_done
+    lat = ex.serve_trace(np.linspace(0.0, 0.4, 40), lambda i: i,
+                         timeout_s=20.0, slo_s=0.5)
+    assert len(done_rids) == len(set(done_rids)), "duplicate delivery"
+    finished = sorted(r for r, l in zip(range(40), lat) if np.isfinite(l))
+    assert set(finished) <= set(done_rids)
+    assert ex.shutdown()
+
+
+def test_async_ingress_on_process_backend():
+    pipe, cfg = _linear(replicas=2, batch=16)
+    ex = PipelineExecutor(pipe, cfg, {"m0": _sleep_fn(0.002)},
+                          backend="process")
+    ing = AsyncIngress(ex, clients=32)
+    arr = np.sort(np.random.default_rng(0).uniform(0.0, 0.5, 200))
+    lat, stats = ing.serve_trace(arr, lambda i: i, timeout_s=20.0,
+                                 slo_s=0.5)
+    assert np.isfinite(lat).all(), lat
+    assert stats.injected == 200
+    assert stats.max_lag_s < 0.25          # loose CI bound; bench is tight
+    assert ex.injection_stats()["n"] == 200
+    assert ex.shutdown()
