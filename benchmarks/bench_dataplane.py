@@ -1,0 +1,337 @@
+"""Zero-copy data plane: typed rings vs the PR 9 pickle transport.
+
+The dataplane issue's acceptance harness (``BENCH_dataplane.json``):
+
+* **A. replica round-trip throughput** — one :class:`ProcReplica`
+  cleared synchronously at 64 KB and 1 MB float32 payloads on both
+  transports. The typed ring must sustain **>= 2x** the pickle path at
+  1 MB (copy arithmetic: pickle moves ~8 memcpys per round trip, the
+  ring ~3), and :class:`DataplaneStats` must *prove* it by accounting
+  fewer bytes copied per request. A pipelined variant (both ring
+  buffers in flight) shows the overlapped dispatch/compute win on top.
+* **B. executor clearance at tensor payloads** — a 1 MB-payload
+  backlog (all due at t=0) cleared by the full process-backed executor
+  on both transports, payloads served out of a reusable
+  :class:`PayloadRing` with ``prebuild=False`` so the injector does
+  not materialize the whole backlog. Sustained qps must improve.
+* **C. sim<->real fidelity with transport-priced LUTs** — the stage is
+  profiled *through a live ProcReplica round trip* (so the LUT prices
+  the data plane, not just the fn); the discrete-event simulator and
+  the ring-backed executor must then agree on SLO attainment within
+  0.02 at 64 KB payloads.
+* **D. SIGKILL mid-handoff** — a scheduled crash takes a worker down
+  with both ring buffers occupied; every request must finish exactly
+  once on the survivor (requeue, no loss, no duplicates).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import save, table
+
+RING_SPEEDUP_FLOOR = 2.0       # A: ring >= pickle * this at 1 MB payloads
+EXEC_SPEEDUP_FLOOR = 1.2       # B: full executor, looser (batching amortizes)
+ATTAINMENT_TOL = 0.02          # C: |sim - real| attainment
+SLO = 0.25
+SEED = 0
+
+KB64 = 1 << 14                 # float32 elements -> 64 KB
+MB1 = 1 << 18                  # float32 elements -> 1 MB
+
+
+def _payload(elems, seed=0):
+    return np.random.default_rng(seed).standard_normal(elems).astype(
+        np.float32)
+
+
+def _scale(payloads):
+    # tiny real compute: forces a fresh output array (the worker-side
+    # in-place response encode, not an alias echo), negligible cost
+    return [p * 2.0 for p in payloads]
+
+
+def _round_trips(rep, batch, iters):
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = rep.run(batch)
+    wall = time.perf_counter() - t0
+    assert np.array_equal(out[0], batch[0] * 2.0)
+    return wall
+
+
+def _pipelined_trips(rep, batch, iters):
+    """Keep the ring full: both buffers in flight, collect the oldest
+    as each new batch is handed over (the executor's dispatch loop)."""
+    t0 = time.perf_counter()
+    submitted = collected = 0
+    while collected < iters:
+        while submitted < iters and rep.free_slots > 0:
+            rep.submit(batch)
+            submitted += 1
+        rep.collect(timeout=30.0)
+        collected += 1
+    return time.perf_counter() - t0
+
+
+def run() -> dict:
+    from repro.core.pipeline import (
+        PipelineConfig,
+        StageConfig,
+        linear_pipeline,
+    )
+    from repro.serving.executor import PipelineExecutor
+    from repro.serving.ingress import PayloadRing
+    from repro.serving.procpool import ProcReplica
+
+    out: dict = {
+        "cpu_count": os.cpu_count(),
+        "tolerances": {"ring_speedup_floor": RING_SPEEDUP_FLOOR,
+                       "exec_speedup_floor": EXEC_SPEEDUP_FLOOR,
+                       "attainment": ATTAINMENT_TOL},
+    }
+    rows = []
+
+    # ---- A. replica round-trip throughput: pickle vs ring ----------------
+    batch_n = 4
+    slab = 1 << 24                         # 16 MB: 2 x 8 MB ring buffers
+    sizes = (("64KB", KB64, 400), ("1MB", MB1, 60))
+    sweep = []
+    for label, elems, iters in sizes:
+        batch = [_payload(elems, seed=i) for i in range(batch_n)]
+        cell = {"payload": label, "payload_bytes": elems * 4,
+                "batch": batch_n, "iters": iters}
+        for transport in ("pickle", "ring"):
+            rep = ProcReplica(_scale, slab_bytes=slab, transport=transport)
+            try:
+                _round_trips(rep, batch, max(iters // 10, 5))   # warm
+                wall = min(_round_trips(rep, batch, iters)
+                           for _ in range(2))
+                st = rep.transport_stats()
+            finally:
+                rep.close()
+            trips = iters / wall
+            cell[transport] = {
+                "trips_per_s": trips,
+                "qps": trips * batch_n,
+                "gbps": trips * batch_n * elems * 4 * 2 / 1e9,
+                "bytes_copied_per_req":
+                    st.bytes_copied / max(st.typed_batches
+                                          + st.pickle_batches, 1) / batch_n,
+                "stats": st.as_dict(),
+            }
+        # overlapped dispatch/compute: both ring buffers in flight
+        rep = ProcReplica(_scale, slab_bytes=slab, transport="ring",
+                          ring_depth=2)
+        try:
+            _pipelined_trips(rep, batch, max(iters // 10, 5))
+            wall_p = min(_pipelined_trips(rep, batch, iters)
+                         for _ in range(2))
+        finally:
+            rep.close()
+        cell["ring_pipelined"] = {
+            "trips_per_s": iters / wall_p,
+            "overlap_speedup": (iters / wall_p) / cell["ring"]["trips_per_s"],
+        }
+        cell["ring_speedup"] = (cell["ring"]["trips_per_s"]
+                                / cell["pickle"]["trips_per_s"])
+        sweep.append(cell)
+        rows.append([f"replica/{label}",
+                     f"pkl {cell['pickle']['qps']:.0f}qps",
+                     f"ring {cell['ring']['qps']:.0f}qps",
+                     f"{cell['ring_speedup']:.2f}x "
+                     f"(+{cell['ring_pipelined']['overlap_speedup']:.2f}x "
+                     f"pipelined)"])
+    out["replica_roundtrip"] = sweep
+    mb = sweep[-1]
+    # the headline acceptance: >= 2x at 1 MB tensor payloads, and the
+    # stats must show the ring actually copies fewer bytes per request
+    assert mb["ring_speedup"] >= RING_SPEEDUP_FLOOR, sweep
+    assert (mb["ring"]["bytes_copied_per_req"]
+            < mb["pickle"]["bytes_copied_per_req"]), sweep
+
+    # overlap proper: with a compute-bearing stage (pure memcpy has
+    # nothing to hide), double-buffering hides the dispatcher's encode
+    # of batch N+1 under the worker's compute of batch N. The cleanest
+    # shape: heavy requests, tiny responses (a reduction stage), so the
+    # hideable work is exactly the dispatch-side 4 MB encode
+    compute_s = 0.004
+
+    def _reduce(payloads):
+        time.sleep(compute_s)
+        return [np.float32(p.flat[0]) for p in payloads]
+
+    batch = [_payload(MB1, seed=i) for i in range(batch_n)]
+    iters = 40
+    rep = ProcReplica(_reduce, slab_bytes=slab, ring_depth=2)
+    try:
+        for _ in range(5):
+            rep.run(batch)                               # warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            rep.run(batch)
+        wall_sync = time.perf_counter() - t0
+        wall_pipe = min(_pipelined_trips(rep, batch, iters)
+                        for _ in range(2))
+    finally:
+        rep.close()
+    overlap = wall_sync / wall_pipe
+    out["overlap"] = {
+        "payload": "1MB", "batch": batch_n, "compute_s": compute_s,
+        "sync_trips_per_s": iters / wall_sync,
+        "pipelined_trips_per_s": iters / wall_pipe,
+        "overlap_speedup": overlap,
+    }
+    rows.append(["overlap/1MB+4ms", f"sync {iters/wall_sync:.0f}tps",
+                 f"pipe {iters/wall_pipe:.0f}tps", f"{overlap:.2f}x"])
+    assert overlap >= 1.05, \
+        ("double-buffering hid no compute", out["overlap"])
+
+    # ---- B. executor clearance race at 1 MB payloads ---------------------
+    pipe = linear_pipeline("dp", ["m0"], {"m0": ["cpu-1"]})
+    cfg = PipelineConfig({"s0_m0": StageConfig("cpu-1", 4, 2)})
+    n_b = 96
+    backlog = np.zeros(n_b)
+    ring_payloads = PayloadRing.filled(lambda i: _payload(MB1, seed=i),
+                                       slots=8)
+
+    def _clear(transport):
+        ex = PipelineExecutor(pipe, cfg, {"m0": _scale},
+                              backend="process", transport=transport,
+                              ring_depth=2, slab_bytes=slab)
+        t0 = time.perf_counter()
+        lat = ex.serve_trace(backlog, ring_payloads, timeout_s=120.0,
+                             prebuild=False)
+        wall = time.perf_counter() - t0
+        assert np.isfinite(lat).all(), (transport, lat)
+        stats = {s: d.as_dict() for s, d in ex.dataplane_stats().items()}
+        ex.shutdown()
+        return wall, stats
+
+    clear = {}
+    for transport in ("pickle", "ring"):
+        wall, stats = min((_clear(transport) for _ in range(2)),
+                          key=lambda ws: ws[0])
+        clear[transport] = {"wall_s": wall, "qps": n_b / wall,
+                            "dataplane": stats}
+    exec_speedup = clear["ring"]["qps"] / clear["pickle"]["qps"]
+    out["executor_clearance"] = {
+        "n_queries": n_b, "payload_bytes": MB1 * 4, "replicas": 2,
+        "batch": 4, **clear, "ring_speedup": exec_speedup,
+    }
+    rows.append(["executor/1MB", f"pkl {clear['pickle']['qps']:.0f}qps",
+                 f"ring {clear['ring']['qps']:.0f}qps",
+                 f"{exec_speedup:.2f}x"])
+    assert exec_speedup >= EXEC_SPEEDUP_FLOOR, clear
+
+    # ---- C. sim<->real fidelity with transport-priced LUTs ---------------
+    from repro.core.planner import Planner
+    from repro.core.profiler import ProfileStore, profile_model_measured
+    from repro.serving.cluster import LiveClusterSim
+    from repro.workload.generator import gamma_trace
+
+    probe = _payload(KB64)
+
+    def stage_fn(payloads):
+        time.sleep(0.002)
+        return [p * 2.0 for p in payloads]
+
+    # price the LUT through a LIVE replica round trip: the profile the
+    # planner and simulator consume includes the data plane itself
+    prof_rep = ProcReplica(stage_fn, slab_bytes=slab, transport="ring")
+    try:
+        store = ProfileStore()
+        store.add(profile_model_measured(
+            "m0", lambda b: prof_rep.run([probe] * b),
+            batch_sizes=(1, 2, 4, 8, 16, 32)))
+    finally:
+        prof_rep.close()
+
+    fpipe = linear_pipeline("dpfid", ["m0"], {"m0": ["cpu-1"]})
+    rate = 150.0
+    sample = gamma_trace(rate, 1.0, 30, seed=SEED)
+    plan = Planner(fpipe, store).plan(sample, SLO)
+    assert plan.feasible, "planner infeasible on this host; lower rate"
+    fcfg = plan.config
+
+    trace = gamma_trace(rate, 1.0, 8, seed=41)
+    sim_att = LiveClusterSim(fpipe, store, fcfg, SLO).run(trace).attainment
+
+    payloads_c = PayloadRing.filled(lambda i: _payload(KB64, seed=i),
+                                    slots=8)
+    solo = {s: store.get(fpipe.stages[s].model_id)
+            .batch_latency(fcfg[s].hardware, 1) for s in fpipe.stages}
+    ex = PipelineExecutor(fpipe, fcfg, {"m0": stage_fn},
+                          solo_latency_s=solo, backend="process",
+                          transport="ring", ring_depth=2, slab_bytes=slab)
+    lat = ex.serve_trace(trace, payloads_c, timeout_s=60.0, slo_s=SLO,
+                         prebuild=False)
+    real_att = float((lat <= SLO).mean())
+    ex.shutdown()
+
+    gap = abs(sim_att - real_att)
+    out["fidelity"] = {
+        "n_queries": int(trace.size), "rate_qps": rate,
+        "payload_bytes": KB64 * 4, "slo_s": SLO,
+        "plan": {s: {"batch": fcfg[s].batch_size,
+                     "replicas": fcfg[s].replicas} for s in fpipe.stages},
+        "sim_attainment": sim_att, "real_attainment": real_att,
+        "attainment_gap": gap,
+    }
+    rows.append(["fidelity/sim", f"{sim_att:.4f}", "-",
+                 f"{trace.size} reqs @ {rate:.0f}qps"])
+    rows.append(["fidelity/ring", f"{real_att:.4f}", f"{gap:.4f} gap",
+                 "transport-priced LUT"])
+    assert gap <= ATTAINMENT_TOL, ("sim/real attainment gap", sim_att,
+                                   real_att)
+
+    # ---- D. SIGKILL mid-handoff: exactly-once through a full ring --------
+    import threading
+
+    from repro.faults import FaultSchedule, crash
+
+    kpipe = linear_pipeline("dpkill", ["m0"], {"m0": ["cpu-1"]})
+    kcfg = PipelineConfig({"s0_m0": StageConfig("cpu-1", 2, 2)})
+    fs = FaultSchedule([crash("s0_m0", 0.1)], seed=SEED)
+
+    def slow_fn(payloads):
+        time.sleep(0.05)
+        return [p * 2.0 for p in payloads]
+
+    n_d = 24
+    ex = PipelineExecutor(kpipe, kcfg, {"m0": slow_fn}, faults=fs,
+                          backend="process", transport="ring",
+                          ring_depth=2, slab_bytes=slab)
+    done, lock = [], threading.Lock()
+    ex.on_request_done = lambda r: (lock.acquire(), done.append(r.rid),
+                                    lock.release())
+    lat_d = ex.serve_trace(np.linspace(0.0, 0.5, n_d),
+                           PayloadRing.filled(
+                               lambda i: _payload(KB64, seed=i), slots=4),
+                           timeout_s=30.0, prebuild=False)
+    deltas = ex.fault_deltas()["s0_m0"]
+    ex.shutdown()
+    out["sigkill_exactly_once"] = {
+        "n_queries": n_d, "delivered": len(done),
+        "duplicates": len(done) - len(set(done)),
+        "all_finite": bool(np.isfinite(lat_d).all()),
+        "fault_deltas": list(map(list, deltas)),
+    }
+    rows.append(["sigkill/ring", f"{len(done)}/{n_d} delivered",
+                 f"{len(done) - len(set(done))} dups",
+                 f"crash delta {deltas}"])
+    assert sorted(done) == list(range(n_d)), \
+        ("exactly-once violated", sorted(done))
+    assert np.isfinite(lat_d).all(), lat_d
+    assert len(deltas) == 1 and deltas[0][1] == -1, deltas
+
+    print(table(rows, ["run", "metric", "detail", "note"]))
+    save("BENCH_dataplane", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -37,6 +37,26 @@ annotation vocabulary covers this with a guard form:
   touches the pipe claims ownership the protocol cannot grant, and is
   itself a finding.
 
+**Per-buffer handoff (ring transport).** The double-buffered ring
+splits one slab into independently-owned buffers, each following the
+handoff discipline separately (messages name the buffer they hand
+over). The guard form grows a buffer selector:
+
+* ``# guarded-by: handoff(<conn>, buf=N)`` — this attribute is buffer
+  ``N`` of the ring; ``buf=*`` declares a whole buffer table (each
+  element owned per the protocol).
+* ``# holds-lock: handoff(<conn>, buf=N)`` — participant for buffer
+  ``N`` only; ``buf=*`` — participant for every buffer (the normal
+  annotation for ring channel methods, whose messages carry the buffer
+  index at runtime).
+
+Satisfaction is ownership-width ordered: a whole-channel
+(``handoff(conn)``) or all-buffer (``buf=*``) participant satisfies
+any per-buffer guard; a specific ``buf=N`` participant satisfies only
+buffer ``N``'s guard — it may not touch the whole table (``buf=*``)
+or another buffer. Channel-traffic verification applies to every
+form.
+
 Matching is by terminal lock NAME, not full object path — the registry
 cannot type-infer which instance ``st`` refers to. That approximation
 admits holding the wrong instance's ``cond``, but catches the real
@@ -59,12 +79,15 @@ from repro.analysis.source import ModuleSource, dotted_name
 
 SERVING_PACKAGE = "repro/serving/"
 
-# a lock token is a dotted lock-attribute name or handoff(<conn attr>)
-_LOCK_TOKEN = r"(?:handoff\([A-Za-z_][\w.]*\)|[A-Za-z_][\w.]*)"
+# a lock token is a dotted lock-attribute name or
+# handoff(<conn attr>[, buf=<N|*>])
+_LOCK_TOKEN = (r"(?:handoff\([A-Za-z_][\w.]*"
+               r"(?:\s*,\s*buf=(?:\d+|\*))?\)|[A-Za-z_][\w.]*)")
 GUARD_RE = re.compile(rf"#\s*guarded-by:\s*({_LOCK_TOKEN})")
 HOLDS_RE = re.compile(
     rf"#\s*holds-lock:\s*({_LOCK_TOKEN}(?:\s*,\s*{_LOCK_TOKEN})*)")
-_HANDOFF_RE = re.compile(r"^handoff\(\s*([A-Za-z_][\w.]*)\s*\)$")
+_HANDOFF_RE = re.compile(
+    r"^handoff\(\s*([A-Za-z_][\w.]*)\s*(?:,\s*buf=(\d+|\*)\s*)?\)$")
 
 # the pipe surface that constitutes protocol participation for a
 # holds-lock: handoff(<conn>) function
@@ -76,19 +99,66 @@ def _terminal(name: str) -> str:
     return name.rsplit(".", 1)[-1]
 
 
+def _split_locks(tokens: str) -> List[str]:
+    """Split a holds-lock token list on top-level commas only — the
+    comma inside ``handoff(conn, buf=N)`` is part of one token."""
+    out: List[str] = []
+    depth, start = 0, 0
+    for i, ch in enumerate(tokens):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(tokens[start:i])
+            start = i + 1
+    out.append(tokens[start:])
+    return [t for t in (tok.strip() for tok in out) if t]
+
+
 def _norm_lock(tok: str) -> str:
     """Canonical form of one lock token: terminal attribute name, with
-    handoff guards normalized to ``handoff(<terminal conn name>)``."""
+    handoff guards normalized to ``handoff(<terminal conn name>)`` /
+    ``handoff(<conn>, buf=<N|*>)``."""
     tok = tok.strip()
     m = _HANDOFF_RE.match(tok)
     if m:
-        return f"handoff({_terminal(m.group(1))})"
+        conn = _terminal(m.group(1))
+        if m.group(2) is not None:
+            return f"handoff({conn}, buf={m.group(2)})"
+        return f"handoff({conn})"
     return _terminal(tok)
 
 
-def _uses_channel(fn: ast.AST, chan: str) -> bool:
-    """True if `fn`'s body calls ``<...>.{chan-protocol method}`` on a
-    base whose terminal name is `chan`."""
+def _satisfies(guard: str, held: Set[str]) -> bool:
+    """Does any held lock satisfy `guard`? Exact name match, plus the
+    handoff ownership-width order: a whole-channel or all-buffer
+    (``buf=*``) participant owns every buffer in turn and satisfies any
+    per-buffer guard; a specific ``buf=N`` participant satisfies only
+    buffer N's guard — never the whole table."""
+    if guard in held:
+        return True
+    m = _HANDOFF_RE.match(guard)
+    if m is None:
+        return False
+    conn = _terminal(m.group(1))
+    if m.group(2) is None:
+        # plain-channel guard (single-slab protocol): an all-buffer
+        # ring participant qualifies; a buf=N holder does not
+        return f"handoff({conn}, buf=*)" in held
+    return (f"handoff({conn})" in held
+            or f"handoff({conn}, buf=*)" in held)
+
+
+def _uses_channel(fn: ast.AST, chan: str,
+                  methods: Optional[Dict[str, ast.AST]] = None,
+                  _seen: Optional[Set[str]] = None) -> bool:
+    """True if `fn`'s body drives the `chan` pipe: a direct
+    ``<...chan>.{protocol method}`` call, or delegation — a
+    ``self.helper(...)`` call whose same-class helper drives it
+    (transitively; the ring channel factors its raw pipe layer into
+    ``_recv_raw``-style helpers, and delegating to a participant is
+    participation)."""
     for node in ast.walk(fn):
         if (isinstance(node, ast.Call)
                 and isinstance(node.func, ast.Attribute)
@@ -96,7 +166,43 @@ def _uses_channel(fn: ast.AST, chan: str) -> bool:
             base = dotted_name(node.func.value)
             if base is not None and _terminal(base) == chan:
                 return True
+    if methods:
+        seen = _seen if _seen is not None else set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and node.func.attr in methods
+                    and node.func.attr not in seen):
+                seen.add(node.func.attr)
+                if _uses_channel(methods[node.func.attr], chan,
+                                 methods, seen):
+                    return True
     return False
+
+
+def _holds_tokens(mod: ModuleSource, fn: ast.AST) -> List[str]:
+    """holds-lock tokens for `fn`, searching every line of its
+    signature — a multi-line ``def`` carries the annotation on the
+    closing-paren line, not necessarily on ``fn.lineno``."""
+    body_start = fn.body[0].lineno if fn.body else fn.lineno + 1
+    for line in range(fn.lineno, body_start):
+        m = HOLDS_RE.search(mod.comments.get(line, ""))
+        if m:
+            return _split_locks(m.group(1))
+    return []
+
+
+def _class_methods(mod: ModuleSource,
+                   fn: ast.AST) -> Dict[str, ast.AST]:
+    """name -> def node for every method of `fn`'s enclosing class
+    (empty for module-level functions)."""
+    cls = mod.parent.get(fn)
+    if not isinstance(cls, ast.ClassDef):
+        return {}
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
 
 
 class _Registry:
@@ -184,10 +290,8 @@ def _held_locks(mod: ModuleSource, node: ast.AST) -> Set[str]:
     aliases: Dict[str, str] = {}
     for fn in fn_chain:
         aliases.update(_local_aliases(fn))
-        m = HOLDS_RE.search(mod.comments.get(fn.lineno, ""))
-        if m:
-            for lock in m.group(1).split(","):
-                held.add(_norm_lock(lock))
+        for lock in _holds_tokens(mod, fn):
+            held.add(_norm_lock(lock))
     cur: Optional[ast.AST] = mod.parent.get(node)
     while cur is not None:
         if isinstance(cur, ast.With):
@@ -233,22 +337,21 @@ class Lock01(Rule):
             if not isinstance(node,
                               (ast.FunctionDef, ast.AsyncFunctionDef)):
                 continue
-            m = HOLDS_RE.search(mod.comments.get(node.lineno, ""))
-            if not m:
-                continue
-            for tok in m.group(1).split(","):
-                hm = _HANDOFF_RE.match(tok.strip())
+            for tok in _holds_tokens(mod, node):
+                hm = _HANDOFF_RE.match(tok)
                 if hm is None:
                     continue
                 chan = _terminal(hm.group(1))
-                if not _uses_channel(node, chan):
+                if not _uses_channel(node, chan,
+                                     _class_methods(mod, node)):
                     yield self.finding(
                         mod, node,
                         f"`holds-lock: handoff({chan})` on {node.name} "
                         f"but its body never drives channel {chan} "
-                        f"(no {'/'.join(_CHANNEL_CALLS)} call) — the "
-                        f"annotation claims slab ownership the message "
-                        f"protocol cannot grant")
+                        f"(no {'/'.join(_CHANNEL_CALLS)} call, directly "
+                        f"or via a participating same-class helper) — "
+                        f"the annotation claims slab ownership the "
+                        f"message protocol cannot grant")
 
     def _check_module(self, mod: ModuleSource,
                       reg: _Registry) -> Iterable[Finding]:
@@ -279,11 +382,11 @@ class Lock01(Rule):
                 continue
             held = _held_locks(mod, node)
             if lock is not None:
-                if lock in held:
+                if _satisfies(lock, held):
                     continue
                 locks_msg = lock
             else:
-                if set(by_cls.values()) & held:
+                if any(_satisfies(lk, held) for lk in set(by_cls.values())):
                     continue
                 locks_msg = "/".join(sorted(set(by_cls.values())))
             access = "write of" if isinstance(

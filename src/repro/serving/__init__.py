@@ -1,10 +1,23 @@
 from repro.serving.cluster import LiveClusterSim, LiveRunResult  # noqa: F401
+from repro.serving.dataplane import (  # noqa: F401
+    DataplaneStats,
+    SlotOverflow,
+    decode_batch,
+    encode_batch,
+)
 from repro.serving.executor import PipelineExecutor  # noqa: F401
 from repro.serving.frontends import FRONTENDS, Frontend  # noqa: F401
-from repro.serving.ingress import AsyncIngress, IngressStats  # noqa: F401
+from repro.serving.ingress import (  # noqa: F401
+    AsyncIngress,
+    IngressStats,
+    PayloadRing,
+)
 from repro.serving.loop import LiveControlLoop, LiveLoopResult  # noqa: F401
 from repro.serving.procpool import (  # noqa: F401
     ProcessReplicaPool,
     ProcReplica,
     ReplicaDead,
+    StageWorkerError,
+    register_worker_fn,
+    resolve_worker_fn,
 )

@@ -1,0 +1,312 @@
+"""Typed zero-copy slab codec for the process-backed serving data plane.
+
+The PR 9 transport pickled every batch through the shared-memory slab:
+``pickle.dumps`` (copy 1) -> slab write (copy 2) -> ``bytes(view)``
+(copy 3) -> ``pickle.loads`` (copy 4), per direction. At tensor payload
+sizes the data plane, not the model, becomes the bottleneck stage. This
+module replaces serialization with a *typed header + raw bytes* layout
+so array payloads cross the slab with exactly one copy per direction
+and are **consumed as zero-copy numpy views** on the receiving side.
+
+Slot layout (one "slot" = one ring buffer inside the slab)::
+
+    +--------+---------------------+--------- 64-byte aligned ---------+
+    | header | record table        | raw tensor bytes ...              |
+    +--------+---------------------+-----------------------------------+
+
+    header  : magic u32 | kind u8 | count u32 | nrec u32 | data_end u64
+    record  : dtype 16s | flags u8 | ndim u8 | pad 6x | shape 8*u64
+              | offset u64 | nbytes u64
+
+Two kinds:
+
+* ``KIND_TYPED`` — every payload is a ``np.ndarray``: the record table
+  gives (dtype, shape, offset) per item and the bytes live in the slot.
+  A homogeneous batch (same dtype+shape) collapses to ONE stacked
+  record (``FLAG_STACKED``): the encoder assembles the batch directly
+  into a single ``(n, *shape)`` slab view (``np.stack(..., out=view)``,
+  the vectorized in-slab assembly path) and the decoder hands back the
+  rows as views of one block.
+* ``KIND_PICKLE`` — the fallback lane for anything that is not an
+  array (or an array the typed lane cannot express, e.g. object/
+  structured dtypes): ``pickle.dumps`` written after the header.
+  Non-standard-but-fixed-width dtypes (``ml_dtypes.bfloat16``,
+  ``float8_*``) stay on the typed lane — they are encoded by *name*
+  and resolved through :data:`_EXT_DTYPES` on decode.
+
+A batch that does not fit the slot raises :class:`SlotOverflow` (the
+pre-pickled bytes ride on the exception so the chunked-slab fallback in
+:mod:`repro.serving.procpool` never pickles twice).
+
+Decoding with ``copy=False`` returns views aliasing the slot — the
+zero-copy worker-side path; ``copy=True`` materializes owned arrays
+(the dispatcher-side path: the slot is reused for the next batch as
+soon as ownership hands back, so responses must not alias it).
+
+Every encode/decode updates a :class:`DataplaneStats`, the accounting
+``benchmarks/bench_dataplane.py`` reports as bytes-copied-per-request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import struct
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "DataplaneStats",
+    "SlotOverflow",
+    "decode_batch",
+    "encode_batch",
+    "slot_capacity",
+]
+
+MAGIC = 0x0DA7A1A7
+KIND_TYPED = 1
+KIND_PICKLE = 2
+FLAG_STACKED = 1
+
+_ALIGN = 64
+MAX_NDIM = 8
+_DTYPE_CHARS = 16
+
+_HEADER = struct.Struct("<IBIIQ")                 # magic kind count nrec end
+_RECORD = struct.Struct(f"<{_DTYPE_CHARS}sBB6x{MAX_NDIM}QQQ")
+
+
+class SlotOverflow(Exception):
+    """The batch does not fit the slot; ``data`` carries the pickled
+    bytes when the pickle lane already serialized (chunked fallback
+    reuses them instead of pickling twice)."""
+
+    def __init__(self, needed: int, capacity: int,
+                 data: Optional[bytes] = None):
+        super().__init__(f"batch needs {needed} B > slot capacity "
+                         f"{capacity} B")
+        self.needed = needed
+        self.capacity = capacity
+        self.data = data
+
+
+@dataclasses.dataclass
+class DataplaneStats:
+    """Per-channel transport accounting (one endpoint's view)."""
+
+    typed_batches: int = 0          # batches on the typed zero-copy lane
+    pickle_batches: int = 0         # batches on the pickle fallback lane
+    chunk_messages: int = 0         # oversize chunk hops through the slab
+    inline_messages: int = 0        # legacy oversize inline-pipe hops
+    bytes_copied: int = 0           # raw bytes memcpy'd into/out of slabs
+    pickle_bytes: int = 0           # bytes serialized through pickle
+    payload_bytes: int = 0          # logical tensor bytes transported
+
+    def add(self, other: "DataplaneStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _ext_dtypes() -> dict:
+    """Name -> dtype for fixed-width extension dtypes (ml_dtypes ships
+    with jax; absence just narrows the typed lane to standard dtypes)."""
+    out: dict = {}
+    try:
+        import ml_dtypes
+    except ImportError:                           # pragma: no cover
+        return out
+    for name in ("bfloat16", "float8_e4m3fn", "float8_e5m2", "float4_e2m1fn",
+                 "float8_e4m3", "float8_e3m4", "int4", "uint4"):
+        t = getattr(ml_dtypes, name, None)
+        if t is not None:
+            out[name] = np.dtype(t)
+    return out
+
+
+_EXT_DTYPES = _ext_dtypes()
+
+
+def _dtype_token(dt: np.dtype) -> Optional[bytes]:
+    """Round-trippable <= 16-char token for `dt`, or None (pickle lane).
+
+    Standard dtypes use ``dt.str`` (endianness included); extension
+    dtypes whose ``.str`` degrades to a raw void (e.g. bfloat16 ->
+    ``<V2``) are encoded by *name* and resolved via the registry."""
+    if dt.hasobject or dt.names is not None or dt.itemsize == 0:
+        return None
+    try:
+        if np.dtype(dt.str) == dt:
+            tok = dt.str
+        else:
+            raise TypeError
+    except TypeError:
+        if _EXT_DTYPES.get(dt.name) != dt:
+            return None
+        tok = dt.name
+    raw = tok.encode("ascii")
+    return raw if len(raw) <= _DTYPE_CHARS else None
+
+
+def _resolve_dtype(token: bytes) -> np.dtype:
+    tok = token.rstrip(b"\x00").decode("ascii")
+    try:
+        dt = np.dtype(tok)
+        if dt.name != tok or tok in _EXT_DTYPES:
+            # name-coded extension dtype shadowed by a builtin parse
+            dt = _EXT_DTYPES.get(tok, dt)
+        return dt
+    except TypeError:
+        return _EXT_DTYPES[tok]
+
+
+def _align(n: int) -> int:
+    return (n + _ALIGN - 1) & ~(_ALIGN - 1)
+
+
+def slot_capacity(slot: memoryview) -> int:
+    return len(slot)
+
+
+def _typed_plan(payloads: Sequence[Any]):
+    """Classify the batch for the typed lane: list of contiguous-layout
+    (dtype, shape, nbytes) specs, or None -> pickle lane."""
+    if not payloads:
+        return None
+    specs = []
+    for p in payloads:
+        if not isinstance(p, np.ndarray):
+            return None
+        tok = _dtype_token(p.dtype)
+        if tok is None or p.ndim > MAX_NDIM:
+            return None
+        specs.append((p, tok))
+    return specs
+
+
+def _slot_view(slot: memoryview, dt: np.dtype, shape, offset: int):
+    count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    return np.frombuffer(slot, dtype=dt, count=count,
+                         offset=offset).reshape(shape)
+
+
+def encode_batch(slot: memoryview, payloads: Sequence[Any],
+                 stats: Optional[DataplaneStats] = None,
+                 typed: bool = True,
+                 guard: Optional[np.ndarray] = None) -> int:
+    """Write one batch into `slot`; returns bytes used.
+
+    ``typed=False`` forces the pickle lane (the legacy-transport compat
+    mode). ``guard`` is a uint8 view over the slot's memory: any payload
+    aliasing it (a worker echoing its zero-copy input views back as
+    outputs) is copied out first, so the in-place header/data writes can
+    never corrupt bytes they are still reading. Raises
+    :class:`SlotOverflow` when the batch cannot fit.
+    """
+    cap = len(slot)
+    specs = _typed_plan(payloads) if typed else None
+    if specs is None:
+        data = pickle.dumps(payloads, protocol=pickle.HIGHEST_PROTOCOL)
+        need = _HEADER.size + len(data)
+        if need > cap:
+            raise SlotOverflow(need, cap, data=data)
+        _HEADER.pack_into(slot, 0, MAGIC, KIND_PICKLE, len(payloads), 0,
+                          need)
+        slot[_HEADER.size:need] = data
+        if stats is not None:
+            stats.pickle_batches += 1
+            stats.pickle_bytes += len(data)
+            stats.bytes_copied += len(data)
+        return need
+
+    n = len(specs)
+    first, first_tok = specs[0]
+    stacked = (n > 1 and all(
+        tok == first_tok and p.shape == first.shape for p, tok in specs))
+    nrec = 1 if stacked else n
+    data_off = _align(_HEADER.size + nrec * _RECORD.size)
+    total_payload = sum(p.nbytes for p, _ in specs)
+    need = data_off + total_payload
+    if need > cap:
+        raise SlotOverflow(need, cap)
+
+    if guard is not None:
+        payload_arrs = [p for p, _ in specs]
+        for i, p in enumerate(payload_arrs):
+            # bounds-overlap check only (never the exact-overlap
+            # solver); a false positive just costs one defensive copy
+            if p.nbytes and np.may_share_memory(p, guard):
+                payload_arrs[i] = p.copy()
+        specs = [(p, tok) for p, (_, tok) in zip(payload_arrs, specs)]
+
+    off = data_off
+    if stacked:
+        shape = (n,) + first.shape
+        _RECORD.pack_into(
+            slot, _HEADER.size, first_tok, FLAG_STACKED, len(shape),
+            *shape, *((0,) * (MAX_NDIM - len(shape))), off, total_payload)
+        view = _slot_view(slot, specs[0][0].dtype, shape, off)
+        np.stack([p for p, _ in specs], out=view)
+        off += total_payload
+    else:
+        rec_off = _HEADER.size
+        for p, tok in specs:
+            _RECORD.pack_into(
+                slot, rec_off, tok, 0, p.ndim, *p.shape,
+                *((0,) * (MAX_NDIM - p.ndim)), off, p.nbytes)
+            if p.nbytes:
+                view = _slot_view(slot, p.dtype, p.shape, off)
+                np.copyto(view, p, casting="no")
+            off += p.nbytes
+            rec_off += _RECORD.size
+    _HEADER.pack_into(slot, 0, MAGIC, KIND_TYPED, n, nrec, off)
+    if stats is not None:
+        stats.typed_batches += 1
+        stats.bytes_copied += total_payload
+        stats.payload_bytes += total_payload
+    return need
+
+
+def decode_batch(slot: memoryview, copy: bool,
+                 stats: Optional[DataplaneStats] = None) -> List[Any]:
+    """Read one batch out of `slot`.
+
+    ``copy=False`` returns arrays aliasing the slot (the worker-side
+    zero-copy path — valid only while this endpoint owns the buffer);
+    ``copy=True`` returns owned arrays (the dispatcher-side path)."""
+    magic, kind, count, nrec, end = _HEADER.unpack_from(slot, 0)
+    if magic != MAGIC:
+        raise ValueError(f"corrupt slot header (magic {magic:#x})")
+    if kind == KIND_PICKLE:
+        data = bytes(slot[_HEADER.size:end])
+        if stats is not None:
+            stats.bytes_copied += len(data)
+            stats.pickle_bytes += len(data)
+        return pickle.loads(data)
+
+    out: List[Any] = []
+    rec_off = _HEADER.size
+    for _ in range(nrec):
+        tok, flags, ndim, *rest = _RECORD.unpack_from(slot, rec_off)
+        shape = tuple(rest[:ndim])
+        off, nbytes = rest[MAX_NDIM], rest[MAX_NDIM + 1]
+        dt = _resolve_dtype(tok)
+        view = _slot_view(slot, dt, shape, off)
+        if copy:
+            view = view.copy()
+            if stats is not None:
+                stats.bytes_copied += nbytes
+        if stats is not None:
+            stats.payload_bytes += nbytes
+        if flags & FLAG_STACKED:
+            # rows: views of one block, no copy. Indexed with `...` so
+            # 0-d rows stay ndarrays (plain iteration would scalar-ify)
+            out.extend(view[i, ...] for i in range(view.shape[0]))
+        else:
+            out.append(view)
+        rec_off += _RECORD.size
+    return out

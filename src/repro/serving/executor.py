@@ -54,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import deque
 import weakref
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -69,12 +70,14 @@ from repro.faults.schedule import (
     RecoveryPolicy,
     StageFaults,
 )
+from repro.serving.dataplane import DataplaneStats
 from repro.serving.frontends import Frontend
 from repro.serving.procpool import (
     DEFAULT_SLAB_BYTES,
     ProcessReplicaPool,
     ProcReplica,
     ReplicaDead,
+    StageWorkerError,
 )
 
 
@@ -197,11 +200,24 @@ class PipelineExecutor:
       backend: ``"thread"`` (default) runs stage fns inline in the
         dispatcher threads; ``"process"`` pairs every dispatcher with a
         worker OS process (:mod:`repro.serving.procpool`) fed through a
-        shared-memory slab — same LiveQueue/batch-formation contract,
+        shared-memory ring — same LiveQueue/batch-formation contract,
         but service escapes the GIL and injected crashes SIGKILL real
-        processes. Stage fns must be fork-safe for the process backend.
+        processes. Stage fns must be fork-safe for the process backend
+        (or importable, with ``start_method="spawn"``).
       slab_bytes: per-replica shared-memory slab size for the process
-        backend (oversize batches fall back to inline pipe transport).
+        backend; split into ``ring_depth`` buffers (oversize batches
+        fall back to chunked-slab transport).
+      transport: process-backend data plane — ``"ring"`` (default) is
+        the typed zero-copy codec with a double-buffered ring
+        overlapping dispatch with compute; ``"pickle"`` is the legacy
+        PR 9 whole-batch-pickle lane kept for A/B benchmarking.
+      ring_depth: ring buffers per replica (``transport="ring"``); 2 =
+        double-buffered — the dispatcher assembles batch B into the
+        slab while the worker computes on batch A. 1 degenerates to
+        strictly synchronous dispatch.
+      start_method: multiprocessing start method for worker processes
+        (``fork`` default; ``spawn`` needs importable stage fns, see
+        :func:`repro.serving.procpool.register_worker_fn`).
 
     Join semantics: AND-join with per-request barriers, mirroring the
     simulator's ``_stage_ready``. Every stage receives exactly one
@@ -221,7 +237,10 @@ class PipelineExecutor:
                  faults: Optional[FaultSchedule] = None,
                  retry: Optional[RecoveryPolicy] = None,
                  backend: str = "thread",
-                 slab_bytes: int = DEFAULT_SLAB_BYTES):
+                 slab_bytes: int = DEFAULT_SLAB_BYTES,
+                 transport: str = "ring",
+                 ring_depth: int = 2,
+                 start_method: str = "fork"):
         if backend not in ("thread", "process"):
             raise ValueError(f"unknown executor backend {backend!r}")
         self.pipeline = pipeline
@@ -282,7 +301,10 @@ class PipelineExecutor:
                 [int(faults.seed), zlib.crc32(name.encode())])
                 if faults is not None else None)
             pool = (ProcessReplicaPool(stage_fns[stage.model_id],
-                                       slab_bytes=slab_bytes)
+                                       slab_bytes=slab_bytes,
+                                       start_method=start_method,
+                                       transport=transport,
+                                       ring_depth=ring_depth)
                     if backend == "process" else None)
             st = _Stage(name, stage_fns[stage.model_id], cfg.batch_size,
                         getattr(cfg, "policy", "fifo"),
@@ -536,130 +558,262 @@ class PipelineExecutor:
         if st.pool is not None:
             proc = st.pool.spawn()
         try:
-            self._dispatch_loop(st, t_active, proc)
+            if proc is None:
+                self._dispatch_loop(st, t_active)
+            else:
+                self._dispatch_loop_proc(st, t_active, proc)
         finally:
             if proc is not None:
                 st.pool.discard(proc)
                 proc.close()
 
-    def _dispatch_loop(self, st: _Stage, t_active: float,
-                       proc: Optional[ProcReplica]) -> None:
+    def _formation_step(self, st: _Stage, t_active: float,
+                        proc: Optional[ProcReplica], block: bool = True
+                        ) -> Tuple[str, List[_Request], List[_Request],
+                                   float]:
+        """One batch-formation attempt under ``st.cond``. Returns
+        ``(verdict, batch, shed, wait_s)``:
+
+        * ``"exit"`` — the dispatcher must wind down (stop flag, paired
+          process found dead while idle, injected kill, or a retire
+          drain — pending counters are consumed here);
+        * ``"work"`` — a batch and/or shed set formed;
+        * ``"none"`` — nothing formable right now (non-blocking mode
+          only); ``wait_s`` is the suggested re-poll delay, the same
+          bound the blocking mode would have slept.
+
+        ``block=True`` reproduces the original loop: sleep on the cond
+        until work or an exit condition appears. ``block=False`` is the
+        overlapped process path: with batches already in the ring the
+        caller must keep servicing responses, so formation may not
+        park on the condvar.
+        """
+        cond = st.cond
+        with cond:
+            while True:
+                if st.stop:
+                    return "exit", [], [], 0.0
+                if proc is not None and not proc.alive():
+                    # our paired process was crash-killed while idle
+                    # (process-backend fault injection): exit cleanly.
+                    # In-flight ring batches surface as ReplicaDead in
+                    # the caller's drain and requeue there.
+                    return "exit", [], [], 0.0
+                if st.kill_pending > 0:
+                    # injected crash: die at the scheduling point.
+                    # A clean return is invisible to the excepthook
+                    # registry — this is a simulated failure, not a
+                    # bug to surface via worker_failures
+                    st.kill_pending -= 1
+                    return "exit", [], [], 0.0
+                if st.retire_pending > 0:
+                    # drain: exit between batches, never mid-batch
+                    st.retire_pending -= 1
+                    return "exit", [], [], 0.0
+                now = self.now()
+                if now < t_active:
+                    wait = min(t_active - now, 0.1)
+                    if not block:
+                        return "none", [], [], wait
+                    cond.wait(wait)
+                    continue
+                batch, shed = st.queue.form_batch(
+                    now, st.max_batch, st.solo_latency_s)
+                if batch or shed:
+                    return "work", batch, shed, 0.0
+                nxt = st.queue.next_ready_after(now, st.max_batch)
+                wait = (0.25 if nxt is None
+                        else min(max(nxt - now, 0.0) + 1e-4, 0.25))
+                if not block:
+                    return "none", [], [], wait
+                cond.wait(wait)
+
+    def _prep_batch(self, st: _Stage, batch: List[_Request],
+                    shed: List[_Request]) -> List[_Request]:
+        """Post-formation bookkeeping shared by both backends: dedup
+        hedged twins, peel off cancelled requests, account the batch
+        (log + in-flight), and resolve cancelled/shed branches. Returns
+        the servable batch (possibly empty)."""
+        batch = self._dedup_batch(st, batch)
+        cancelled = [r for r in batch if r.cancelled]
+        batch = [r for r in batch if not r.cancelled]
+        with st.cond:
+            if batch:
+                st.batch_log.append((self.now(), len(batch)))
+                st.in_flight += len(batch)
+        for req in cancelled:       # released by a timed-out driver
+            if self._resolve_stage_once(st, req):
+                self._finish_branch(st, req)
+        for req in shed:
+            if self._resolve_stage_once(st, req):
+                self._finish_branch(st, req, shed_here=True)
+        return batch
+
+    def _complete_batch(self, st: _Stage, batch: List[_Request],
+                        t_start: float, outs: List[Any],
+                        err: Optional[BaseException],
+                        proc_dead: bool) -> bool:
+        """Service-completion tail shared by both backends: injected
+        straggle/error draws, in-flight/completed accounting, the
+        killed-replica requeue, retry routing, and the response scatter
+        (:meth:`_on_done` per request). Returns True when the dispatcher
+        must exit (its replica was killed mid-service)."""
         cond = st.cond
         spec = self._fault_specs.get(st.name)
+        if spec is not None:
+            slow = spec.slowdown_at(t_start)
+            if slow > 1.0:
+                # stretch the observed service time to `slow`x real
+                time.sleep(max(0.0,
+                               (self.now() - t_start) * (slow - 1.0)))
+            if err is None:
+                p_err = spec.error_p(t_start)
+                if p_err > 0.0:
+                    with cond:
+                        fail = bool(st.fault_rng.random() < p_err)
+                    if fail:
+                        err = InjectedFault(
+                            f"injected transient error on {st.name}")
+        with cond:
+            killed = proc_dead
+            if not killed and st.kill_pending > 0:
+                st.kill_pending -= 1
+                killed = True
+            st.in_flight -= len(batch)
+            # legacy accounting: without retry machinery a failed
+            # batch still counts completed (it delivered None)
+            if not killed and (err is None or self._retry is None):
+                st.completed += len(batch)
+        if killed:
+            # the replica died mid-service: its batch is lost and
+            # requeues immediately (no backoff — the server failed,
+            # not the work); the thread itself dies cleanly
+            now = self.now()
+            for req in batch:
+                self._retry_or_fail(st, req, now, backoff=False)
+            return True
+        if err is not None and not isinstance(err, InjectedFault):
+            import traceback
+            print(f"[executor] stage {st.name} batch failed: {err!r}")
+            traceback.print_exception(type(err), err, err.__traceback__)
+        if err is not None and self._retry is not None:
+            now = self.now()
+            for req in batch:
+                self._retry_or_fail(st, req, now, backoff=True)
+            return False
+        for req, out in zip(batch, outs):
+            self._on_done(st, req, out)
+        return False
+
+    def _dispatch_loop(self, st: _Stage, t_active: float) -> None:
+        """Thread-backend dispatcher: form, serve inline, complete —
+        strictly synchronous, one batch at a time."""
         while True:
-            with cond:
-                batch: List[_Request] = []
-                shed: List[_Request] = []
-                while True:
-                    if st.stop:
-                        return
-                    if proc is not None and not proc.alive():
-                        # our paired process was crash-killed while idle
-                        # (process-backend fault injection): exit cleanly
-                        return
-                    if st.kill_pending > 0:
-                        # injected crash: die at the scheduling point.
-                        # A clean return is invisible to the excepthook
-                        # registry — this is a simulated failure, not a
-                        # bug to surface via worker_failures
-                        st.kill_pending -= 1
-                        return
-                    if st.retire_pending > 0:
-                        # drain: exit between batches, never mid-batch
-                        st.retire_pending -= 1
-                        return
-                    now = self.now()
-                    if now < t_active:
-                        cond.wait(min(t_active - now, 0.1))
-                        continue
-                    batch, shed = st.queue.form_batch(
-                        now, st.max_batch, st.solo_latency_s)
-                    if batch or shed:
-                        break
-                    nxt = st.queue.next_ready_after(now, st.max_batch)
-                    cond.wait(0.25 if nxt is None
-                              else min(max(nxt - now, 0.0) + 1e-4, 0.25))
-            batch = self._dedup_batch(st, batch)
-            cancelled = [r for r in batch if r.cancelled]
-            batch = [r for r in batch if not r.cancelled]
-            with cond:
-                if batch:
-                    st.batch_log.append((self.now(), len(batch)))
-                    st.in_flight += len(batch)
-            for req in cancelled:       # released by a timed-out driver
-                if self._resolve_stage_once(st, req):
-                    self._finish_branch(st, req)
-            for req in shed:
-                if self._resolve_stage_once(st, req):
-                    self._finish_branch(st, req, shed_here=True)
+            verdict, batch, shed, _ = self._formation_step(
+                st, t_active, None, block=True)
+            if verdict == "exit":
+                return
+            batch = self._prep_batch(st, batch, shed)
             if not batch:
                 continue
             t_start = self.now()
             err: Optional[BaseException] = None
-            proc_dead = False
+            outs: List[Any] = []
             try:
-                if proc is None:
-                    outs = st.fn([r.payload for r in batch])
-                else:
-                    proc.busy = True
-                    try:
-                        outs = proc.run([r.payload for r in batch])
-                    finally:
-                        proc.busy = False
-            except ReplicaDead:
-                # the paired process died under the batch (injected
-                # crash): requeue below, exactly like a thread kill
-                proc_dead = True
-                outs = [None] * len(batch)
+                outs = st.fn([r.payload for r in batch])
             except Exception as e:  # noqa: BLE001 — a dead worker
                 # deadlocks the pipeline; surface the failure per-request
-                # (StageWorkerError — a child-side fn exception — lands
-                # here too: the replica survives, the batch failed)
                 err = e
                 outs = [None] * len(batch)
-            if spec is not None:
-                slow = spec.slowdown_at(t_start)
-                if slow > 1.0:
-                    # stretch the observed service time to `slow`x real
-                    time.sleep(max(0.0,
-                                   (self.now() - t_start) * (slow - 1.0)))
-                if err is None:
-                    p_err = spec.error_p(t_start)
-                    if p_err > 0.0:
-                        with cond:
-                            fail = bool(st.fault_rng.random() < p_err)
-                        if fail:
-                            err = InjectedFault(
-                                f"injected transient error on {st.name}")
-            with cond:
-                killed = proc_dead
-                if not killed and st.kill_pending > 0:
-                    st.kill_pending -= 1
-                    killed = True
-                st.in_flight -= len(batch)
-                # legacy accounting: without retry machinery a failed
-                # batch still counts completed (it delivered None)
-                if not killed and (err is None or self._retry is None):
-                    st.completed += len(batch)
-            if killed:
-                # the replica died mid-service: its batch is lost and
-                # requeues immediately (no backoff — the server failed,
-                # not the work); the thread itself dies cleanly
-                now = self.now()
-                for req in batch:
-                    self._retry_or_fail(st, req, now, backoff=False)
+            if self._complete_batch(st, batch, t_start, outs, err, False):
                 return
-            if err is not None and not isinstance(err, InjectedFault):
-                import traceback
-                print(f"[executor] stage {st.name} batch failed: {err!r}")
-                traceback.print_exc()
-            if err is not None and self._retry is not None:
-                now = self.now()
-                for req in batch:
-                    self._retry_or_fail(st, req, now, backoff=True)
+
+    def _abort_inflight(self, st: _Stage,
+                        inflight: "deque") -> None:
+        """The paired process died with batches still in the ring:
+        none of them reached :meth:`_on_done`, so every request
+        requeues immediately — the pipelined arm of the exactly-once
+        contract (a SIGKILL mid-handoff loses the slab contents, never
+        the requests)."""
+        now = self.now()
+        while inflight:
+            batch, _t = inflight.popleft()
+            with st.cond:
+                st.in_flight -= len(batch)
+            for req in batch:
+                self._retry_or_fail(st, req, now, backoff=False)
+
+    def _dispatch_loop_proc(self, st: _Stage, t_active: float,
+                            proc: ProcReplica) -> None:
+        """Process-backend dispatcher: overlapped dispatch/compute.
+
+        While the ring has free buffers, keep forming batches and
+        submitting them (the dispatcher encodes batch B directly into
+        the slab while the worker computes on batch A); whenever
+        something is in flight, service the oldest response. Formation
+        blocks on the condvar only when the ring is empty — with work
+        in flight it polls, bounded by the same wait the synchronous
+        loop would have slept, so responses are never starved.
+        ``ring_depth=1`` (or ``transport="pickle"``) degenerates to the
+        strictly synchronous schedule through this same loop."""
+        inflight: deque = deque()      # (batch, t_submit) FIFO
+        exiting = False
+        while True:
+            wait_s = 0.25
+            while not exiting and proc.free_slots > 0:
+                verdict, batch, shed, wait_s = self._formation_step(
+                    st, t_active, proc, block=not inflight)
+                if verdict == "exit":
+                    exiting = True
+                    break
+                if verdict == "none":
+                    break
+                batch = self._prep_batch(st, batch, shed)
+                if not batch:
+                    continue
+                t_start = self.now()
+                try:
+                    proc.submit([r.payload for r in batch])
+                except ReplicaDead:
+                    self._complete_batch(st, batch, t_start,
+                                         [None] * len(batch), None, True)
+                    self._abort_inflight(st, inflight)
+                    return
+                proc.busy = True
+                inflight.append((batch, t_start))
+            if not inflight:
+                if exiting:
+                    return
                 continue
-            for req, out in zip(batch, outs):
-                self._on_done(st, req, out)
+            # with free ring slots left, poll so newly-ready queue work
+            # can overlap the in-flight compute; ring-full (or draining
+            # to exit) blocks until the worker responds
+            timeout = (min(wait_s, 0.05)
+                       if not exiting and proc.free_slots > 0 else None)
+            err: Optional[BaseException] = None
+            try:
+                outs = proc.collect(timeout=timeout)
+            except ReplicaDead:
+                batch, t_start = inflight.popleft()
+                self._complete_batch(st, batch, t_start,
+                                     [None] * len(batch), None, True)
+                self._abort_inflight(st, inflight)
+                return
+            except StageWorkerError as e:
+                # the stage fn raised inside the worker: the replica
+                # survives, the batch failed
+                err = e
+                outs = None
+            if err is None and outs is None:
+                continue                # poll timeout: try forming again
+            batch, t_start = inflight.popleft()
+            if not inflight:
+                proc.busy = False
+            if err is not None:
+                outs = [None] * len(batch)
+            if self._complete_batch(st, batch, t_start, outs, err, False):
+                self._abort_inflight(st, inflight)
+                return
 
     # -- request routing ---------------------------------------------------
     def _coin(self, p: float) -> bool:
@@ -915,7 +1069,8 @@ class PipelineExecutor:
     def serve_trace(self, arrivals: np.ndarray, payload_fn,
                     time_scale: float = 1.0,
                     timeout_s: float = 300.0,
-                    slo_s: Optional[float] = None) -> np.ndarray:
+                    slo_s: Optional[float] = None,
+                    prebuild: bool = True) -> np.ndarray:
         """Replay `arrivals` (seconds, scaled by `time_scale`) against the
         running pipeline; returns per-query latency (unscaled seconds).
 
@@ -935,10 +1090,18 @@ class PipelineExecutor:
         (:meth:`release_starved`). ``slo_s`` stamps per-request
         deadlines (scaled), which the edf/slo-drop queue policies
         consume; shed requests report ``inf``.
+
+        ``prebuild=False`` calls ``payload_fn(i)`` at injection time
+        instead of materializing all n payloads up front — for large
+        tensor payloads pair it with a reusable buffer pool
+        (:class:`~repro.serving.ingress.PayloadRing`) so a million-query
+        trace does not hold a million payloads; the fn must then be O(1)
+        or injection lag suffers.
         """
         arrivals = np.asarray(arrivals, dtype=np.float64) * time_scale
         n = int(arrivals.size)
-        payloads = [payload_fn(i) for i in range(n)]
+        payloads = ([payload_fn(i) for i in range(n)] if prebuild
+                    else None)
         self.start_run()
         reqs: List[_Request] = []
         lags = np.zeros(n, dtype=np.float64)
@@ -951,7 +1114,9 @@ class PipelineExecutor:
                 time.sleep(dt)
             deadline = (t_arr + slo_s * time_scale if slo_s is not None
                         else float("inf"))
-            req = _Request(i, t_arr, payloads[i], deadline)
+            req = _Request(i, t_arr,
+                           payloads[i] if prebuild else payload_fn(i),
+                           deadline)
             reqs.append(req)
             self.inject(req)
             lags[i] = self.now() - t_arr
@@ -996,6 +1161,17 @@ class PipelineExecutor:
             with st.cond:
                 sizes = [b for _, b in st.batch_log]
             out[s] = float(np.mean(sizes)) if sizes else 0.0
+        return out
+
+    def dataplane_stats(self) -> Dict[str, DataplaneStats]:
+        """Per-stage transport accounting (process backend; parent-side
+        view over the pool lifetime, retired replicas included). Empty
+        for the thread backend. The bench derives bytes-copied-per-
+        request and lane occupancy from this."""
+        out: Dict[str, DataplaneStats] = {}
+        for s, st in self._stages.items():
+            if st.pool is not None:
+                out[s] = st.pool.stats()
         return out
 
     # -- shutdown ----------------------------------------------------------

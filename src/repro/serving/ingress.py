@@ -29,7 +29,44 @@ import numpy as np
 
 from repro.serving.executor import PipelineExecutor, _Request
 
-__all__ = ["AsyncIngress", "IngressStats"]
+__all__ = ["AsyncIngress", "IngressStats", "PayloadRing"]
+
+
+class PayloadRing:
+    """Reusable pre-registered payload buffers for trace injection.
+
+    A million-query tensor trace cannot materialize a million payloads
+    up front; building a fresh array per arrival puts the allocator on
+    the injection hot path instead. This ring pre-builds a small pool
+    of payload buffers ONCE and hands them out round-robin — an O(1)
+    ``payload_fn`` for ``serve_trace(..., prebuild=False)`` on either
+    injector. The same buffer objects recur across requests, which is
+    exactly what the zero-copy data plane wants: the dispatcher encodes
+    them straight into the slab, so no per-request payload allocation
+    happens anywhere on the injection path.
+
+    The ring must be deep enough that a buffer is not rewritten by the
+    caller while an earlier request still references it; with read-only
+    replay traces (the common case) any depth >= 1 is safe because the
+    serving stack never mutates request payloads.
+    """
+
+    def __init__(self, slots: List[Any]):
+        if not slots:
+            raise ValueError("PayloadRing needs at least one slot")
+        self._slots = slots
+
+    @classmethod
+    def filled(cls, build_fn: Callable[[int], Any],
+               slots: int = 8) -> "PayloadRing":
+        """Pre-build `slots` payloads with ``build_fn(slot_index)``."""
+        return cls([build_fn(i) for i in range(int(slots))])
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __call__(self, i: int) -> Any:
+        return self._slots[i % len(self._slots)]
 
 
 @dataclasses.dataclass
@@ -83,16 +120,20 @@ class AsyncIngress:
                     time_scale: float = 1.0,
                     timeout_s: float = 300.0,
                     slo_s: Optional[float] = None,
+                    prebuild: bool = True,
                     ) -> Tuple[np.ndarray, IngressStats]:
         """Drop-in for :meth:`PipelineExecutor.serve_trace`, returning
         ``(latencies, IngressStats)``. Semantics match the serial
         injector (nominal-arrival stamps, release-on-timeout, starved-
         stage fast release, worker-failure surfacing) — only the
-        injection engine differs."""
+        injection engine differs. ``prebuild=False`` calls
+        ``payload_fn(i)`` at injection time — pair with a
+        :class:`PayloadRing` so the fn stays O(1)."""
         ex = self.executor
         arrivals = np.asarray(arrivals, dtype=np.float64) * time_scale
         n = int(arrivals.size)
-        payloads = [payload_fn(i) for i in range(n)]
+        payloads = ([payload_fn(i) for i in range(n)] if prebuild
+                    else payload_fn)
         deadlines = (arrivals + slo_s * time_scale if slo_s is not None
                      else np.full(n, np.inf))
         reqs: List[Optional[_Request]] = [None] * n
@@ -113,7 +154,7 @@ class AsyncIngress:
             for r in reqs])
         return lat, stats
 
-    async def _drive(self, arrivals: np.ndarray, payloads: List[Any],
+    async def _drive(self, arrivals: np.ndarray, payloads: Any,
                      deadlines: np.ndarray,
                      reqs: List[Optional[_Request]],
                      lags: np.ndarray) -> None:
@@ -126,6 +167,10 @@ class AsyncIngress:
         # every client sleeps toward absolute event-loop deadlines
         off = loop.time() - ex.now()
         k = min(self.clients, n)
+        # prebuild=True hands a list (index it); prebuild=False hands
+        # the payload_fn itself (call it at injection time)
+        get = (payloads.__getitem__ if isinstance(payloads, list)
+               else payloads)
 
         async def client(c: int) -> None:
             for i in range(c, n, k):
@@ -135,7 +180,7 @@ class AsyncIngress:
                     if delay <= 0.0:
                         break
                     await asyncio.sleep(delay)
-                req = _Request(i, float(arrivals[i]), payloads[i],
+                req = _Request(i, float(arrivals[i]), get(i),
                                float(deadlines[i]))
                 reqs[i] = req
                 ex.inject(req)

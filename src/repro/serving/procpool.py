@@ -5,41 +5,90 @@ exactly where it was — dispatcher *threads* inside
 :class:`~repro.serving.executor.PipelineExecutor` holding the per-stage
 ``LiveQueue`` under its condition variable — but with
 ``backend="process"`` each dispatcher is paired with a
-:class:`ProcReplica`: a forked worker process that executes the stage
-fn, fed through a shared-memory request slab plus a control pipe. The
+:class:`ProcReplica`: a worker process that executes the stage fn, fed
+through a shared-memory **ring** plus a control pipe. The
 ``PipelineExecutor`` / ``LiveControlLoop`` / ``ClosedLoopTuner`` and the
 PR 8 fault machinery are unchanged by construction: the queue contract,
 retry/hedging, and the AND-join all live parent-side, and an injected
 crash SIGKILLs a real OS process (the paired dispatcher observes the
-death and requeues the in-flight batch, exactly like the thread
+death and requeues every in-flight batch, exactly like the thread
 backend's ``kill_pending`` path).
 
-Transport protocol (one slab + one pipe per replica, strictly
-request/response so slab ownership alternates — the ``handoff``
-discipline LOCK01 checks):
+Transport (the zero-copy data plane, ISSUE 10)
+----------------------------------------------
 
-* parent pickles ``("run", payloads)`` into the slab and sends
-  ``("slab", nbytes)`` over the pipe; messages larger than the slab fall
-  back to an inline ``("inline", bytes)`` pipe message;
-* the child replies ``("ok", outs)`` / ``("err", repr)`` the same way;
-* the parent waits on ``[pipe, process.sentinel]`` simultaneously, so a
-  SIGKILL mid-batch surfaces as :class:`ReplicaDead` immediately rather
-  than hanging the dispatcher.
+The slab is split into ``ring_depth`` equal buffers (default 2 —
+double-buffered). Each buffer independently follows the ``handoff``
+ownership discipline LOCK01 checks: ownership of buffer *i* alternates
+between the two endpoints via the pipe messages that name it — whoever
+just received a message for buffer *i* owns it until it sends the next
+message naming it. With two buffers the dispatcher assembles the next
+batch into buffer B **while the worker computes on buffer A** — the
+overlapped dispatch/compute path driven by
+``PipelineExecutor._dispatch_loop_proc``.
 
-The fork start method is required: stage fns are closures over model
-state (not picklable), and fork inherits them for free. Fns that hold
-accelerator handles should be constructed fork-safe (e.g. init JAX
-lazily inside the fn); the benches use numpy/sleep LUT fns.
+Message vocabulary (pipe payloads are tiny metadata tuples; tensor
+bytes only ever travel through the slab)::
+
+    parent -> child   ("run", buf)          batch encoded in buffer buf
+                      ("chunk", tag, buf, nbytes, last)   oversize lane
+                      ("ack", buf)          chunk flow control
+                      ("quit",)
+    child -> parent   ("ready",)            spawn handshake
+                      ("ok", buf)           response encoded in-place
+                      ("err", buf, repr)    stage fn raised; buf returns
+                      ("chunk"/"ack", ...)  oversize lane, symmetric
+
+* ``transport="ring"`` (default): batches are encoded with the typed
+  zero-copy codec (:mod:`repro.serving.dataplane`) — array payloads are
+  written as raw bytes directly into the slab, the worker computes on
+  zero-copy views and writes the response *in place* into the same
+  buffer. Non-array payloads ride the in-slab pickle fallback lane. A
+  batch larger than one buffer falls back to **chunked-slab** transport
+  (pickle bytes streamed through the buffer in capacity-sized hops with
+  ``ack`` flow control) — in BOTH directions, requests and responses
+  alike.
+* ``transport="pickle"``: the PR 9 legacy lane, kept for A/B
+  benchmarking — whole-batch pickle through a single-buffer slab, with
+  the old inline-pipe fallback for oversize messages.
+
+Because the parent may pipeline ``run`` messages while the child is
+mid-chunk (and vice versa), both endpoints keep a pending-message
+deque: a message that is not the one currently awaited is queued in
+arrival order, never dropped.
+
+Spawn-safe entrypoint
+---------------------
+
+``fork`` remains the default start method (stage fns are typically
+closures over model state, inherited for free), but the worker
+entrypoint :func:`_worker_main` is module-level and the fn argument may
+be an importable reference — ``"module:qualname"``, or a name
+registered via :func:`register_worker_fn` — so
+``ProcessReplicaPool(..., start_method="spawn")`` works on platforms
+without fork. With spawn, a plain module-level callable is converted to
+its import spec automatically; closures must go through the registry.
 """
 
 from __future__ import annotations
 
+import importlib
 import multiprocessing as mp
 import pickle
 import threading
+from collections import deque
 from multiprocessing import connection as mp_conn
 from multiprocessing import shared_memory
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.serving.dataplane import (
+    DataplaneStats,
+    SlotOverflow,
+    decode_batch,
+    encode_batch,
+)
 
 __all__ = [
     "DEFAULT_SLAB_BYTES",
@@ -47,9 +96,12 @@ __all__ = [
     "ProcessReplicaPool",
     "ReplicaDead",
     "StageWorkerError",
+    "register_worker_fn",
+    "resolve_worker_fn",
 ]
 
-DEFAULT_SLAB_BYTES = 1 << 20
+DEFAULT_SLAB_BYTES = 1 << 22
+TRANSPORTS = ("ring", "pickle")
 
 # Serializes SharedMemory creation + fork across dispatcher threads. A
 # fork taken while a sibling spawn holds the multiprocessing resource
@@ -69,33 +121,119 @@ class StageWorkerError(Exception):
     child-side repr. The replica itself is still healthy."""
 
 
-class _SlabChannel:
-    """One endpoint of the shared-memory request slab + its pipe.
+# -- picklable fn registry (spawn-safe entrypoint) ---------------------------
 
-    Slab ownership is never locked — it alternates between the two
-    processes via the pipe protocol: whoever just received a pipe
-    message owns the slab until it sends the next one. LOCK01 enforces
-    this as the ``handoff`` discipline: the buffer may only be touched
-    from functions annotated as protocol participants.
+_WORKER_FNS: Dict[str, Callable] = {}
+
+
+def register_worker_fn(name: str, fn: Callable) -> Callable:
+    """Register `fn` under `name` for :class:`ProcReplica`/pool
+    construction by reference. For ``start_method="spawn"`` the fn must
+    be importable (module-level) so the child can resolve it; closures
+    are accepted but only work under fork."""
+    _WORKER_FNS[name] = fn
+    return fn
+
+
+def resolve_worker_fn(ref: Union[str, Callable]) -> Callable:
+    """Resolve a worker-fn reference: a callable passes through; a
+    registered name looks up :func:`register_worker_fn`; a
+    ``"module:qualname"`` spec imports."""
+    if callable(ref):
+        return ref
+    if ref in _WORKER_FNS:
+        return _WORKER_FNS[ref]
+    if ":" in ref:
+        mod_name, qual = ref.split(":", 1)
+        obj = importlib.import_module(mod_name)
+        for part in qual.split("."):
+            obj = getattr(obj, part)
+        if not callable(obj):
+            raise TypeError(f"worker fn spec {ref!r} is not callable")
+        return obj
+    raise KeyError(f"unknown worker fn reference {ref!r}")
+
+
+def _import_spec(fn: Callable) -> Optional[str]:
+    """``module:qualname`` for a module-level callable, else None."""
+    mod = getattr(fn, "__module__", None)
+    qual = getattr(fn, "__qualname__", None)
+    if not mod or not qual or "<" in qual:
+        return None
+    spec = f"{mod}:{qual}"
+    try:
+        if resolve_worker_fn(spec) is fn:
+            return spec
+    except Exception:  # noqa: BLE001 — unimportable => no spec
+        pass
+    return None
+
+
+def _fn_ref_for_ctx(fn: Union[str, Callable], ctx) -> Union[str, Callable]:
+    """What to hand the child process: under fork, the callable itself
+    (inherited); under spawn, prefer an importable spec — a registered
+    name is translated so the child need not share our registry."""
+    start = ctx.get_start_method() if hasattr(ctx, "get_start_method") \
+        else "fork"
+    resolved = resolve_worker_fn(fn)
+    if start == "fork":
+        return resolved
+    spec = _import_spec(resolved)
+    if spec is not None:
+        return spec
+    # last resort: the callable must pickle (Process.start raises
+    # loudly otherwise — better than silently serving the wrong fn)
+    return resolved
+
+
+def _scale_payloads(payloads: Sequence, scale=1) -> List:
+    """Module-level demo stage fn (importable: spawn tests/benches)."""
+    return [p * scale for p in payloads]
+
+
+# -- the ring channel ---------------------------------------------------------
+
+
+class _RingChannel:
+    """One endpoint of the shared-memory ring + its pipe.
+
+    Buffer ownership is never locked — it alternates between the two
+    processes via the pipe protocol, per buffer: whoever just received
+    a message naming buffer *i* owns it until it sends the next message
+    naming it. LOCK01 enforces this as the ``handoff`` discipline with
+    per-buffer guards: the buffers may only be touched from functions
+    annotated as protocol participants.
     """
 
-    def __init__(self, shm: shared_memory.SharedMemory, conn) -> None:
+    def __init__(self, shm: shared_memory.SharedMemory, conn,
+                 depth: int = 2, transport: str = "ring") -> None:
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}")
+        if depth < 1:
+            raise ValueError("ring depth must be >= 1")
         self._conn = conn
-        self._buf = shm.buf            # guarded-by: handoff(_conn)
+        self.transport = transport
+        self.depth = depth
+        per = len(shm.buf) // depth
+        if per < 64:
+            # even the chunk lane (raw byte windows) needs some room
+            raise ValueError(
+                f"slab of {len(shm.buf)} B too small for depth {depth}")
+        self._bufs = [shm.buf[i * per:(i + 1) * per]   # guarded-by: handoff(_conn, buf=*)
+                      for i in range(depth)]
+        # uint8 aliases of the buffers, for overlap (self-alias) checks
+        self._guards = [np.frombuffer(b, dtype=np.uint8)  # guarded-by: handoff(_conn, buf=*)
+                        for b in self._bufs]
+        self._pend: deque = deque()    # out-of-turn messages, FIFO
+        self.stats = DataplaneStats()
 
-    def send(self, obj) -> None:       # holds-lock: handoff(_conn)
-        data = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-        if len(data) <= len(self._buf):
-            self._buf[: len(data)] = data
-            self._conn.send(("slab", len(data)))
-        else:                          # oversize: inline pipe fallback
-            self._conn.send(("inline", data))
-
-    def recv(self, sentinel=None, timeout=None):  # holds-lock: handoff(_conn)
-        """Receive one message; with ``sentinel`` (a process sentinel
-        fd), raise :class:`ReplicaDead` if the peer dies first. A
-        ``timeout`` (spawn handshake only) bounds the wait: expiry also
-        raises ReplicaDead — an alive-but-silent child is wedged."""
+    # -- raw pipe layer ----------------------------------------------------
+    def _recv_raw(self, sentinel=None, timeout=None):  # holds-lock: handoff(_conn, buf=*)
+        """One pipe message; with `sentinel` (a process sentinel fd),
+        raise :class:`ReplicaDead` if the peer dies first. `timeout`
+        returns None on expiry when `sentinel` is None, and raises
+        ReplicaDead with a sentinel (an alive-but-silent peer past the
+        bound is wedged — the spawn-handshake case)."""
         if sentinel is not None:
             while True:
                 ready = mp_conn.wait([self._conn, sentinel],
@@ -109,86 +247,258 @@ class _SlabChannel:
                 # to flush before declaring the replica dead
                 if not self._conn.poll(0.05):
                     raise ReplicaDead("worker process died mid-batch")
+        elif timeout is not None:
+            if not self._conn.poll(timeout):
+                return None
         try:
-            tag, val = self._conn.recv()
+            return self._conn.recv()
         except (EOFError, OSError) as exc:
             raise ReplicaDead("worker pipe closed") from exc
-        if tag == "slab":
-            return pickle.loads(bytes(self._buf[:val]))
-        return pickle.loads(val)
 
-    def close(self) -> None:           # holds-lock: handoff(_conn)
-        """Relinquish this endpoint: drop the slab view, close the pipe."""
-        self._buf = None
+    def _recv_match(self, want: Tuple[str, ...], sentinel=None,
+                    timeout=None):  # holds-lock: handoff(_conn, buf=*)
+        """Next message whose tag is in `want`; anything else (a
+        pipelined ``run``/``ok`` arriving while we await an ``ack``) is
+        queued in arrival order. Returns None on poll timeout."""
+        for i, msg in enumerate(self._pend):
+            if msg[0] in want:
+                del self._pend[i]
+                return msg
+        while True:
+            msg = self._recv_raw(sentinel=sentinel, timeout=timeout)
+            if msg is None:
+                return None
+            if msg[0] in want:
+                return msg
+            self._pend.append(msg)
+
+    def poll(self, timeout: float, want: Tuple[str, ...]) -> bool:  # holds-lock: handoff(_conn, buf=*)
+        """True if a `want` message is available (pending or arriving
+        within `timeout`); non-matching arrivals are queued."""
+        if any(m[0] in want for m in self._pend):
+            return True
+        while True:
+            if not self._conn.poll(timeout):
+                return False
+            try:
+                msg = self._conn.recv()
+            except (EOFError, OSError) as exc:
+                raise ReplicaDead("worker pipe closed") from exc
+            if msg[0] in want:
+                self._pend.appendleft(msg)
+                return True
+            self._pend.append(msg)
+            timeout = 0.0
+
+    def send_ctl(self, *msg) -> None:  # holds-lock: handoff(_conn, buf=*)
+        self._conn.send(msg)
+
+    # -- batch transport ---------------------------------------------------
+    def send_batch(self, tag: str, buf: int, payloads: Sequence,
+                   sentinel=None) -> None:  # holds-lock: handoff(_conn, buf=*)
+        """Encode one batch into buffer `buf` (which this endpoint must
+        own) and hand ownership to the peer. Oversize batches fall back
+        to the chunked-slab lane (``transport="ring"``) or the legacy
+        inline pipe (``transport="pickle"``) — both directions use the
+        same fallback, requests and responses alike."""
+        slot = self._bufs[buf]
+        try:
+            encode_batch(slot, payloads, self.stats,
+                         typed=self.transport == "ring",
+                         guard=self._guards[buf])
+            self._conn.send((tag, buf))
+            return
+        except SlotOverflow as ov:
+            data = ov.data if ov.data is not None else pickle.dumps(
+                payloads, protocol=pickle.HIGHEST_PROTOCOL)
+        if self.transport == "pickle":
+            self.stats.inline_messages += 1
+            self.stats.pickle_bytes += len(data)
+            self._conn.send(("inline", tag, buf, data))
+            return
+        self.stats.pickle_bytes += len(data)
+        cap = len(slot)
+        n = len(data)
+        sent = 0
+        while True:
+            k = min(cap, n - sent)
+            slot[:k] = data[sent:sent + k]
+            self.stats.bytes_copied += k
+            self.stats.chunk_messages += 1
+            sent += k
+            last = sent >= n
+            self._conn.send(("chunk", tag, buf, k, last))
+            if last:
+                return
+            # flow control: the peer owns the buffer until it copied
+            # the chunk out and acked it back
+            if self._recv_match(("ack",), sentinel=sentinel) is None:
+                raise ReplicaDead("peer vanished mid-chunk")
+
+    def _recv_chunked(self, first, sentinel=None):  # holds-lock: handoff(_conn, buf=*)
+        """Reassemble a chunked message starting at `first`; returns
+        ``(tag, buf, obj)``. Ownership of `buf` lands on this endpoint
+        once the last chunk is copied out."""
+        _, tag, buf, k, last = first
+        slot = self._bufs[buf]
+        parts = bytearray()
+        while True:
+            parts += slot[:k]
+            self.stats.bytes_copied += k
+            self.stats.chunk_messages += 1
+            if last:
+                break
+            self._conn.send(("ack", buf))
+            nxt = self._recv_match(("chunk",), sentinel=sentinel)
+            _, tag, buf, k, last = nxt
+        self.stats.pickle_bytes += len(parts)
+        return tag, buf, pickle.loads(bytes(parts))
+
+    def recv_batch(self, want: Tuple[str, ...], sentinel=None,
+                   timeout=None, copy: bool = False):  # holds-lock: handoff(_conn, buf=*)
+        """Receive the next batch-level message whose (reassembled) tag
+        is in `want`. Returns ``(tag, buf, obj)`` — `buf`/`obj` are None
+        for control messages — or None on poll timeout. ``copy``
+        selects owned arrays (dispatcher side) vs zero-copy slot views
+        (worker side)."""
+        tags = tuple(want) + ("chunk", "inline")
+        msg = self._recv_match(tags, sentinel=sentinel, timeout=timeout)
+        if msg is None:
+            return None
+        if msg[0] == "chunk":
+            return self._recv_chunked(msg, sentinel=sentinel)
+        if msg[0] == "inline":
+            _, tag, buf, data = msg
+            self.stats.inline_messages += 1
+            self.stats.pickle_bytes += len(data)
+            return tag, buf, pickle.loads(data)
+        tag = msg[0]
+        if tag in ("run", "ok"):
+            buf = msg[1]
+            return tag, buf, decode_batch(self._bufs[buf], copy=copy,
+                                          stats=self.stats)
+        if tag == "err":
+            return tag, msg[1], msg[2]
+        return tag, None, None          # ready / quit
+
+    def close(self) -> None:           # holds-lock: handoff(_conn, buf=*)
+        """Relinquish this endpoint: drop the slab views, close the
+        pipe. Views must be released before the SharedMemory segment
+        can close (exported-pointer guard)."""
+        self._guards = []
+        self._bufs = []
+        self._pend.clear()
         try:
             self._conn.close()
         except OSError:
             pass
 
 
-def _child_main(shm_name: str, conn, peer_conn,
-                fn: Callable[[Sequence], Sequence]) -> None:
-    """Worker-process entrypoint: serve run requests until quit/EOF."""
-    try:
-        peer_conn.close()              # drop the inherited parent end
-    except OSError:
-        pass
+# -- worker-process entrypoint ------------------------------------------------
+
+
+def _worker_main(shm_name: str, conn, peer_conn,
+                 fn_ref: Union[str, Callable], transport: str = "ring",
+                 depth: int = 2) -> None:
+    """Module-level worker entrypoint (spawn-safe): serve run requests
+    until quit/EOF. `fn_ref` is a callable (fork) or an importable
+    reference resolved here (spawn)."""
+    if peer_conn is not None:
+        try:
+            peer_conn.close()          # drop the inherited parent end
+        except OSError:
+            pass
+    fn = resolve_worker_fn(fn_ref)
+    # NOTE on the resource tracker: this attach re-registers the
+    # segment, but both fork and spawn children share the PARENT's
+    # tracker process (spawn passes tracker_fd through preparation
+    # data), where the re-register is a set-dup no-op — the parent's
+    # unlink in ProcReplica.close() stays the single cleanup point.
+    # Do NOT unregister here: that would strip the shared cache entry.
     shm = shared_memory.SharedMemory(name=shm_name)
-    chan = _SlabChannel(shm, conn)
+    chan = _RingChannel(shm, conn, depth=depth, transport=transport)
     try:
         # fork-safety handshake: forking a thread-heavy parent (e.g.
         # once JAX has warmed its internal pools) can deadlock the child
         # on a lock some unforked thread held. Announcing readiness
-        # exercises the allocator + pickle + pipe path first thing, so a
-        # wedged child is detected at spawn instead of eating a batch
+        # exercises the allocator + pipe path first thing, so a wedged
+        # child is detected at spawn instead of eating a batch
         try:
-            chan.send(("ready", None))
+            chan.send_ctl("ready")
         except (OSError, ReplicaDead):
             return
         while True:
             try:
-                msg = chan.recv()
+                msg = chan.recv_batch(("run", "quit"), copy=False)
             except ReplicaDead:        # parent closed its end
                 break
-            if msg[0] == "quit":
+            tag, buf, payloads = msg
+            if tag == "quit":
                 break
             try:
-                outs = list(fn(msg[1]))
+                outs = list(fn(payloads))
             except BaseException as exc:  # noqa: BLE001 — report, keep serving
                 try:
-                    chan.send(("err", f"{type(exc).__name__}: {exc}"))
+                    chan.send_ctl("err", buf,
+                                  f"{type(exc).__name__}: {exc}")
                 except (OSError, ReplicaDead):
                     break
                 continue
             try:
-                chan.send(("ok", outs))
+                # respond in place: the response overwrites the request
+                # buffer we own; outputs aliasing it (echoed input
+                # views) are copy-guarded inside the encoder
+                chan.send_batch("ok", buf, outs)
             except (OSError, ReplicaDead):
                 break
     finally:
         chan.close()
-        shm.close()
+        try:
+            shm.close()
+        except BufferError:            # a stage fn leaked a slot view
+            pass
 
 
 class ProcReplica:
-    """One worker process + its slab. Owned by a single dispatcher
-    thread (the only caller of :meth:`run`/:meth:`close`); :meth:`kill`
-    may be called concurrently by the fault driver / control plane."""
+    """One worker process + its shared-memory ring. Owned by a single
+    dispatcher thread (the only caller of :meth:`submit`/:meth:`collect`
+    /:meth:`run`/:meth:`close`); :meth:`kill` may be called concurrently
+    by the fault driver / control plane.
 
-    def __init__(self, fn: Callable[[Sequence], Sequence],
+    The ring pipelines up to ``ring_depth`` batches: :meth:`submit`
+    encodes into a free buffer and hands it to the worker without
+    waiting; :meth:`collect` blocks for (or polls) the oldest
+    outstanding response. :meth:`run` is the synchronous convenience
+    wrapper (submit + collect) used by tests and profiling.
+    """
+
+    def __init__(self, fn: Union[str, Callable],
                  slab_bytes: int = DEFAULT_SLAB_BYTES, ctx=None,
-                 ready_timeout_s: float = 2.0) -> None:
+                 ready_timeout_s: float = 5.0,
+                 transport: str = "ring",
+                 ring_depth: int = 2) -> None:
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}")
         ctx = ctx or mp.get_context("fork")
+        depth = 1 if transport == "pickle" else max(1, int(ring_depth))
+        self.transport = transport
+        self.depth = depth
+        fn_ref = _fn_ref_for_ctx(fn, ctx)
         with _SPAWN_LOCK:
             self._shm = shared_memory.SharedMemory(create=True,
                                                    size=int(slab_bytes))
             parent_end, child_end = ctx.Pipe()
-            self._chan = _SlabChannel(self._shm, parent_end)
+            self._chan = _RingChannel(self._shm, parent_end, depth=depth,
+                                      transport=transport)
             self._proc = ctx.Process(
-                target=_child_main,
-                args=(self._shm.name, child_end, parent_end, fn),
+                target=_worker_main,
+                args=(self._shm.name, child_end, parent_end, fn_ref,
+                      transport, depth),
                 daemon=True)
             self._proc.start()
         child_end.close()              # child's end lives in the child now
+        self._free: deque = deque(range(depth))
+        self._inflight: deque = deque()
         self._close_once = threading.Lock()
         self._closed = False           # guarded-by: _close_once
         self.busy = False              # crash-victim hint; racy by design
@@ -196,9 +506,10 @@ class ProcReplica:
         # that never says ready is wedged (fork of a multithreaded
         # parent) — reap it here so it can never join the fleet
         try:
-            msg = self._chan.recv(sentinel=self._proc.sentinel,
-                                  timeout=ready_timeout_s)
-            ok = msg[0] == "ready"
+            msg = self._chan.recv_batch(
+                ("ready",), sentinel=self._proc.sentinel,
+                timeout=ready_timeout_s)
+            ok = msg is not None and msg[0] == "ready"
         except ReplicaDead:
             ok = False
         if not ok:
@@ -212,23 +523,71 @@ class ProcReplica:
     def alive(self) -> bool:
         return self._proc.is_alive()
 
-    def run(self, payloads: Sequence) -> List:
-        """Execute one batch in the worker process.
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    def transport_stats(self) -> DataplaneStats:
+        return self._chan.stats
+
+    def submit(self, payloads: Sequence) -> int:
+        """Encode one batch into a free ring buffer and hand it to the
+        worker without waiting for the result. Returns the buffer index.
+        Raises :class:`ReplicaDead` if the process is gone and
+        ``RuntimeError`` if no buffer is free (caller must
+        :meth:`collect` first)."""
+        if not self._free:
+            raise RuntimeError("ring full: collect before submitting")
+        if not self._proc.is_alive():
+            raise ReplicaDead("worker process already dead")
+        buf = self._free[0]
+        try:
+            self._chan.send_batch("run", buf, list(payloads),
+                                  sentinel=self._proc.sentinel)
+        except (BrokenPipeError, OSError) as exc:
+            raise ReplicaDead("worker pipe broken on send") from exc
+        self._free.popleft()
+        self._inflight.append(buf)
+        return buf
+
+    def collect(self, timeout: Optional[float] = None) -> Optional[List]:
+        """Receive the oldest outstanding response. Returns the output
+        list, or None if `timeout` elapses with no response yet.
 
         Raises :class:`ReplicaDead` if the process dies under the batch
         (the caller requeues, mirroring the thread backend's killed
         path) and :class:`StageWorkerError` for child-side fn errors.
         """
-        if not self._proc.is_alive():
-            raise ReplicaDead("worker process already dead")
-        try:
-            self._chan.send(("run", list(payloads)))
-        except (BrokenPipeError, OSError) as exc:
-            raise ReplicaDead("worker pipe broken on send") from exc
-        msg = self._chan.recv(sentinel=self._proc.sentinel)
-        if msg[0] == "ok":
-            return msg[1]
-        raise StageWorkerError(msg[1])
+        if not self._inflight:
+            raise RuntimeError("nothing in flight to collect")
+        if timeout is not None:
+            if not self._chan.poll(timeout, ("ok", "err", "chunk",
+                                             "inline")):
+                if not self._proc.is_alive():
+                    raise ReplicaDead("worker process died mid-batch")
+                return None
+        msg = self._chan.recv_batch(("ok", "err"),
+                                    sentinel=self._proc.sentinel,
+                                    copy=True)
+        tag, buf, obj = msg
+        expected = self._inflight.popleft()
+        self._free.append(buf if buf is not None else expected)
+        if tag == "ok":
+            return obj
+        raise StageWorkerError(obj)
+
+    def run(self, payloads: Sequence) -> List:
+        """Execute one batch synchronously (submit + collect)."""
+        while self._inflight:          # drain any pipelined stragglers
+            self.collect()
+        self.submit(payloads)
+        out = self.collect()
+        assert out is not None
+        return out
 
     def kill(self) -> None:
         """SIGKILL the worker — the injected-crash path. A real OS
@@ -238,15 +597,16 @@ class ProcReplica:
             self._proc.kill()
 
     def close(self) -> None:
-        """Graceful retire: ask the child to quit, reap it, free the slab.
-        Idempotent and safe to race (dispatcher exit vs pool shutdown)."""
+        """Graceful retire: ask the child to quit, reap it, free the
+        slab. Idempotent and safe to race (dispatcher exit vs pool
+        shutdown)."""
         with self._close_once:
             if self._closed:
                 return
             self._closed = True
         try:
             if self._proc.is_alive():
-                self._chan.send(("quit", None))
+                self._chan.send_ctl("quit")
         except (BrokenPipeError, OSError):
             pass
         self._proc.join(timeout=2.0)
@@ -269,23 +629,33 @@ class ProcessReplicaPool:
     processes at scheduled instants (busy victims first, so crash
     injection exercises the in-flight requeue path whenever possible,
     matching the thread backend's semantics where only a dispatching
-    worker could consume a kill).
+    worker could consume a kill). Transport stats of retired members
+    accumulate so :meth:`stats` reports the whole pool lifetime.
     """
 
-    def __init__(self, fn: Callable[[Sequence], Sequence],
+    def __init__(self, fn: Union[str, Callable],
                  slab_bytes: int = DEFAULT_SLAB_BYTES,
-                 start_method: str = "fork") -> None:
+                 start_method: str = "fork",
+                 transport: str = "ring",
+                 ring_depth: int = 2) -> None:
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}")
         self._fn = fn
         self._slab_bytes = int(slab_bytes)
         self._ctx = mp.get_context(start_method)
+        self._transport = transport
+        self._ring_depth = int(ring_depth)
         self._plock = threading.Lock()
         self._members: List[ProcReplica] = []   # guarded-by: _plock
+        self._retired_stats = DataplaneStats()  # guarded-by: _plock
 
     def spawn(self) -> ProcReplica:
         last: Optional[ReplicaDead] = None
         for _ in range(3):             # a wedged fork is retryable
             try:
-                rep = ProcReplica(self._fn, self._slab_bytes, self._ctx)
+                rep = ProcReplica(self._fn, self._slab_bytes, self._ctx,
+                                  transport=self._transport,
+                                  ring_depth=self._ring_depth)
             except ReplicaDead as exc:
                 last = exc
                 continue
@@ -296,10 +666,12 @@ class ProcessReplicaPool:
             f"could not spawn a healthy worker process: {last}")
 
     def discard(self, rep: ProcReplica) -> None:
-        """Forget a member (dispatcher exit path); caller closes it."""
+        """Forget a member (dispatcher exit path); caller closes it.
+        Its transport stats roll into the pool accumulator."""
         with self._plock:
             if rep in self._members:
                 self._members.remove(rep)
+                self._retired_stats.add(rep.transport_stats())
 
     def kill(self, n: int) -> int:
         """SIGKILL up to ``n`` live members, busy ones first. Returns
@@ -319,8 +691,19 @@ class ProcessReplicaPool:
         with self._plock:
             return [m.pid for m in self._members if m.alive()]
 
+    def stats(self) -> DataplaneStats:
+        """Pool-lifetime transport accounting: live members + retired."""
+        out = DataplaneStats()
+        with self._plock:
+            out.add(self._retired_stats)
+            for m in self._members:
+                out.add(m.transport_stats())
+        return out
+
     def close_all(self) -> None:
         with self._plock:
             members, self._members = self._members, []
+            for m in members:
+                self._retired_stats.add(m.transport_stats())
         for m in members:
             m.close()

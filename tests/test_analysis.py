@@ -355,6 +355,98 @@ def test_lock01_handoff_participants_are_clean(tmp_path):
     assert _findings(tmp_path, "LOCK01") == []
 
 
+# the double-buffered ring discipline: one slab, per-buffer ownership —
+# each `buf=N` alternates independently via the messages that name it
+_RING_FIXTURE = """
+    import pickle
+
+
+    class Ring:
+        def __init__(self, shm, conn):
+            self._conn = conn
+            half = len(shm.buf) // 2
+            self._buf0 = shm.buf[:half]      # guarded-by: handoff(_conn, buf=0)
+            self._buf1 = shm.buf[half:]      # guarded-by: handoff(_conn, buf=1)
+
+        def send0(self, obj):                # holds-lock: handoff(_conn, buf=0)
+            data = pickle.dumps(obj)
+            self._buf0[:len(data)] = data
+            self._conn.send(("run", 0))
+
+        def recv_any(self):                  # holds-lock: handoff(_conn, buf=*)
+            tag, buf = self._conn.recv()
+            slot = self._buf0 if buf == 0 else self._buf1
+            return pickle.loads(bytes(slot))
+"""
+
+
+def test_lock01_ring_per_buffer_guards(tmp_path):
+    # a buf=0 participant touching buffer 1 owns the wrong buffer —
+    # the per-buffer analogue of a non-participant slab access
+    _write_tree(tmp_path, {"repro/serving/ring.py": _RING_FIXTURE + """
+
+    def cross(ring: Ring):                   # holds-lock: handoff(_conn, buf=0)
+        ring._conn.send(("peek", 0))
+        return ring._buf1[0]
+    """})
+    found = _findings(tmp_path, "LOCK01")
+    assert len(found) == 1
+    assert found[0].scope == "cross"
+    assert "handoff(_conn, buf=1)" in found[0].message
+
+
+def test_lock01_ring_wildcard_holder_spans_buffers(tmp_path):
+    # buf=* (and plain handoff(conn)) participants own every buffer in
+    # turn, so the whole fixture — including recv_any — is clean
+    _write_tree(tmp_path, {"repro/serving/ring.py": _RING_FIXTURE})
+    assert _findings(tmp_path, "LOCK01") == []
+
+
+def test_lock01_ring_specific_buf_cannot_claim_table(tmp_path):
+    # the full buffer table is guarded buf=*: a specific-buffer holder
+    # may not walk it (it owns exactly one element's protocol)
+    _write_tree(tmp_path, {"repro/serving/ring.py": """
+        class Table:
+            def __init__(self, shm, conn):
+                self._conn = conn
+                self._bufs = [shm.buf]       # guarded-by: handoff(_conn, buf=*)
+
+            def sweep(self):                 # holds-lock: handoff(_conn, buf=0)
+                self._conn.send(("sweep",))
+                return [b[0] for b in self._bufs]
+
+            def fill(self, i, data):         # holds-lock: handoff(_conn)
+                self._bufs[i][:len(data)] = data
+                self._conn.send(("fill", i))
+    """})
+    found = _findings(tmp_path, "LOCK01")
+    assert [f.scope for f in found] == ["Table.sweep"]
+    assert "handoff(_conn, buf=*)" in found[0].message
+
+
+def test_lock01_ring_annotation_requires_channel_traffic(tmp_path):
+    # participation verification covers the buf= forms too, and accepts
+    # delegation through a same-class helper that drives the pipe
+    _write_tree(tmp_path, {"repro/serving/ring.py": _RING_FIXTURE + """
+
+    class Freeloader(Ring):
+        def steal(self):                     # holds-lock: handoff(_conn, buf=*)
+            return self._buf0[0]
+
+    class Delegator(Ring):
+        def _pump(self):
+            return self._conn.recv()
+
+        def via_helper(self):                # holds-lock: handoff(_conn, buf=*)
+            self._pump()
+            return self._buf1[0]
+    """})
+    found = _findings(tmp_path, "LOCK01")
+    assert len(found) == 1
+    assert found[0].scope == "Freeloader.steal"
+    assert "cannot grant" in found[0].message
+
+
 # -- EVT01 -------------------------------------------------------------------
 
 def test_evt01_flags_unsorted_constructor_and_fold(tmp_path):

@@ -1,0 +1,313 @@
+"""Zero-copy data plane correctness: typed slab codec + ring transport.
+
+Time-budgeted dataplane smoke lane (tier-1): the typed header codec
+(:mod:`repro.serving.dataplane`) must be *bit-identical* to the pickle
+path over a property menu of dtypes and shapes (f32/bf16/int8, 0-d,
+non-contiguous, Fortran-order), worker-side mutation of a zero-copy
+view must never corrupt a buffer the dispatcher owns, oversize batches
+must chunk through the slab in BOTH directions, and a SIGKILL with two
+batches pipelined in the ring must still yield exactly-once delivery.
+Codec tests run in-process (no workers); ring tests use one tiny
+replica each so the file fits the CI budget.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, StageConfig, linear_pipeline
+from repro.serving.dataplane import (
+    DataplaneStats,
+    SlotOverflow,
+    decode_batch,
+    encode_batch,
+)
+from repro.serving.executor import PipelineExecutor
+from repro.serving.procpool import ProcReplica, ReplicaDead
+
+try:
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:                       # pragma: no cover
+    _BF16 = None
+
+
+def _slot(nbytes=1 << 16):
+    return memoryview(bytearray(nbytes))
+
+
+def _rand(rng, dtype, shape):
+    dt = np.dtype(dtype)
+    if dt.kind == "b":
+        return rng.integers(0, 2, size=shape).astype(dt)
+    if dt.kind in "iu":
+        info = np.iinfo(dt if dt.kind != "V" else np.int8)
+        return rng.integers(info.min, info.max, size=shape,
+                            endpoint=True).astype(dt)
+    # float-ish (incl. bf16 via cast from f32)
+    return rng.standard_normal(size=shape).astype(dt)
+
+
+def _dtype_menu():
+    menu = [np.float32, np.float64, np.float16, np.int8, np.uint8,
+            np.int32, np.int64, np.bool_]
+    if _BF16 is not None:
+        menu.append(_BF16)
+    return menu
+
+
+_SHAPES = [(), (1,), (7,), (3, 4), (2, 3, 5), (4, 1, 2, 2)]
+
+
+def _assert_bit_identical(out, src):
+    """The codec's contract: value, dtype, shape — and the raw bytes —
+    all survive the trip exactly."""
+    assert isinstance(out, np.ndarray)
+    assert out.dtype == src.dtype
+    assert out.shape == src.shape
+    assert out.tobytes() == np.ascontiguousarray(src).tobytes()
+
+
+# -- the codec, in-process ---------------------------------------------------
+
+
+def test_codec_roundtrip_property_menu():
+    """Random dtype/shape round-trips are bit-identical to the pickle
+    path (which is bit-exact by construction) for every combination."""
+    rng = np.random.default_rng(0)
+    slot = _slot()
+    for dtype in _dtype_menu():
+        for shape in _SHAPES:
+            batch = [_rand(rng, dtype, shape) for _ in range(3)]
+            encode_batch(slot, batch)
+            out = decode_batch(slot, copy=True)
+            assert len(out) == len(batch)
+            for o, s in zip(out, batch):
+                _assert_bit_identical(o, s)
+            # cross-check against the pickle lane on the same batch
+            encode_batch(slot, batch, typed=False)
+            ref = decode_batch(slot, copy=True)
+            for o, r in zip(out, ref):
+                assert o.tobytes() == r.tobytes() and o.dtype == r.dtype
+
+
+def test_codec_noncontiguous_and_fortran_inputs():
+    rng = np.random.default_rng(1)
+    slot = _slot()
+    base = rng.standard_normal((8, 8)).astype(np.float32)
+    strided = base[::2, 1::3]                # non-contiguous view
+    fortran = np.asfortranarray(base)
+    rev = base[::-1]                         # negative stride
+    batch = [strided, fortran, rev]
+    encode_batch(slot, batch)
+    out = decode_batch(slot, copy=True)
+    for o, s in zip(out, batch):
+        _assert_bit_identical(o, s)
+
+
+def test_codec_homogeneous_batch_stacks_one_record():
+    """Same dtype+shape collapses to one stacked record assembled
+    in-slab; rows come back exact."""
+    rng = np.random.default_rng(2)
+    slot = _slot()
+    batch = [rng.standard_normal((4, 4)).astype(np.float32)
+             for _ in range(8)]
+    stats = DataplaneStats()
+    encode_batch(slot, batch, stats)
+    assert stats.typed_batches == 1
+    out = decode_batch(slot, copy=True)
+    for o, s in zip(out, batch):
+        _assert_bit_identical(o, s)
+
+
+def test_codec_mixed_payloads_take_pickle_lane():
+    slot = _slot()
+    stats = DataplaneStats()
+    batch = [np.arange(3), "a string", {"k": 1}, 7]
+    encode_batch(slot, batch, stats)
+    assert stats.pickle_batches == 1 and stats.typed_batches == 0
+    out = decode_batch(slot, copy=True)
+    assert np.array_equal(out[0], np.arange(3))
+    assert out[1:] == ["a string", {"k": 1}, 7]
+    # object-dtype arrays cannot ride the typed lane either
+    encode_batch(slot, [np.array([None, "x"], dtype=object)], stats)
+    assert stats.pickle_batches == 2
+
+
+def test_codec_scalars_preserve_exact_types():
+    """np.generic scalars and python numbers go through pickle so their
+    exact types survive (the typed lane would array-ify them)."""
+    slot = _slot()
+    batch = [np.float32(1.5), 3, 2.5]
+    encode_batch(slot, batch)
+    out = decode_batch(slot, copy=True)
+    assert type(out[0]) is np.float32 and type(out[1]) is int
+    assert out == batch
+
+
+def test_codec_overflow_carries_prepickled_bytes():
+    slot = _slot(256)
+    big = np.ones(10_000)
+    with pytest.raises(SlotOverflow) as ei:
+        encode_batch(slot, ["not-an-array", big])
+    assert ei.value.data is not None          # pickle lane: bytes ride along
+    with pytest.raises(SlotOverflow) as ei2:
+        encode_batch(slot, [big])
+    assert ei2.value.data is None             # typed lane: nothing serialized
+
+
+def test_codec_zero_copy_views_alias_slot_and_copies_do_not():
+    slot = _slot()
+    src = np.arange(16, dtype=np.int64)
+    encode_batch(slot, [src])
+    view = decode_batch(slot, copy=False)[0]
+    owned = decode_batch(slot, copy=True)[0]
+    guard = np.frombuffer(slot, dtype=np.uint8)
+    assert np.may_share_memory(view, guard)
+    assert not np.may_share_memory(owned, guard)
+    view[0] = -1                              # worker-side mutation...
+    assert owned[0] == 0                      # ...never reaches owned copies
+
+
+def test_codec_mutation_cannot_cross_buffers():
+    """Double-buffer isolation: mutating zero-copy views of buffer 0
+    (the worker computing in place) leaves buffer 1 — still owned by
+    the dispatcher — bit-exact."""
+    slab = bytearray(1 << 16)
+    half = len(slab) // 2
+    b0, b1 = memoryview(slab)[:half], memoryview(slab)[half:]
+    batch0 = [np.full((8, 8), 1.0, np.float32)]
+    batch1 = [np.full((8, 8), 2.0, np.float32)]
+    encode_batch(b0, batch0)
+    encode_batch(b1, batch1)
+    before = bytes(b1)
+    for v in decode_batch(b0, copy=False):
+        v[:] = -7.0                            # worker scribbles over buf 0
+    encode_batch(b0, [np.ones((31, 31), np.float32)])  # and re-encodes it
+    assert bytes(b1) == before
+    _assert_bit_identical(decode_batch(b1, copy=True)[0], batch1[0])
+
+
+def test_codec_inplace_response_with_aliasing_outputs():
+    """A worker echoing its zero-copy input views back as outputs must
+    not corrupt them while the response encodes over the same buffer —
+    the encoder's alias guard copies first."""
+    slot = _slot()
+    guard = np.frombuffer(slot, dtype=np.uint8)
+    srcs = [np.arange(100, dtype=np.float32) * (i + 1) for i in range(3)]
+    encode_batch(slot, srcs)
+    views = decode_batch(slot, copy=False)
+    outs = [v[::-1] for v in views]           # aliasing, non-contiguous
+    expect = [np.ascontiguousarray(o) for o in outs]
+    encode_batch(slot, outs, guard=guard)     # response in place
+    back = decode_batch(slot, copy=True)
+    for b, e in zip(back, expect):
+        _assert_bit_identical(b, e)
+
+
+# -- through the ring --------------------------------------------------------
+
+
+def _echo(payloads):
+    return list(payloads)
+
+
+def test_ring_matches_pickle_transport_bitwise():
+    """The end-to-end property: random payload menus round-tripped
+    through a ring replica and a legacy pickle replica come back
+    identical (and bit-identical to the source)."""
+    rng = np.random.default_rng(3)
+    ring = ProcReplica(_echo, transport="ring")
+    legacy = ProcReplica(_echo, transport="pickle")
+    try:
+        for dtype in (np.float32, np.int8) + (
+                (_BF16,) if _BF16 is not None else ()):
+            for shape in [(), (5,), (3, 4)]:
+                batch = [_rand(rng, dtype, shape) for _ in range(4)]
+                a = ring.run(batch)
+                b = legacy.run(batch)
+                for x, y, s in zip(a, b, batch):
+                    _assert_bit_identical(x, s)
+                    assert x.tobytes() == y.tobytes() and x.dtype == y.dtype
+    finally:
+        ring.close()
+        legacy.close()
+
+
+def test_ring_boundary_sizes_chunk_both_directions():
+    """±1 around the buffer capacity: requests and responses larger
+    than one ring buffer stream through the chunked-slab fallback —
+    both directions, exact to the byte."""
+    slab = 4096                                # two 2 KB buffers
+    rep = ProcReplica(_echo, slab_bytes=slab)
+    try:
+        for n in (1024, 2047, 2048, 2049, 8192):
+            src = np.arange(n, dtype=np.uint8)
+            out = rep.run([src])[0]
+            _assert_bit_identical(out, src)
+        st = rep.transport_stats()
+        assert st.chunk_messages > 0           # oversize went through slab
+        assert st.inline_messages == 0         # never the legacy pipe lane
+    finally:
+        rep.close()
+
+    # response-only oversize: tiny request, huge reply
+    rep2 = ProcReplica(lambda ps: [np.zeros(5000, np.uint8)],
+                       slab_bytes=slab)
+    try:
+        out = rep2.run([np.uint8(1)])[0]
+        assert out.shape == (5000,) and not out.any()
+        assert rep2.transport_stats().chunk_messages > 0
+    finally:
+        rep2.close()
+
+
+def test_ring_sigkill_with_two_batches_in_flight():
+    """Exactly-once under mid-handoff death: SIGKILL a replica with the
+    ring full (one batch computing, one encoded and handed over) —
+    every request must surface as ReplicaDead for requeue, none lost."""
+    rep = ProcReplica(lambda ps: (time.sleep(5.0), list(ps))[1])
+    try:
+        rep.submit([np.float32(1.0)])
+        rep.submit([np.float32(2.0)])
+        assert rep.free_slots == 0 and rep.inflight == 2
+        time.sleep(0.1)
+        rep.kill()
+        for _ in range(2):
+            with pytest.raises(ReplicaDead):
+                rep.collect(timeout=5.0)
+    finally:
+        rep.close()
+
+
+def test_executor_sigkill_mid_handoff_exactly_once():
+    """The full pipelined stack: a crash scheduled mid-run kills a real
+    process under a double-buffered ring; the in-flight batches requeue
+    on the survivor and every request finishes exactly once."""
+    import threading
+    from repro.faults import FaultSchedule, crash
+
+    names = ["m0"]
+    pipe = linear_pipeline("t", names, {n: ["cpu-1"] for n in names})
+    cfg = PipelineConfig({"s0_m0": StageConfig("cpu-1", 2, 2)})
+    fs = FaultSchedule([crash("s0_m0", 0.08)], seed=0)
+
+    def fn(payloads):
+        time.sleep(0.05)
+        return [p * 2 for p in payloads]
+
+    ex = PipelineExecutor(pipe, cfg, {"m0": fn}, faults=fs,
+                          backend="process", ring_depth=2)
+    done, lock = [], threading.Lock()
+
+    def on_done(r):
+        with lock:
+            done.append(r.rid)
+
+    ex.on_request_done = on_done
+    lat = ex.serve_trace(np.linspace(0.0, 0.4, 16),
+                         lambda i: np.float32(i), timeout_s=20.0)
+    assert np.isfinite(lat).all(), lat
+    assert sorted(done) == list(range(16))     # exactly once, all of them
+    assert ex.shutdown()

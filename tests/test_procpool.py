@@ -21,7 +21,14 @@ from repro.core.pipeline import PipelineConfig, StageConfig, linear_pipeline
 from repro.faults import FaultSchedule, RecoveryPolicy, crash, transient
 from repro.serving.executor import PipelineExecutor
 from repro.serving.ingress import AsyncIngress
-from repro.serving.procpool import ProcReplica, ReplicaDead, StageWorkerError
+from repro.serving.procpool import (
+    ProcessReplicaPool,
+    ProcReplica,
+    ReplicaDead,
+    StageWorkerError,
+    register_worker_fn,
+    resolve_worker_fn,
+)
 
 
 def _sleep_fn(per_batch_s, scale=1):
@@ -29,6 +36,11 @@ def _sleep_fn(per_batch_s, scale=1):
         time.sleep(per_batch_s)
         return [p * scale for p in payloads]
     return fn
+
+
+def _triple(payloads):
+    """Module-level (importable) stage fn for the spawn tests."""
+    return [p * 3 for p in payloads]
 
 
 def _linear(n_stages=1, batch=4, replicas=1, **kw):
@@ -64,13 +76,16 @@ def test_proc_replica_runs_batches_in_child_process():
     rep.close()                              # idempotent
 
 
-def test_proc_replica_oversize_batch_falls_back_inline():
-    """A batch bigger than the slab ships inline over the pipe — slower,
-    never wrong."""
+def test_proc_replica_oversize_batch_falls_back_chunked():
+    """A batch bigger than a ring buffer streams through the slab in
+    chunks — slower, never wrong — and the stats prove the chunk lane
+    (not the legacy inline pipe) carried it."""
     rep = ProcReplica(lambda ps: [p.sum() for p in ps], slab_bytes=256)
     try:
-        big = np.ones(50_000)                # ~400 KB >> 256 B slab
+        big = np.ones(50_000)                # ~400 KB >> 128 B buffers
         assert rep.run([big, 2 * big]) == [50_000.0, 100_000.0]
+        st = rep.transport_stats()
+        assert st.chunk_messages > 0 and st.inline_messages == 0
     finally:
         rep.close()
 
@@ -223,6 +238,40 @@ def test_exactly_once_under_errors_and_hedging_on_processes():
     finished = sorted(r for r, l in zip(range(40), lat) if np.isfinite(l))
     assert set(finished) <= set(done_rids)
     assert ex.shutdown()
+
+
+# -- spawn-safe entrypoint + worker-fn registry ------------------------------
+
+
+def test_proc_replica_forced_spawn_start_method():
+    """The worker entrypoint is a module-level function and the stage fn
+    travels as an importable reference, so a ``spawn`` context (fresh
+    interpreter, nothing inherited) serves identically to ``fork``."""
+    pool = ProcessReplicaPool(_triple, start_method="spawn")
+    try:
+        rep = pool.spawn()
+        assert rep.alive() and rep.pid != os.getpid()
+        out = rep.run([np.arange(4, dtype=np.int32)])
+        assert np.array_equal(out[0], np.arange(4, dtype=np.int32) * 3)
+        assert rep.run([np.float32(2.0)])[0] == np.float32(6.0)
+    finally:
+        pool.close_all()
+
+
+def test_worker_fn_registry_resolves_by_name_under_spawn():
+    """A registered name (for fns that are not importable from the
+    child, e.g. closures built at runtime) resolves on both ends."""
+    register_worker_fn("procpool-test-triple", _triple)
+    assert resolve_worker_fn("procpool-test-triple") is _triple
+    assert resolve_worker_fn(
+        "tests.test_procpool:_triple" if __name__.startswith("tests.")
+        else f"{__name__}:_triple") is _triple
+    pool = ProcessReplicaPool("procpool-test-triple", start_method="spawn")
+    try:
+        rep = pool.spawn()
+        assert rep.run([np.int64(7)])[0] == 21
+    finally:
+        pool.close_all()
 
 
 def test_async_ingress_on_process_backend():
